@@ -1,0 +1,30 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (µs) of a jit'd callable (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def fit_scaling_exponent(ns, ts) -> float:
+    """Least-squares slope of log(t) vs log(n)."""
+    ln, lt = np.log(np.asarray(ns, float)), np.log(np.asarray(ts, float))
+    return float(np.polyfit(ln, lt, 1)[0])
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

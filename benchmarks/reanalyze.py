@@ -1,0 +1,56 @@
+"""Re-run the HLO cost analysis over saved .hlo.gz artifacts and update the
+.json roofline fields in place — lets hlo_cost.py evolve without recompiling
+80 cells.
+
+    PYTHONPATH=src python -m benchmarks.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import hlo_cost
+from repro.launch import mesh as mesh_lib
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def main():
+    n = 0
+    for hf in sorted(glob.glob(os.path.join(ART, "*.hlo.gz"))):
+        jf = hf[:-7] + ".json"
+        if not os.path.exists(jf):
+            continue
+        with gzip.open(hf, "rt") as f:
+            a = hlo_cost.analyze_text(f.read())
+        with open(jf) as f:
+            rec = json.load(f)
+        bmin, bup = a["bytes_min"], a["bytes"]
+        rec["flops_per_device"] = a["flops"]
+        rec["bytes_lower_per_device"] = bmin
+        rec["bytes_upper_per_device"] = bup
+        rec["bytes_accessed_per_device"] = (max(bmin, 1.0) *
+                                            max(bup, 1.0)) ** 0.5
+        rec["collectives"] = a["collectives"]
+        rec["collective_bytes_per_device"] = a["collective_bytes"]
+        rec["hlo_cost_warnings"] = a["warnings"]
+        rl = {
+            "compute_s": a["flops"] / mesh_lib.PEAK_FLOPS_BF16,
+            "memory_s": rec["bytes_accessed_per_device"] / mesh_lib.HBM_BW,
+            "collective_s": a["collective_bytes"] / mesh_lib.ICI_BW,
+        }
+        rec["roofline"] = rl
+        rec["dominant"] = max(rl, key=rl.get)
+        if rec.get("flops_per_device"):
+            rec["useful_flops_ratio"] = (rec["model_flops_per_chip"] /
+                                         rec["flops_per_device"])
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"[reanalyze] updated {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh 16x16] [--tag TAG]
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from benchmarks.roofline import load_records
+
+
+def gib(b):
+    return b / 2 ** 30
+
+
+def fmt(rec):
+    rl = rec["roofline"]
+    dom = {"compute_s": "compute", "memory_s": "memory",
+           "collective_s": "collective"}[rec["dominant"]]
+    mem = rec["memory"].get("total_bytes", 0)
+    return (f"| {rec['arch']} | {rec['shape']} | {rec['attention_kind']} "
+            f"| {rec['flops_per_device']:.2e} | {gib(mem):.1f} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | {dom} "
+            f"| {rec.get('useful_flops_ratio', 0):.2f} "
+            f"| {rec['compile_s']:.0f}s |")
+
+
+HEADER = ("| arch | shape | attn | FLOPs/dev | mem GiB/dev | compute s "
+          "| memory s | collective s | dominant | useful | compile |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    for mesh in ([args.mesh] if args.mesh else ["16x16", "2x16x16"]):
+        recs = load_records(mesh=mesh, tag=args.tag)
+        if not recs:
+            continue
+        print(f"\n### Mesh {mesh} ({'512' if mesh == '2x16x16' else '256'} "
+              f"chips){' — ' + args.tag if args.tag else ''}\n")
+        print(HEADER)
+        order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                 "long_500k": 3}
+        for r in sorted(recs, key=lambda r: (r["arch"],
+                                             order.get(r["shape"], 9))):
+            print(fmt(r))
+
+    # collective breakdown for the most collective-bound cells
+    recs = load_records(mesh="16x16", tag=args.tag)
+    coll_bound = [r for r in recs if r["dominant"] == "collective_s"]
+    if coll_bound:
+        print("\n### Most collective-bound cells (16x16)\n")
+        for r in sorted(coll_bound,
+                        key=lambda r: -r["roofline"]["collective_s"])[:6]:
+            kinds = {k: v for k, v in r["collectives"].items()
+                     if v.get("count")}
+            print(f"* **{r['arch']} × {r['shape']}** "
+                  f"({r['roofline']['collective_s']:.3f}s): " +
+                  ", ".join(f"{k}: {v['bytes']/2**20:.0f} MiB × "
+                            f"{v['count']:.0f}" for k, v in kinds.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Roofline report: reads the dry-run artifacts and prints the per-cell
+three-term roofline table (compute / memory / collective seconds, dominant
+term, MODEL_FLOPS ratio). See EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(mesh: str = None, tag: str = ""):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if "skipped" in r:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = True):
+    recs = load_records(mesh="16x16")
+    if not recs:
+        emit("roofline/no_artifacts", 0.0, "run repro.launch.dryrun first")
+        return {}
+    hdr = ("arch,shape,compute_s,memory_s,collective_s,dominant,"
+           "useful_flops_ratio,mem_GiB")
+    print(f"# roofline(16x16): {hdr}")
+    worst = None
+    for r in recs:
+        rl = r["roofline"]
+        dom = r["dominant"]
+        frac = rl["compute_s"] / max(max(rl.values()), 1e-12)
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        emit(name, 0.0,
+             f"compute={rl['compute_s']:.4f}s memory={rl['memory_s']:.4f}s "
+             f"coll={rl['collective_s']:.4f}s dom={dom} "
+             f"roofline_frac={frac:.3f} "
+             f"useful={r.get('useful_flops_ratio', 0):.2f} "
+             f"mem={r['memory'].get('total_bytes', 0) / 2**30:.1f}GiB")
+        if worst is None or frac < worst[1]:
+            worst = (name, frac)
+    if worst:
+        emit("roofline/worst_cell", 0.0,
+             f"{worst[0]} roofline_frac={worst[1]:.3f}")
+    return {"n_cells": len(recs)}
+
+
+if __name__ == "__main__":
+    run()

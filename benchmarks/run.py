@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``python -m benchmarks.run [--full]`` prints ``name,us_per_call,derived`` CSV
+lines per benchmark (quick mode by default; --full uses paper-scale settings
+where the container allows).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (figure1_spectrum, figure3_pretrain, roofline,
+                            table1_complexity, table2_downstream,
+                            table3_efficiency)
+    benches = {
+        "table1_complexity": table1_complexity.run,
+        "figure1_spectrum": figure1_spectrum.run,
+        "figure3_pretrain": figure3_pretrain.run,
+        "table2_downstream": table2_downstream.run,
+        "table3_efficiency": table3_efficiency.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    failures = 0
+    for name, fn in benches.items():
+        print(f"# === {name} ===")
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 1: per-layer complexity vs sequence length.
+
+Measures one attention layer's forward wall-time across n with d fixed, for
+standard softmax attention (O(n²)) vs exact Linformer (O(n·k)), and fits the
+scaling exponent — the paper's central complexity claim, verified empirically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, fit_scaling_exponent, time_fn
+from repro.core import exact_linformer_attention
+from repro.models.attention import standard_attention
+
+
+def run(quick: bool = True):
+    Dh, H, B, k = 32, 4, 1, 64
+    ns = [256, 512, 1024, 2048] if quick else [256, 512, 1024, 2048, 4096,
+                                               8192]
+    t_std, t_lin = [], []
+    for n in ns:
+        ks = jax.random.split(jax.random.PRNGKey(n), 4)
+        q = jax.random.normal(ks[0], (B, n, H, Dh))
+        kk = jax.random.normal(ks[1], (B, n, H, Dh))
+        v = jax.random.normal(ks[2], (B, n, H, Dh))
+        E = jax.random.normal(ks[3], (n, k)) * (1.0 / jnp.sqrt(k))
+
+        std = jax.jit(functools.partial(standard_attention, causal=False))
+        lin = jax.jit(exact_linformer_attention)
+        us_std = time_fn(std, q, kk, v)
+        us_lin = time_fn(lin, q, kk, v, E, E)
+        t_std.append(us_std)
+        t_lin.append(us_lin)
+        emit(f"table1/standard/n{n}", us_std)
+        emit(f"table1/linformer_k{k}/n{n}", us_lin,
+             f"speedup={us_std / us_lin:.2f}x")
+    e_std = fit_scaling_exponent(ns, t_std)
+    e_lin = fit_scaling_exponent(ns, t_lin)
+    emit("table1/scaling_exponent/standard", 0.0, f"exponent={e_std:.2f}")
+    emit("table1/scaling_exponent/linformer", 0.0, f"exponent={e_lin:.2f}")
+    return {"exp_std": e_std, "exp_lin": e_lin}
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,121 @@
+"""Paper Table 2: downstream task performance after finetuning.
+
+Pretrains small encoders (standard vs Linformer variants) with MLM, then
+finetunes a classifier head on a synthetic sentiment-like task (class is
+determined by which token-frequency band dominates the sequence — requires
+aggregating context, not trivial unigram peeking at one position).
+Reproduced claim: Linformer finetunes on par with the standard Transformer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.figure3_pretrain import _cfg, _pretrain
+from repro.configs.base import OptimizerConfig
+from repro.data import DataState, SyntheticCorpus, make_mlm_batch
+from repro.data.pipeline import VOCAB_RESERVED
+from repro.models import layers as L
+from repro.models import model as M
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+
+def make_classification_batch(rng: np.random.Generator, vocab: int,
+                              batch: int, seq: int):
+    """Label 1 sequences draw 70% of tokens from the upper vocab half."""
+    labels = rng.integers(0, 2, batch)
+    half = (vocab - VOCAB_RESERVED) // 2
+    toks = np.zeros((batch, seq), np.int64)
+    for i, y in enumerate(labels):
+        hi_frac = 0.7 if y else 0.3
+        hi = rng.random(seq) < hi_frac
+        toks[i] = np.where(
+            hi, rng.integers(VOCAB_RESERVED + half, vocab, seq),
+            rng.integers(VOCAB_RESERVED, VOCAB_RESERVED + half, seq))
+    return jnp.asarray(toks, jnp.int32), jnp.asarray(labels, jnp.int32)
+
+
+def _encode(params, cfg, tokens):
+    """Mean-pooled final hidden state (classification feature)."""
+    batch = {"tokens": tokens}
+    from repro.models.transformer import embed_inputs, apply_block
+    x = embed_inputs(params, cfg, batch, None)
+
+    def body(carry, lp):
+        h, a = carry
+        h2, a2 = apply_block(lp, h, cfg, shared_lin=params.get(
+            "shared", {}).get("lin"), ctx=None)
+        return (h2, a + a2), None
+
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["layers"])
+    x = L.rms_norm(params["final_norm"], x)
+    return x.mean(axis=1)
+
+
+def finetune_and_eval(cfg, params, steps=60, seed=0):
+    rng = np.random.default_rng(seed)
+    D = cfg.d_model
+    head = {"w": jnp.zeros((D, 2)), "b": jnp.zeros((2,))}
+    state = {"enc": params, "head": head}
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=steps,
+                           weight_decay=0.0)
+    opt = adamw_init(state, ocfg)
+
+    def loss_fn(st, toks, ys):
+        feats = _encode(st["enc"], cfg, toks)
+        logits = feats @ st["head"]["w"] + st["head"]["b"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.take_along_axis(logp, ys[:, None], 1).mean()
+
+    @jax.jit
+    def step(st, op, toks, ys):
+        loss, g = jax.value_and_grad(loss_fn)(st, toks, ys)
+        g, _ = clip_by_global_norm(g, 1.0)
+        st, op = adamw_update(g, op, st, ocfg, jnp.asarray(1e-3))
+        return st, op, loss
+
+    for s in range(steps):
+        toks, ys = make_classification_batch(rng, cfg.vocab_size, 16, 64)
+        state, opt, loss = step(state, opt, toks, ys)
+
+    # eval
+    correct = total = 0
+    eval_rng = np.random.default_rng(seed + 999)
+    for _ in range(8):
+        toks, ys = make_classification_batch(eval_rng, cfg.vocab_size, 16, 64)
+        feats = _encode(state["enc"], cfg, toks)
+        pred = jnp.argmax(feats @ state["head"]["w"] + state["head"]["b"], -1)
+        correct += int((pred == ys).sum())
+        total += int(ys.size)
+    return correct / total
+
+
+def run(quick: bool = True):
+    pre_steps = 40 if quick else 250
+    ft_steps = 40 if quick else 150
+    seq = 128
+    out = {}
+    variants = [
+        ("standard", _cfg(seq, kind="standard")),
+        ("linformer_k16", _cfg(seq, k=16)),
+        ("linformer_k16_kv", _cfg(seq, k=16, sharing="kv")),
+        ("linformer_k32_layer", _cfg(seq, k=32, sharing="layerwise")),
+    ]
+    for name, cfg in variants:
+        _, params = _pretrain(cfg, pre_steps, seq, return_params=True)
+        acc = finetune_and_eval(cfg, params, steps=ft_steps)
+        out[name] = acc
+        emit(f"table2/{name}", 0.0, f"accuracy={acc:.3f}")
+    emit("table2/parity", 0.0,
+         f"linformer_vs_standard_gap="
+         f"{out['linformer_k16'] - out['standard']:+.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,60 @@
+"""Paper Table 3: inference-time efficiency — time saved and memory saved of
+Linformer vs the standard Transformer across (n, k).
+
+Time: measured wall-time of a full encoder forward (layerwise sharing, as the
+paper benchmarks). Memory: decode-cache bytes for the causal variant plus
+attention-activation bytes for the encoder — reported as ratios like the
+paper's "x-fold" table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from benchmarks.figure3_pretrain import _cfg
+from repro.models import model as M
+
+
+def run(quick: bool = True):
+    ns = [256, 512, 1024] if quick else [256, 512, 1024, 2048, 4096]
+    ks = [32, 64] if quick else [32, 64, 128, 256]
+    out = {}
+    for n in ns:
+        cfg_std = _cfg(n, kind="standard")
+        params_std = M.init_params(jax.random.PRNGKey(0), cfg_std)
+        toks = jnp.ones((1, n), jnp.int32)
+        fwd_std = jax.jit(lambda p, t, c=cfg_std: M.forward(
+            p, c, {"tokens": t})[0])
+        us_std = time_fn(fwd_std, params_std, toks)
+        for k in ks:
+            if k >= n:
+                continue
+            cfg_lin = _cfg(n, k=k)
+            params_lin = M.init_params(jax.random.PRNGKey(0), cfg_lin)
+            fwd_lin = jax.jit(lambda p, t, c=cfg_lin: M.forward(
+                p, c, {"tokens": t})[0])
+            us_lin = time_fn(fwd_lin, params_lin, toks)
+            speedup = us_std / us_lin
+            # activation memory of the attention map: n^2 vs n*k
+            mem_saved = n / k
+            out[(n, k)] = speedup
+            emit(f"table3/n{n}_k{k}", us_lin,
+                 f"time_saved={speedup:.2f}x attn_mem_saved={mem_saved:.1f}x")
+    # decode-cache compression (the serving-side memory claim)
+    from repro.configs import get_config
+    cfg = get_config("qwen3-8b")
+    lin = cfg.attention.linformer
+    for n in (32768, 524288):
+        full = n
+        comp = lin.block_size + (n // lin.block_size) * lin.block_slots
+        emit(f"table3/decode_cache_n{n}", 0.0,
+             f"full_slots={full} compressed_slots={comp} "
+             f"saved={full / comp:.1f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,49 @@
+"""Batched serving example: mixed-length requests through the scheduler,
+comparing the Linformer compressed decode cache against the standard
+full-KV baseline on the same weights.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import ServingEngine
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(4, cfg.vocab_size, rng.choice([8, 8, 16])))
+               for _ in range(6)]
+    print(f"{len(prompts)} requests, lengths {[len(p) for p in prompts]}")
+
+    # Linformer compressed-cache engine
+    eng = ServingEngine(params, cfg, max_seq=256, cache_dtype=jnp.float32)
+    t0 = time.perf_counter()
+    outs = eng.serve(prompts, max_new_tokens=16, max_batch=4)
+    dt = time.perf_counter() - t0
+    for i, o in enumerate(outs):
+        print(f"  req{i}: {len(o)} tokens -> {o[:8]}...")
+    print(f"linformer engine: {dt:.2f}s, cache={eng.cache_bytes(4)} B")
+
+    # standard-attention baseline on the SAME weights (E/F simply unused)
+    cfg_std = cfg.with_attention_kind("standard")
+    eng_std = ServingEngine(params, cfg_std, max_seq=256,
+                            cache_dtype=jnp.float32)
+    t0 = time.perf_counter()
+    eng_std.serve(prompts, max_new_tokens=16, max_batch=4)
+    dt_std = time.perf_counter() - t0
+    print(f"standard engine:  {dt_std:.2f}s, cache={eng_std.cache_bytes(4)} B")
+    print(f"cache compression: {eng_std.cache_bytes(4) / eng.cache_bytes(4):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

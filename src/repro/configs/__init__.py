@@ -1,0 +1,60 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each assigned architecture lives in its own module with the exact published
+config (``CONFIG``) and a reduced smoke-test config (``SMOKE``).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    AttentionConfig,
+    LinformerConfig,
+    MLPConfig,
+    MeshConfig,
+    MoEConfig,
+    ModelConfig,
+    OptimizerConfig,
+    RWKVConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    SSMConfig,
+    ServeConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+
+# arch id (public, dashed) -> module name
+_ARCH_MODULES: Dict[str, str] = {
+    "qwen3-8b": "qwen3_8b",
+    "qwen3-14b": "qwen3_14b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "internvl2-2b": "internvl2_2b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "musicgen-large": "musicgen_large",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "linformer-paper": "linformer_paper",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(k for k in _ARCH_MODULES if k != "linformer-paper")
+ALL_IDS: Tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    """Full published config for an assigned architecture."""
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return _module(arch_id).SMOKE

@@ -1,0 +1,48 @@
+"""qwen3-8b — [dense] 36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936
+qk_norm, GQA. [hf:Qwen/Qwen3-8B; hf]
+"""
+from repro.configs.base import (
+    AttentionConfig,
+    LinformerConfig,
+    MLPConfig,
+    ModelConfig,
+)
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    vocab_size=151936,
+    max_seq_len=524288,
+    attention=AttentionConfig(
+        kind="linformer_causal",
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        linformer=LinformerConfig(k=256, sharing="layerwise",
+                                  block_size=256, block_slots=16),
+    ),
+    mlp=MLPConfig(d_ff=12288, activation="swiglu"),
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-8b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    vocab_size=512,
+    max_seq_len=256,
+    attention=AttentionConfig(
+        kind="linformer_causal",
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        qk_norm=True,
+        linformer=LinformerConfig(k=16, block_size=16, block_slots=4),
+    ),
+    mlp=MLPConfig(d_ff=128, activation="swiglu"),
+    remat="none",
+)

@@ -1,0 +1,28 @@
+"""Core of the reproduction: Linformer linear-complexity attention.
+
+Public surface:
+  * exact bidirectional form (paper Eq. 7): :mod:`repro.core.linformer`
+  * blockwise-causal adaptation:            :mod:`repro.core.causal`
+  * decode caches (compressed + full):      :mod:`repro.core.cache`
+  * sequence projections (linear/conv/pool)::mod:`repro.core.projections`
+  * spectrum / JL analysis (Thm 1–2, Fig 1)::mod:`repro.core.low_rank`
+"""
+from repro.core.linformer import (  # noqa: F401
+    attend_compressed,
+    exact_linformer_attention,
+    init_linformer_params,
+    num_projection_matrices,
+    project_kv,
+    resolve_ef,
+)
+from repro.core.causal import (  # noqa: F401
+    blockwise_causal_attention,
+    blockwise_causal_attention_chunked,
+    compress_blocks,
+)
+from repro.core.cache import (  # noqa: F401
+    compressed_decode_attention,
+    full_decode_attention,
+    init_compressed_cache,
+    init_full_cache,
+)

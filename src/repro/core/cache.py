@@ -1,0 +1,169 @@
+"""Decode-time caches.
+
+Two cache families:
+
+* :func:`init_compressed_cache` — the Linformer-causal cache. Per layer it
+  holds (a) a raw ring buffer for the current (incomplete) block of K/V and
+  (b) a compressed slot buffer: r slots per completed block. Total width for a
+  context of length n is c + r·⌊n/c⌋ — e.g. 32k context @ c=256, r=16 becomes
+  2304 slots vs 32768 (14× smaller); 512k context becomes 33k slots (16×).
+
+* :func:`init_full_cache` — the standard-attention baseline: full (S, Hkv, Dh)
+  K/V per layer.
+
+Caches are plain dicts of arrays (pytrees); layer axis leads so scanned layers
+carry their slice through ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.causal import NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# Compressed (Linformer-causal) cache
+# ---------------------------------------------------------------------------
+
+
+def compressed_cache_spec(
+    *, num_layers: int, batch: int, max_seq: int, block_size: int,
+    block_slots: int, num_kv_heads: int, head_dim: int, dtype=jnp.bfloat16,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    max_blocks = max_seq // block_size
+    M = max_blocks * block_slots
+    kv = lambda *s: jax.ShapeDtypeStruct(s, dtype)
+    return {
+        "raw_k": kv(num_layers, batch, block_size, num_kv_heads, head_dim),
+        "raw_v": kv(num_layers, batch, block_size, num_kv_heads, head_dim),
+        "comp_k": kv(num_layers, batch, M, num_kv_heads, head_dim),
+        "comp_v": kv(num_layers, batch, M, num_kv_heads, head_dim),
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_compressed_cache(**kw) -> Dict[str, jax.Array]:
+    spec = compressed_cache_spec(**kw)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+
+
+def compressed_decode_attention(
+    q_t: jax.Array,           # (B, 1, H, Dh) — rope already applied at pos t
+    k_t: jax.Array,           # (B, 1, Hkv, Dh)
+    v_t: jax.Array,
+    layer_cache: Dict[str, jax.Array],   # per-layer slices: raw_k (B,c,Hkv,Dh), comp_k (B,M,Hkv,Dh)
+    E: jax.Array,             # (c, r) or (Hkv, c, r)
+    F: jax.Array,
+    t: jax.Array,             # () int32 — number of tokens already cached
+    *,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step of blockwise-causal Linformer attention.
+
+    Appends (k_t, v_t) at position t, attends [raw block ≤ t | compressed
+    prefix blocks], and folds the block into r compressed slots when t
+    completes it. Returns (out (B,1,H,Dh), updated per-layer cache).
+    """
+    raw_k, raw_v = layer_cache["raw_k"], layer_cache["raw_v"]
+    comp_k, comp_v = layer_cache["comp_k"], layer_cache["comp_v"]
+    B, c, Hkv, Dh = raw_k.shape
+    M = comp_k.shape[1]
+    r = E.shape[-1]
+    H = q_t.shape[2]
+    G = H // Hkv
+    scale_ = scale if scale is not None else Dh ** -0.5
+
+    pos = jnp.mod(t, c)
+    blk = t // c
+
+    raw_k = jax.lax.dynamic_update_slice_in_dim(raw_k, k_t.astype(raw_k.dtype),
+                                                pos, axis=1)
+    raw_v = jax.lax.dynamic_update_slice_in_dim(raw_v, v_t.astype(raw_v.dtype),
+                                                pos, axis=1)
+
+    qg = q_t.reshape(B, Hkv, G, Dh)
+    # local scores over the raw ring buffer
+    s_loc = jnp.einsum("bhgd,bkhd->bhgk", qg, raw_k).astype(jnp.float32) * scale_
+    loc_ok = jnp.arange(c) <= pos
+    s_loc = jnp.where(loc_ok[None, None, None, :], s_loc, NEG_INF)
+    # global scores over compressed slots of completed previous blocks
+    s_glob = jnp.einsum("bhgd,bmhd->bhgm", qg, comp_k).astype(jnp.float32) * scale_
+    glob_ok = jnp.arange(M) < blk * r
+    s_glob = jnp.where(glob_ok[None, None, None, :], s_glob, NEG_INF)
+
+    s = jnp.concatenate([s_loc, s_glob], axis=-1)
+    p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p[..., :c], raw_v)
+    out = out + jnp.einsum("bhgm,bmhd->bhgd", p[..., c:], comp_v)
+    out = out.reshape(B, 1, H, Dh)
+
+    # fold the block into compressed slots when it completes (pos == c-1).
+    # Compute unconditionally (O(c·r·Dh·Hkv), tiny) and commit via select —
+    # cheaper than lax.cond's control flow on TPU.
+    if E.ndim == 2:
+        new_ks = jnp.einsum("bchd,cr->brhd", raw_k, E.astype(raw_k.dtype))
+        new_vs = jnp.einsum("bchd,cr->brhd", raw_v, F.astype(raw_v.dtype))
+    else:
+        new_ks = jnp.einsum("bchd,hcr->brhd", raw_k, E.astype(raw_k.dtype))
+        new_vs = jnp.einsum("bchd,hcr->brhd", raw_v, F.astype(raw_v.dtype))
+    done = pos == (c - 1)
+    comp_k_new = jax.lax.dynamic_update_slice_in_dim(comp_k, new_ks, blk * r,
+                                                     axis=1)
+    comp_v_new = jax.lax.dynamic_update_slice_in_dim(comp_v, new_vs, blk * r,
+                                                     axis=1)
+    comp_k = jnp.where(done, comp_k_new, comp_k)
+    comp_v = jnp.where(done, comp_v_new, comp_v)
+
+    return out, {"raw_k": raw_k, "raw_v": raw_v,
+                 "comp_k": comp_k, "comp_v": comp_v}
+
+
+# ---------------------------------------------------------------------------
+# Full KV cache (standard-attention baseline)
+# ---------------------------------------------------------------------------
+
+
+def full_cache_spec(
+    *, num_layers: int, batch: int, max_seq: int, num_kv_heads: int,
+    head_dim: int, dtype=jnp.bfloat16,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    kv = lambda *s: jax.ShapeDtypeStruct(s, dtype)
+    return {
+        "k": kv(num_layers, batch, max_seq, num_kv_heads, head_dim),
+        "v": kv(num_layers, batch, max_seq, num_kv_heads, head_dim),
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_full_cache(**kw) -> Dict[str, jax.Array]:
+    spec = full_cache_spec(**kw)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+
+
+def full_decode_attention(
+    q_t: jax.Array,           # (B, 1, H, Dh)
+    k_t: jax.Array,           # (B, 1, Hkv, Dh)
+    v_t: jax.Array,
+    layer_cache: Dict[str, jax.Array],   # k/v: (B, S, Hkv, Dh)
+    t: jax.Array,
+    *,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step of standard causal attention with a full KV cache."""
+    ck, cv = layer_cache["k"], layer_cache["v"]
+    B, S, Hkv, Dh = ck.shape
+    H = q_t.shape[2]
+    G = H // Hkv
+    scale_ = scale if scale is not None else Dh ** -0.5
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k_t.astype(ck.dtype), t, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v_t.astype(cv.dtype), t, axis=1)
+    qg = q_t.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, ck).astype(jnp.float32) * scale_
+    ok = jnp.arange(S) <= t
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, cv).reshape(B, 1, H, Dh)
+    return out, {"k": ck, "v": cv}

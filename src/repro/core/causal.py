@@ -1,0 +1,157 @@
+"""Blockwise-causal Linformer attention (DESIGN.md §4).
+
+The paper's convolutional projection (kernel = stride = c) compresses each
+c-token block into r slots: slots of block b are a linear function of keys in
+block b ONLY. Causality therefore holds at block granularity:
+
+  a query at position t (block b = t // c) attends
+    * exactly + causally within its own block (positions b·c .. t), and
+    * the r compressed slots of every block strictly before b.
+
+Cost O(n·(c + r·n/c)) — vs O(n²) for full attention. With fixed (c, r) the
+attended width at position t is c + r·⌊t/c⌋, i.e. a c/r-fold compression of
+the prefix. Decode keeps a compressed cache of the same width (cache.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_heads_gqa(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B,S,H,Dh) -> (B,S,Hkv,G,Dh)"""
+    B, S, H, Dh = q.shape
+    assert H % num_kv == 0
+    return q.reshape(B, S, num_kv, H // num_kv, Dh)
+
+
+def compress_blocks(x: jax.Array, W: jax.Array) -> jax.Array:
+    """(B, nb, c, Hkv, Dh) × (c, r)|(Hkv, c, r) -> (B, nb, r, Hkv, Dh)."""
+    if W.ndim == 2:
+        return jnp.einsum("bnchd,cr->bnrhd", x, W.astype(x.dtype))
+    return jnp.einsum("bnchd,hcr->bnrhd", x, W.astype(x.dtype))
+
+
+def blockwise_causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    E: jax.Array,
+    F: jax.Array,
+    *,
+    block_size: int,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Training-parallel form.
+
+    q: (B,S,H,Dh); k,v: (B,S,Hkv,Dh); E,F: (c,r) or (Hkv,c,r); S % c == 0.
+    Returns (B,S,H,Dh).
+    """
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    c = block_size
+    if S % c != 0:
+        raise ValueError(f"S={S} must be a multiple of block_size={c}")
+    nb = S // c
+    r = E.shape[-1]
+    scale = scale if scale is not None else Dh ** -0.5
+
+    kb = k.reshape(B, nb, c, Hkv, Dh)
+    vb = v.reshape(B, nb, c, Hkv, Dh)
+    qb = q.reshape(B, nb, c, Hkv, G, Dh)
+
+    kbar = compress_blocks(kb, E)                       # (B,nb,r,Hkv,Dh)
+    vbar = compress_blocks(vb, F)
+
+    # --- local: exact causal attention within each block ----------------
+    s_loc = jnp.einsum("bnchgd,bnkhd->bhgnck", qb, kb).astype(jnp.float32)
+    s_loc = s_loc * scale
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    s_loc = jnp.where(causal[None, None, None, None], s_loc, NEG_INF)
+
+    # --- global: compressed slots of strictly-previous blocks -----------
+    s_glob = jnp.einsum("bnchgd,bmrhd->bhgncmr", qb, kbar).astype(jnp.float32)
+    s_glob = s_glob * scale
+    blk_vis = (jnp.arange(nb)[:, None] > jnp.arange(nb)[None, :])  # (n_q, m_kv)
+    s_glob = jnp.where(blk_vis[None, None, None, :, None, :, None],
+                       s_glob, NEG_INF)
+    s_glob = s_glob.reshape(*s_glob.shape[:-2], nb * r)
+
+    # --- joint softmax over [own block | compressed prefix] -------------
+    s = jnp.concatenate([s_loc, s_glob], axis=-1)       # (B,Hkv,G,nb,c,c+nb*r)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    p_loc, p_glob = p[..., :c], p[..., c:]
+
+    out = jnp.einsum("bhgnck,bnkhd->bnchgd", p_loc, vb)
+    vbar_flat = vbar.reshape(B, nb * r, Hkv, Dh)
+    out = out + jnp.einsum("bhgncm,bmhd->bnchgd", p_glob, vbar_flat)
+    return out.reshape(B, S, H, Dh)
+
+
+def blockwise_causal_attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    E: jax.Array,
+    F: jax.Array,
+    *,
+    block_size: int,
+    q_chunk_blocks: int = 8,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Memory-bounded form: identical math, but query blocks are processed in
+    chunks with lax.map so the (S × nb·r) global-score tensor is never fully
+    materialized. Used for the 32k/500k prefill shapes.
+    """
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    c = block_size
+    if S % c != 0:
+        raise ValueError(f"S={S} must be a multiple of block_size={c}")
+    nb = S // c
+    r = E.shape[-1]
+    scale_ = scale if scale is not None else Dh ** -0.5
+    if nb % q_chunk_blocks != 0:
+        q_chunk_blocks = 1
+    n_chunks = nb // q_chunk_blocks
+
+    kb = k.reshape(B, nb, c, Hkv, Dh)
+    vb = v.reshape(B, nb, c, Hkv, Dh)
+    kbar = compress_blocks(kb, E).reshape(B, nb * r, Hkv, Dh)
+    vbar = compress_blocks(vb, F).reshape(B, nb * r, Hkv, Dh)
+    qc = q.reshape(B, n_chunks, q_chunk_blocks, c, Hkv, G, Dh)
+    kc = kb.reshape(B, n_chunks, q_chunk_blocks, c, Hkv, Dh)
+    vc = vb.reshape(B, n_chunks, q_chunk_blocks, c, Hkv, Dh)
+
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    slot_blk = jnp.arange(nb * r) // r                   # owning block of slot
+
+    def one_chunk(args):
+        ci, qi, ki, vi = args                            # qi:(B,qcb,c,Hkv,G,Dh)
+        blk_ids = ci * q_chunk_blocks + jnp.arange(q_chunk_blocks)
+        s_loc = jnp.einsum("bnchgd,bnkhd->bhgnck", qi, ki).astype(jnp.float32)
+        s_loc = jnp.where(causal[None, None, None, None], s_loc * scale_, NEG_INF)
+        s_glob = jnp.einsum("bnchgd,bmhd->bhgncm", qi, kbar).astype(jnp.float32)
+        vis = blk_ids[:, None] > slot_blk[None, :]       # (qcb, nb*r)
+        s_glob = jnp.where(vis[None, None, None, :, None, :], s_glob * scale_,
+                           NEG_INF)
+        s = jnp.concatenate([s_loc, s_glob], axis=-1)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgnck,bnkhd->bnchgd", p[..., :c], vi)
+        out = out + jnp.einsum("bhgncm,bmhd->bnchgd", p[..., c:], vbar)
+        return out                                       # (B,qcb,c,Hkv,G,Dh)
+
+    chunk_ids = jnp.arange(n_chunks)
+    outs = jax.lax.map(
+        one_chunk,
+        (chunk_ids,
+         jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+    )                                                    # (n_chunks,B,qcb,c,Hkv,G,Dh)
+    outs = jnp.moveaxis(outs, 0, 1)
+    return outs.reshape(B, S, H, Dh)

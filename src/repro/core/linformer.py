@@ -1,0 +1,201 @@
+"""Linformer attention (Wang et al., 2020) — exact bidirectional form (Eq. 7)
+plus E/F parameter management with the paper's three sharing strategies.
+
+The exact form computes, per head i:
+
+    head_i = softmax( Q Wq (E_i K Wk)^T / sqrt(d) ) · (F_i V Wv)
+
+with E_i, F_i ∈ R^{n×k}. Cost: O(n·k) time/space instead of O(n²).
+
+Sharing strategies (§4):
+  * none      — distinct E_i, F_i per layer AND per head
+  * headwise  — per layer: one E and one F shared across heads
+  * kv        — per layer: a single E = F shared across heads
+  * layerwise — one E = F for the whole network (all layers, heads, K and V)
+
+Parameter layout (returned by :func:`init_linformer_params`):
+  {"shared": {...}}     arrays without a layer axis (layerwise sharing)
+  {"per_layer": {...}}  arrays with leading L axis (stacked for lax.scan)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, LinformerConfig
+from repro.core import projections as proj
+
+
+def _ef_shape(cfg: AttentionConfig, n: int, k: int) -> Tuple[int, ...]:
+    lin = cfg.linformer
+    if lin.sharing == "none":
+        return (cfg.num_kv_heads, n, k)
+    return (n, k)
+
+
+def init_linformer_params(
+    rng: jax.Array,
+    cfg: AttentionConfig,
+    *,
+    num_layers: int,
+    max_seq: int,
+    dtype=jnp.float32,
+) -> Dict:
+    """Create E/F per the configured sharing mode.
+
+    Exact form ('linformer'): shapes use (n=max_seq, k).
+    Causal form ('linformer_causal'): shapes use (c=block_size, r=block_slots)
+    — the blockwise/conv projection weights.
+    """
+    lin = cfg.linformer
+    if cfg.kind == "linformer_causal":
+        n, k = lin.block_size, lin.block_slots
+    else:
+        n, k = max_seq, lin.k
+    # JL-style init: N(0, 1/k) matches the theorem's construction and keeps
+    # projected keys at the same scale as raw keys.
+    std = 1.0 / jnp.sqrt(k)
+
+    def mk(key, shape):
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    r_e, r_f = jax.random.split(rng)
+    sharing = lin.sharing
+    if sharing == "layerwise":
+        return {"shared": {"E": mk(r_e, _ef_shape(cfg, n, k))}}
+    if sharing == "kv":
+        return {"per_layer": {"E": mk(r_e, (num_layers,) + _ef_shape(cfg, n, k))}}
+    if sharing == "headwise":
+        return {
+            "per_layer": {
+                "E": mk(r_e, (num_layers,) + _ef_shape(cfg, n, k)),
+                "F": mk(r_f, (num_layers,) + _ef_shape(cfg, n, k)),
+            }
+        }
+    if sharing == "none":
+        return {
+            "per_layer": {
+                "E": mk(r_e, (num_layers,) + _ef_shape(cfg, n, k)),
+                "F": mk(r_f, (num_layers,) + _ef_shape(cfg, n, k)),
+            }
+        }
+    raise ValueError(f"unknown sharing mode {sharing!r}")
+
+
+def num_projection_matrices(cfg: AttentionConfig, num_layers: int) -> int:
+    """Distinct projection matrices implied by the sharing mode — paper §4:
+    12L/12H gives headwise=24, kv=12, layerwise=1."""
+    sharing = cfg.linformer.sharing
+    if sharing == "layerwise":
+        return 1
+    if sharing == "kv":
+        return num_layers
+    if sharing == "headwise":
+        return 2 * num_layers
+    return 2 * num_layers * cfg.num_kv_heads
+
+
+def resolve_ef(
+    lin_params: Dict,
+    layer_slice: Optional[Dict],
+) -> Tuple[jax.Array, jax.Array]:
+    """Return (E, F) for one layer given the param layout.
+
+    `layer_slice` is the per-layer entry (leading L axis already indexed away,
+    e.g. inside a scan body); for layerwise sharing it is None/ignored.
+    """
+    if "shared" in lin_params:
+        E = lin_params["shared"]["E"]
+        return E, E
+    assert layer_slice is not None, "per-layer params need a layer slice"
+    E = layer_slice["E"]
+    F = layer_slice.get("F", E)
+    return E, F
+
+
+# ---------------------------------------------------------------------------
+# Exact (bidirectional) Linformer attention — paper Eq. 7
+# ---------------------------------------------------------------------------
+
+
+def project_kv(
+    k: jax.Array,
+    v: jax.Array,
+    E: jax.Array,
+    F: jax.Array,
+    *,
+    kind: str = "linear",
+) -> Tuple[jax.Array, jax.Array]:
+    """Compress the sequence axis of K and V.
+
+    k, v: (B, S, Hkv, Dh).  E/F per `kind`:
+      linear: (S, K) or (Hkv, S, K)  — slices rows to S if stored for max_seq
+      conv/pool: (c, r) blockwise weights
+    Returns (B, K, Hkv, Dh) compressed keys/values.
+    """
+    if kind == "linear":
+        S = k.shape[1]
+        # E is stored for max_seq; rows beyond the batch's S are dropped
+        # (positions that do not exist contribute nothing to the mixture).
+        Es = E[..., :S, :] if E.shape[-2] != S else E
+        Fs = F[..., :S, :] if F.shape[-2] != S else F
+        return proj.linear_project(k, Es), proj.linear_project(v, Fs)
+    if kind in ("conv", "pool"):
+        return proj.blockwise_project(k, E), proj.blockwise_project(v, F)
+    raise ValueError(f"unknown projection kind {kind!r}")
+
+
+def attend_compressed(
+    q: jax.Array,
+    kbar: jax.Array,
+    vbar: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    kv_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """softmax(q·k̄ᵀ/√d)·v̄ with GQA-grouped heads.
+
+    q: (B, S, H, Dh); kbar/vbar: (B, K, Hkv, Dh); H % Hkv == 0.
+    kv_mask: optional (K,) or (B, K) bool — True = attendable slot.
+    Returns (B, S, H, Dh).
+    """
+    B, S, H, Dh = q.shape
+    Hkv = kbar.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    qg = q.reshape(B, S, Hkv, G, Dh)
+    # scores: (B, Hkv, G, S, K) in fp32 for a stable softmax
+    s = jnp.einsum("bshgd,bkhd->bhgsk", qg, kbar).astype(jnp.float32) * scale
+    if kv_mask is not None:
+        m = kv_mask if kv_mask.ndim == 1 else kv_mask[:, None, None, None, :]
+        s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgsk,bkhd->bshgd", p, vbar)
+    return out.reshape(B, S, H, Dh)
+
+
+def exact_linformer_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    E: jax.Array,
+    F: jax.Array,
+    *,
+    kind: str = "linear",
+    scale: Optional[float] = None,
+    key_padding_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """The paper's linear self-attention (Eq. 7), bidirectional.
+
+    key_padding_mask: optional (B, S) bool, True = real token. Padded keys
+    are zeroed *before* compression (compressed slots then simply receive
+    less mass; there is no per-slot mask — slots mix positions).
+    """
+    if key_padding_mask is not None:
+        keep = key_padding_mask[:, :, None, None].astype(k.dtype)
+        k = k * keep
+        v = v * keep
+    kbar, vbar = project_kv(k, v, E, F, kind=kind)
+    return attend_compressed(q, kbar, vbar, scale=scale)

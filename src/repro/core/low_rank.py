@@ -1,0 +1,72 @@
+"""Spectrum analysis of the context-mapping matrix P (paper §3, Figure 1) and
+empirical verification of the JL approximation (Theorems 1–2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def context_mapping(
+    q: jax.Array, k: jax.Array, *, scale: Optional[float] = None,
+    causal: bool = False,
+) -> jax.Array:
+    """P = softmax(QKᵀ/√d) for one head. q,k: (S, Dh) -> (S, S)."""
+    S, Dh = q.shape
+    scale_ = scale if scale is not None else Dh ** -0.5
+    a = (q @ k.T).astype(jnp.float32) * scale_
+    if causal:
+        a = jnp.where(jnp.tril(jnp.ones((S, S), bool)), a, -1e30)
+    return jax.nn.softmax(a, axis=-1)
+
+
+def cumulative_spectrum(P: jax.Array) -> jax.Array:
+    """Normalized cumulative singular values of P (Figure 1, Y-axis).
+
+    Returns (S,) monotone in [0,1]: out[i] = sum(sigma[:i+1]) / sum(sigma).
+    """
+    s = jnp.linalg.svd(P.astype(jnp.float32), compute_uv=False)
+    c = jnp.cumsum(s)
+    return c / c[-1]
+
+
+def energy_at_rank(P: jax.Array, rank: int) -> jax.Array:
+    """Figure 1 (right): cumulative singular-value mass at a given rank."""
+    return cumulative_spectrum(P)[rank - 1]
+
+
+def rank_for_energy(P: jax.Array, energy: float = 0.9) -> jax.Array:
+    """Smallest rank capturing `energy` of the spectrum mass."""
+    spec = cumulative_spectrum(P)
+    return jnp.argmax(spec >= energy) + 1
+
+
+def jl_projection_error(
+    rng: jax.Array, P: jax.Array, w: jax.Array, k: int,
+) -> jax.Array:
+    """Relative error ||P RᵀR w − P w|| / ||P w|| for the Theorem-1
+    construction (R ∈ R^{k×n}, entries N(0, 1/k))."""
+    n = P.shape[0]
+    R = jax.random.normal(rng, (k, n), jnp.float32) / jnp.sqrt(k)
+    ref = P @ w
+    approx = P @ (R.T @ (R @ w))
+    return jnp.linalg.norm(approx - ref) / jnp.maximum(jnp.linalg.norm(ref), 1e-30)
+
+
+def theorem2_error(
+    rng: jax.Array, a_row: jax.Array, V: jax.Array, k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Relative error of softmax(w Eᵀ) F V vs softmax(w) V (Theorem 2) with
+    the E = δR, F = e^{-δ}R construction. a_row: (n,) one row of QKᵀ/√d;
+    V: (n, d). Returns (error, reference_norm)."""
+    n = a_row.shape[0]
+    R = jax.random.normal(rng, (k, n), jnp.float32) / jnp.sqrt(k)
+    delta = 1.0 / n
+    E = delta * R            # (k, n) — acts as E^T in paper notation
+    F = jnp.exp(-delta) * R
+    ref = jax.nn.softmax(a_row) @ V
+    approx = jax.nn.softmax(a_row @ E.T) @ (F @ V)
+    err = jnp.linalg.norm(approx - ref)
+    return err, jnp.linalg.norm(ref)

@@ -1,0 +1,95 @@
+"""Sequence-axis projection operators (the E/F of the paper, Eq. 7).
+
+Three families, matching the paper §4 "Additional Efficiency Techniques /
+General projections":
+
+* ``linear``  — dense learned E ∈ R^{n×k}; K̄ = EᵀK. The paper's default.
+* ``conv``    — 1-D convolution along the sequence with kernel = stride = c,
+                r learned output slots per window (r=1 ⇒ the paper's n/k conv).
+                Structurally this is a *block-diagonal* E with shared blocks.
+* ``pool``    — mean pooling with kernel = stride = c (parameter-free).
+
+The blockwise operators are also the building block of the causal variant
+(DESIGN.md §4): a window's output slots depend only on that window's inputs,
+so block-granular causality is preserved.
+
+Shape conventions: sequence tensors are (B, S, H, Dh); projections act on S.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_project(x: jax.Array, E: jax.Array) -> jax.Array:
+    """Dense sequence projection K̄ = EᵀK (paper Eq. 7).
+
+    Args:
+      x: (B, S, H, Dh) keys or values.
+      E: (S, K) shared across heads, or (H, S, K) per-head.
+    Returns:
+      (B, K, H, Dh)
+    """
+    if E.ndim == 2:
+        return jnp.einsum("bshd,sk->bkhd", x, E.astype(x.dtype))
+    if E.ndim == 3:
+        return jnp.einsum("bshd,hsk->bkhd", x, E.astype(x.dtype))
+    raise ValueError(f"E must be (S,K) or (H,S,K), got {E.shape}")
+
+
+def blockwise_project(x: jax.Array, W: jax.Array) -> jax.Array:
+    """Conv-style projection: kernel = stride = c, r output slots per window.
+
+    Args:
+      x: (B, S, H, Dh) with S % c == 0.
+      W: (c, r) shared across heads, or (H, c, r) per-head.
+    Returns:
+      (B, (S//c)*r, H, Dh) — window-major slot order.
+    """
+    per_head = W.ndim == 3
+    c, r = (W.shape[1], W.shape[2]) if per_head else (W.shape[0], W.shape[1])
+    B, S, H, Dh = x.shape
+    if S % c != 0:
+        raise ValueError(f"seq len {S} not divisible by block size {c}")
+    nb = S // c
+    xb = x.reshape(B, nb, c, H, Dh)
+    if per_head:
+        out = jnp.einsum("bnchd,hcr->bnrhd", xb, W.astype(x.dtype))
+    else:
+        out = jnp.einsum("bnchd,cr->bnrhd", xb, W.astype(x.dtype))
+    return out.reshape(B, nb * r, H, Dh)
+
+
+def pool_weights(c: int, r: int = 1, dtype=jnp.float32) -> jax.Array:
+    """Mean-pool projection weights: each of r slots averages a c/r sub-window."""
+    if c % r != 0:
+        raise ValueError(f"block {c} not divisible by slots {r}")
+    sub = c // r
+    w = jnp.zeros((c, r), dtype)
+    for j in range(r):
+        w = w.at[j * sub:(j + 1) * sub, j].set(1.0 / sub)
+    return w
+
+
+def conv_as_linear(W: jax.Array, n: int) -> jax.Array:
+    """Materialize the block-diagonal E ∈ R^{n×k} equivalent to a blockwise
+    projection — used by tests/oracles to show the conv variant is a special
+    case of the paper's linear E."""
+    c, r = W.shape
+    assert n % c == 0
+    nb = n // c
+    E = jnp.zeros((n, nb * r), W.dtype)
+    for b in range(nb):
+        E = E.at[b * c:(b + 1) * c, b * r:(b + 1) * r].set(W)
+    return E
+
+
+def effective_k(k: int, k_decay: float, layer_idx: int, num_layers: int) -> int:
+    """Non-uniform projected dimension (paper §4): higher layers have more
+    skewed spectra, so k can shrink with depth. Linear interpolation from k at
+    layer 0 to ceil(k * k_decay) at the last layer, floored at 1."""
+    if num_layers <= 1 or k_decay >= 1.0:
+        return k
+    frac = layer_idx / (num_layers - 1)
+    kk = k * (1.0 - (1.0 - k_decay) * frac)
+    return max(1, int(-(-kk // 1)))  # ceil

@@ -1,0 +1,72 @@
+"""Sequence-parallel Linformer projection (beyond-paper; DESIGN.md §3).
+
+Because the paper's compression K̄ = EᵀK is a LINEAR reduction over the
+sequence axis, sharding the sequence across devices costs only a psum of the
+(k × d) partial projections — communication independent of n. Standard
+attention under sequence parallelism must ring-exchange O(n·d) of K/V
+(ring attention); Linformer needs O(k·d).
+
+`seq_parallel_linformer_attention` shard_maps the full exact-form attention
+with S sharded: each device projects its sequence shard with its E/F row
+block, psums the tiny compressed K̄/V̄, then attends its local queries — the
+output stays sequence-sharded with zero further communication.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import linformer as lin_lib
+from repro.parallel.sharding import ParallelCtx
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def seq_parallel_linformer_attention(
+    q: jax.Array,            # (B, S, H, Dh)
+    k: jax.Array,            # (B, S, Hkv, Dh)
+    v: jax.Array,
+    E: jax.Array,            # (S, K) — row-sharded with the sequence
+    F: jax.Array,
+    ctx: ParallelCtx,
+    *,
+    seq_axis: Optional[str] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Exact Linformer attention with the sequence axis sharded over
+    `seq_axis` (default: the model axis). Returns (B, S, H, Dh) sharded the
+    same way. Communication: one psum of 2·(B, K, Hkv, Dh)."""
+    axis = seq_axis or ctx.model_axis
+    mesh = ctx.mesh
+    assert mesh is not None
+
+    def body(q_l, k_l, v_l, E_l, F_l):
+        # local partial projection over this device's sequence rows
+        kbar = jnp.einsum("bshd,sk->bkhd", k_l, E_l.astype(k_l.dtype))
+        vbar = jnp.einsum("bshd,sk->bkhd", v_l, F_l.astype(v_l.dtype))
+        kbar = jax.lax.psum(kbar, axis)       # (B, K, Hkv, Dh) — tiny
+        vbar = jax.lax.psum(vbar, axis)
+        return lin_lib.attend_compressed(q_l, kbar, vbar, scale=scale)
+
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis, None, None), P(None, axis, None, None),
+                  P(None, axis, None, None), P(axis, None), P(axis, None)),
+        out_specs=P(None, axis, None, None),
+        check_vma=False,
+    )(q, k, v, E, F)
+
+
+def seq_parallel_comm_bytes(n: int, k: int, d_total: int, shards: int,
+                            dtype_bytes: int = 2) -> Tuple[int, int]:
+    """(linformer_bytes, ring_attention_bytes) per device for one layer —
+    the collective-cost comparison quoted in EXPERIMENTS.md §Perf."""
+    lin = 2 * k * d_total * dtype_bytes                   # psum of K̄,V̄
+    ring = 2 * (n // shards) * d_total * (shards - 1) * dtype_bytes
+    return lin, ring

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (  # noqa: F401
+    ByteTokenizer,
+    DataState,
+    SyntheticCorpus,
+    make_causal_batch,
+    make_mlm_batch,
+)

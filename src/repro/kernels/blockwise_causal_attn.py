@@ -1,0 +1,106 @@
+"""Fused blockwise-causal Linformer attention Pallas kernel (TPU target).
+
+One grid step computes one query block (c tokens of one (batch, head)):
+joint softmax over [own block, causal | compressed slots of previous blocks].
+The compressed K̄/V̄ (M = (S/c)·r slots) are pinned in VMEM — at r/c = 16/256
+compression, a 32k-token context compresses to 2048 slots × Dh (512 KiB bf16),
+far under VMEM; raw K/V of the own block are streamed per grid step.
+
+Grid: (B·H, nb). Blocks:
+  q, k_loc, v_loc : (1, c, Dh)   — block `n` of the sequence
+  k̄, v̄           : (1, M, Dh)   — pinned
+  out             : (1, c, Dh)
+
+Causality: local scores use a (c, c) lower-triangular mask; global scores
+mask slots whose owning block ≥ the current grid block (slot i belongs to
+block i // r).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, out_ref, *,
+            scale: float, r: int):
+    n = pl.program_id(1)
+    q = q_ref[0]                                    # (c, Dh)
+    kl = kl_ref[0]
+    vl = vl_ref[0]
+    kbar = kbar_ref[0]                              # (M, Dh)
+    vbar = vbar_ref[0]
+    c = q.shape[0]
+    M = kbar.shape[0]
+
+    s_loc = jax.lax.dot_general(
+        q, kl, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (c, c)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    s_loc = jnp.where(ti >= si, s_loc, NEG_INF)
+
+    s_glob = jax.lax.dot_general(
+        q, kbar, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (c, M)
+    slot_blk = jax.lax.broadcasted_iota(jnp.int32, (c, M), 1) // r
+    s_glob = jnp.where(slot_blk < n, s_glob, NEG_INF)
+
+    m = jnp.maximum(jnp.max(s_loc, -1, keepdims=True),
+                    jnp.max(s_glob, -1, keepdims=True))
+    p_loc = jnp.exp(s_loc - m)
+    p_glob = jnp.exp(s_glob - m)
+    denom = jnp.sum(p_loc, -1, keepdims=True) + jnp.sum(p_glob, -1,
+                                                        keepdims=True)
+    out = jax.lax.dot_general(
+        (p_loc / denom).astype(vl.dtype), vl, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out += jax.lax.dot_general(
+        (p_glob / denom).astype(vbar.dtype), vbar, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def blockwise_causal_attn(
+    q: jax.Array,       # (B, H, S, Dh)
+    k: jax.Array,       # (B, H, S, Dh)  (kv heads pre-repeated to H)
+    v: jax.Array,
+    kbar: jax.Array,    # (B, H, M, Dh)  compressed slots, M = (S/c)*r
+    vbar: jax.Array,
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, Dh = q.shape
+    c = block_size
+    assert S % c == 0
+    nb = S // c
+    M = kbar.shape[2]
+    assert M == nb * block_slots, (M, nb, block_slots)
+    q3 = q.reshape(B * H, S, Dh)
+    k3 = k.reshape(B * H, S, Dh)
+    v3 = v.reshape(B * H, S, Dh)
+    kb3 = kbar.reshape(B * H, M, Dh)
+    vb3 = vbar.reshape(B * H, M, Dh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, r=block_slots),
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (bh, 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3, kb3, vb3)
+    return out.reshape(B, H, S, Dh)

@@ -1,0 +1,73 @@
+"""Fused Linformer attention Pallas kernel (TPU target).
+
+Computes out = softmax(Q·K̄ᵀ/√d) · V̄ with K̄,V̄ the sequence-compressed
+(k × Dh) keys/values.
+
+TPU adaptation (DESIGN.md §3): because k ≤ 512, the ENTIRE compressed K̄/V̄
+per head fits in VMEM (512×128 bf16 = 128 KiB), so the kernel pins them and
+streams Q blocks — exact one-pass softmax with no flash-style online
+renormalization. Score matmuls are (bq × Dh)·(Dh × k) and (bq × k)·(k × Dh):
+both MXU-aligned when bq, Dh, k are multiples of 128 (the paper's k = 128/256
+already are).
+
+Grid: (B·H, S / bq). Block shapes:
+  q    (1, bq, Dh)   — streamed per grid step
+  k̄,v̄  (1, k,  Dh)   — pinned (same block for every s-step)
+  out  (1, bq, Dh)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, kbar_ref, vbar_ref, out_ref, *, scale: float):
+    q = q_ref[0]                                   # (bq, Dh)
+    kbar = kbar_ref[0]                             # (k, Dh)
+    vbar = vbar_ref[0]
+    s = jax.lax.dot_general(
+        q, kbar, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (bq, k)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jax.lax.dot_general(
+        p.astype(vbar.dtype), vbar, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def linformer_attn(
+    q: jax.Array,       # (B, H, S, Dh)
+    kbar: jax.Array,    # (B, H, K, Dh)
+    vbar: jax.Array,    # (B, H, K, Dh)
+    *,
+    scale: float,
+    block_q: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, Dh = q.shape
+    K = kbar.shape[2]
+    bq = min(block_q, S)
+    assert S % bq == 0, (S, bq)
+    q3 = q.reshape(B * H, S, Dh)
+    k3 = kbar.reshape(B * H, K, Dh)
+    v3 = vbar.reshape(B * H, K, Dh)
+
+    grid = (B * H, S // bq)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
+            pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
+            pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(B, H, S, Dh)

@@ -1,0 +1,148 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced Python, validating the exact TPU program logic. On TPU
+they compile through Mosaic. `interpret=None` auto-detects.
+
+Layout note: kernels use (B, H, S, Dh); the model uses (B, S, H, Dh). These
+wrappers accept model layout and handle GQA head repetition for the
+compressed operands (cheap: K is small).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import blockwise_causal_attn as bca
+from repro.kernels import linformer_attn as la
+from repro.kernels import ref
+from repro.kernels import seq_projection as sp
+from repro.core.causal import compress_blocks
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _to_kernel_layout(x):        # (B,S,H,D) -> (B,H,S,D)
+    return jnp.moveaxis(x, 2, 1)
+
+
+def _from_kernel_layout(x):
+    return jnp.moveaxis(x, 1, 2)
+
+
+def _repeat_kv(x, H):            # (B,Hkv,K,D) -> (B,H,K,D)
+    Hkv = x.shape[1]
+    if Hkv == H:
+        return x
+    return jnp.repeat(x, H // Hkv, axis=1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _linformer_attn_diff(q, kbar, vbar, scale, block_q, interpret):
+    """Differentiable fused attention: Pallas forward, analytic backward.
+
+    Backward derivation (per head; P = softmax(S), S = q·k̄ᵀ·scale,
+    o = P·v̄):  dv̄ = Pᵀ·do;  dP = do·v̄ᵀ;  dS = P ∘ (dP − rowsum(dP∘P));
+    dq = dS·k̄·scale;  dk̄ = dSᵀ·q·scale. The P recompute is one small
+    (S × k) matmul — cheaper than storing it."""
+    kb = _repeat_kv(kbar, q.shape[1])
+    vb = _repeat_kv(vbar, q.shape[1])
+    return la.linformer_attn(q, kb, vb, scale=scale, block_q=block_q,
+                             interpret=interpret)
+
+
+def _lin_fwd(q, kbar, vbar, scale, block_q, interpret):
+    out = _linformer_attn_diff(q, kbar, vbar, scale, block_q, interpret)
+    return out, (q, kbar, vbar)
+
+
+def _lin_bwd(scale, block_q, interpret, res, do):
+    q, kbar, vbar = res
+    H, Hkv = q.shape[1], kbar.shape[1]
+    G = H // Hkv
+    kb = _repeat_kv(kbar, H)
+    vb = _repeat_kv(vbar, H)
+    s = jnp.einsum("bhsd,bhkd->bhsk", q, kb).astype(jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    do32 = do.astype(jnp.float32)
+    dv = jnp.einsum("bhsk,bhsd->bhkd", p, do32)
+    dp = jnp.einsum("bhsd,bhkd->bhsk", do32, vb.astype(jnp.float32))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhsk,bhkd->bhsd", ds, kb.astype(jnp.float32)) * scale
+    dk = jnp.einsum("bhsk,bhsd->bhkd", ds, q.astype(jnp.float32)) * scale
+    # fold the GQA head-repeat: sum grads over the query-group axis
+    B, _, K, Dh = kbar.shape
+    dk = dk.reshape(B, Hkv, G, K, Dh).sum(2)
+    dv = dv.reshape(B, Hkv, G, K, Dh).sum(2)
+    return (dq.astype(q.dtype), dk.astype(kbar.dtype), dv.astype(vbar.dtype))
+
+
+_linformer_attn_diff.defvjp(_lin_fwd, _lin_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_q", "interpret"))
+def fused_linformer_attention(
+    q: jax.Array,        # (B, S, H, Dh) model layout
+    kbar: jax.Array,     # (B, K, Hkv, Dh)
+    vbar: jax.Array,
+    *,
+    scale: float,
+    block_q: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    qk = _to_kernel_layout(q)
+    kb = _to_kernel_layout(kbar)
+    vb = _to_kernel_layout(vbar)
+    out = _linformer_attn_diff(qk, kb, vb, scale, block_q,
+                               _auto_interpret(interpret))
+    return _from_kernel_layout(out)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def fused_seq_projection(
+    x: jax.Array,        # (B, S, H, Dh)
+    E: jax.Array,        # (S, K)
+    *,
+    block_s: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    out = sp.seq_projection(_to_kernel_layout(x), E, block_s=block_s,
+                            interpret=_auto_interpret(interpret))
+    return _from_kernel_layout(out)        # (B, K, H, Dh)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "block_slots", "scale", "interpret"))
+def fused_blockwise_causal_attention(
+    q: jax.Array,        # (B, S, H, Dh)
+    k: jax.Array,        # (B, S, Hkv, Dh)
+    v: jax.Array,
+    E: jax.Array,        # (c, r)
+    F: jax.Array,
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    nb = S // block_size
+    kbar = compress_blocks(k.reshape(B, nb, block_size, Hkv, Dh), E)
+    vbar = compress_blocks(v.reshape(B, nb, block_size, Hkv, Dh), F)
+    kbar = kbar.reshape(B, nb * block_slots, Hkv, Dh)
+    vbar = vbar.reshape(B, nb * block_slots, Hkv, Dh)
+    G = H // Hkv
+    rep = lambda x: _repeat_kv(_to_kernel_layout(x), H)
+    out = bca.blockwise_causal_attn(
+        _to_kernel_layout(q), rep(k), rep(v), rep(kbar), rep(vbar),
+        block_size=block_size, block_slots=block_slots, scale=scale,
+        interpret=_auto_interpret(interpret))
+    return _from_kernel_layout(out)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linformer_attn_ref(q: jax.Array, kbar: jax.Array, vbar: jax.Array,
+                       scale: float) -> jax.Array:
+    """softmax(q·k̄ᵀ·scale)·v̄.  q: (B,H,S,Dh); kbar/vbar: (B,H,K,Dh)."""
+    s = jnp.einsum("bhsd,bhkd->bhsk", q, kbar).astype(jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhsk,bhkd->bhsd", p.astype(q.dtype), vbar)
+
+
+def seq_projection_ref(x: jax.Array, E: jax.Array) -> jax.Array:
+    """K̄ = EᵀK over the sequence axis. x: (B,H,S,Dh); E: (S,K) → (B,H,K,Dh).
+    Accumulation in fp32 (matches the kernel's accumulator)."""
+    out = jnp.einsum("bhsd,sk->bhkd", x.astype(jnp.float32),
+                     E.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def blockwise_causal_ref(q, k, v, E, F, *, block_size, scale=None):
+    """Oracle for the fused blockwise-causal kernel: thin wrapper around the
+    core implementation with the kernel's (B,H,S,Dh) layout."""
+    from repro.core.causal import blockwise_causal_attention
+    to_core = lambda x: jnp.moveaxis(x, 1, 2)        # (B,H,S,D)->(B,S,H,D)
+    out = blockwise_causal_attention(
+        to_core(q), to_core(k), to_core(v), E, F,
+        block_size=block_size, scale=scale)
+    return jnp.moveaxis(out, 2, 1)

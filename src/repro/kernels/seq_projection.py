@@ -1,0 +1,65 @@
+"""Sequence-projection Pallas kernel (TPU target): K̄ = EᵀK.
+
+A tall-skinny reduction over the sequence axis: (k × n)·(n × Dh). The kernel
+tiles n into `block_s`-row VMEM blocks and accumulates the (k × Dh) result in
+a fp32 VMEM scratch accumulator, emitting once on the final sequence block —
+one HBM write of k×Dh instead of n/block_s partial writes.
+
+Grid: (B·H, S / block_s) — the s axis is the innermost (fastest) so the
+accumulator lives across the s sweep of each (b,h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, e_ref, out_ref, acc_ref, *, n_s: int):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                    # (bs, Dh)
+    e = e_ref[...]                                  # (bs, K)
+    acc_ref[...] += jax.lax.dot_general(
+        e, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (K, Dh)
+
+    @pl.when(s_idx == n_s - 1)
+    def _emit():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+def seq_projection(
+    x: jax.Array,       # (B, H, S, Dh) keys or values
+    E: jax.Array,       # (S, K)
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, Dh = x.shape
+    K = E.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    x3 = x.reshape(B * H, S, Dh)
+    n_s = S // bs
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_s=n_s),
+        grid=(B * H, n_s),
+        in_specs=[
+            pl.BlockSpec((1, bs, Dh), lambda bh, s: (bh, s, 0)),
+            pl.BlockSpec((bs, K), lambda bh, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, K, Dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((K, Dh), jnp.float32)],
+        interpret=interpret,
+    )(x3, E)
+    return out.reshape(B, H, K, Dh)

@@ -1,0 +1,345 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits a while-loop body ONCE —
+for scan-over-layers models that undercounts FLOPs/bytes/collectives by ~L×.
+This analyzer parses the post-optimization HLO, computes per-computation
+costs, and multiplies loop bodies by their ``known_trip_count`` (recursively,
+so nested scans — e.g. SSD chunk scans inside the layer scan — compound).
+
+Cost model:
+  * flops: dots = 2 · |result| · |contracted dims|; elementwise/reduce ops =
+    1 flop per result element (transcendentals = 1 as well — dots dominate).
+    Fusion ops recurse into the fused computation.
+  * bytes: result + operand bytes at fusion/op boundaries WITHOUT recursing
+    into fused computations (fusion internals live in registers/VMEM — this
+    is a closer HBM-traffic model than HloCostAnalysis, which counts every
+    internal op).
+  * collectives: result bytes per kind, × the enclosing loops' trip counts.
+
+Shapes in post-SPMD HLO are per-device shards, so all numbers are per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+    r"pred|token)\[([0-9,]*)\]")
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+"
+                    r"([\w\-]+)\((.*)$")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "log", "tanh", "rsqrt", "sqrt", "power", "negate", "abs", "compare",
+    "select", "and", "or", "xor", "floor", "ceil", "sign", "cosine", "sine",
+    "logistic", "clamp", "round-nearest-even", "atan2", "remainder",
+    "exponential-minus-one", "log-plus-one", "erf",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(d) for d in dims.split(",")] if dims else [])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str               # text after the opening paren
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0          # op-boundary model: HBM-traffic UPPER bound
+    bytes_min: float = 0.0      # perfect-fusion model: LOWER bound
+    transcendental: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        c = Cost(self.flops + o.flops, self.bytes + o.bytes,
+                 self.bytes_min + o.bytes_min,
+                 self.transcendental + o.transcendental)
+        c.collectives = {k: dict(v) for k, v in self.collectives.items()}
+        for k, v in o.collectives.items():
+            d = c.collectives.setdefault(k, {"bytes": 0.0, "count": 0.0})
+            d["bytes"] += v["bytes"]
+            d["count"] += v["count"]
+        return c
+
+    def scaled(self, n: float) -> "Cost":
+        c = Cost(self.flops * n, self.bytes * n, self.bytes_min * n,
+                 self.transcendental * n)
+        c.collectives = {k: {"bytes": v["bytes"] * n, "count": v["count"] * n}
+                         for k, v in self.collectives.items()}
+        return c
+
+
+# ops whose operands/results genuinely traverse HBM even under perfect TPU
+# fusion (matmuls, data movement, collectives); elementwise chains are
+# assumed fully fused and excluded from the lower bound.
+# genuinely-HBM ops, counted for bytes_min even inside fused computations
+# (weight streaming via dynamic-slice in scan bodies is real traffic):
+_HBM_OPS_ALWAYS = {
+    "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "sort",
+}
+# layout/data-movement ops counted only when unfused at top level:
+_HBM_OPS_TOP = {"copy", "transpose", "concatenate"}
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"n"\s*:\s*"(\d+)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def parse_module(text: str) -> Dict[str, List[Op]]:
+    """computation name -> ops."""
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s:
+            continue
+        if not s.startswith(" ") and "{" in s and ("->" in s or
+                                                   s.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, type_str, kind, rest = m.groups()
+        # operands: %names before any attribute section in `rest`
+        paren = rest.split("),")[0] if ")," in rest else rest.rstrip(")")
+        operands = _OPERAND_RE.findall(paren)
+        comps[cur].append(Op(name, type_str, kind, rest, operands))
+    return comps
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.shapes: Dict[str, str] = {}
+        for ops in self.comps.values():
+            for op in ops:
+                self.shapes[op.name] = op.type_str
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self._param_memo: Dict[str, Dict[int, float]] = {}
+        self.entry = next((n for n in self.comps if n.startswith("main")),
+                          list(self.comps)[-1])
+        self.warnings: List[str] = []
+
+    # -- per-op flops -----------------------------------------------------
+
+    def _dot_flops(self, op: Op) -> float:
+        m = _CONTRACT_RE.search(op.rest)
+        contract_elems = 1
+        if m and op.operands:
+            lhs_shape = self.shapes.get(op.operands[0], "")
+            dims = _dims(lhs_shape)
+            if dims:
+                lhs = dims[0][1]
+                for i in (int(x) for x in m.group(1).split(",") if x):
+                    if i < len(lhs):
+                        contract_elems *= lhs[i]
+        return 2.0 * _elems(op.type_str) * contract_elems
+
+    # -- computation cost --------------------------------------------------
+
+    def cost(self, comp: str, inside_fusion: bool = False) -> Cost:
+        key = (comp, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        for op in self.comps.get(comp, []):
+            total = total + self._op_cost(op, inside_fusion)
+        self._memo[key] = total
+        return total
+
+    def _op_cost(self, op: Op, inside_fusion: bool) -> Cost:
+        c = Cost()
+        k = op.kind
+        if k == "while":
+            m = _TRIP_RE.search(op.rest)
+            n = float(m.group(1)) if m else 1.0
+            if not m:
+                self.warnings.append(f"while {op.name}: no known_trip_count")
+            body = _BODY_RE.search(op.rest)
+            cond = _COND_RE.search(op.rest)
+            if body:
+                c = c + self.cost(body.group(1)).scaled(n)
+            if cond:
+                c = c + self.cost(cond.group(1)).scaled(n)
+            return c
+        if k == "fusion":
+            m = _CALLS_RE.search(op.rest)
+            if m:
+                inner = self.cost(m.group(1), inside_fusion=True)
+                c.flops += inner.flops
+                c.transcendental += inner.transcendental
+                c.bytes_min += inner.bytes_min
+                for kk, v in inner.collectives.items():
+                    d = c.collectives.setdefault(kk, {"bytes": 0, "count": 0})
+                    d["bytes"] += v["bytes"]
+                    d["count"] += v["count"]
+            if not inside_fusion:
+                c.bytes += self._fusion_io_bytes(op, m.group(1) if m else None)
+            return c
+        if k in ("call", "conditional"):
+            m = _BRANCH_RE.search(op.rest)
+            called = ([x.strip().lstrip("%") for x in m.group(1).split(",")]
+                      if m else _CALLS_RE.findall(op.rest))
+            for cc in called:
+                c = c + self.cost(cc, inside_fusion)
+            if not inside_fusion:
+                c.bytes += self._io_bytes(op)
+            return c
+        for kind in _COLLECTIVES:
+            if k == kind or k.startswith(kind + "-start"):
+                d = c.collectives.setdefault(kind, {"bytes": 0, "count": 0})
+                d["bytes"] += _bytes(op.type_str)
+                d["count"] += 1
+                if not inside_fusion:
+                    c.bytes_min += self._io_bytes(op)
+                break
+        if k in _HBM_OPS_ALWAYS or (k in _HBM_OPS_TOP and not inside_fusion):
+            c.bytes_min += self._io_bytes(op, force=True)
+        if k == "dot":
+            c.flops += self._dot_flops(op)
+        elif k == "convolution":
+            self.warnings.append(f"convolution {op.name}: flops approximated")
+            c.flops += 2.0 * _elems(op.type_str)
+        elif k == "custom-call":
+            if "matmul" in op.rest or "dot" in op.rest:
+                self.warnings.append(f"custom-call matmul {op.name} — flops "
+                                     "not counted")
+        elif k in _ELEMENTWISE or k.startswith("reduce"):
+            c.flops += float(_elems(op.type_str))
+            if k in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                     "logistic", "cosine", "sine", "erf"):
+                c.transcendental += float(_elems(op.type_str))
+        if not inside_fusion:
+            c.bytes += self._io_bytes(op)
+        return c
+
+    def _io_bytes(self, op: Op, force: bool = False) -> float:
+        if not force and op.kind in ("parameter", "constant",
+                                     "get-tuple-element", "tuple", "bitcast"):
+            return 0.0
+        # in-place update ops: XLA aliases the buffer — traffic is the
+        # updated slice (read-modify-write), not the whole operand/result.
+        if op.kind == "dynamic-update-slice" and len(op.operands) >= 2:
+            upd = float(_bytes(self.shapes.get(op.operands[1], "")))
+            return 2.0 * upd
+        if op.kind == "scatter" and len(op.operands) >= 3:
+            upd = float(_bytes(self.shapes.get(op.operands[2], "")))
+            idx = float(_bytes(self.shapes.get(op.operands[1], "")))
+            return 2.0 * upd + idx
+        # slicing reads only the slice (result), not the whole operand
+        if op.kind in ("dynamic-slice", "slice"):
+            return 2.0 * float(_bytes(op.type_str))
+        if op.kind == "gather" and len(op.operands) >= 2:
+            idx = float(_bytes(self.shapes.get(op.operands[1], "")))
+            return 2.0 * float(_bytes(op.type_str)) + idx
+        b = float(_bytes(op.type_str))
+        for o in op.operands:
+            b += float(_bytes(self.shapes.get(o, "")))
+        return b
+
+    def _param_read_bytes(self, comp: str) -> Dict[int, float]:
+        """Effective read bytes per parameter of a fused computation: a
+        parameter consumed ONLY by slicing ops is read slice-wise, not in
+        full (scan bodies stream layer weights via fused dynamic-slice)."""
+        if comp in self._param_memo:
+            return self._param_memo[comp]
+        ops = self.comps.get(comp, [])
+        out: Dict[int, float] = {}
+        for p in ops:
+            if p.kind != "parameter":
+                continue
+            m = re.search(r"parameter\((\d+)", p.rest)
+            if not m:
+                continue
+            idx = int(m.group(1))
+            uses = [o for o in ops if p.name in o.operands]
+            if uses and all(u.kind in ("dynamic-slice", "slice", "gather",
+                                       "bitcast") for u in uses):
+                eff = sum(float(_bytes(u.type_str)) for u in uses)
+            else:
+                eff = float(_bytes(p.type_str))
+            out[idx] = eff
+        self._param_memo[comp] = out
+        return out
+
+    def _fusion_io_bytes(self, op: Op, called: Optional[str]) -> float:
+        b = float(_bytes(op.type_str))
+        eff = self._param_read_bytes(called) if called else {}
+        for i, o in enumerate(op.operands):
+            full = float(_bytes(self.shapes.get(o, "")))
+            b += min(full, eff.get(i, full)) if i in eff else full
+        return b
+
+    def analyze(self) -> Dict:
+        c = self.cost(self.entry)
+        coll = {k: c.collectives.get(k, {"bytes": 0.0, "count": 0.0})
+                for k in _COLLECTIVES}
+        return {
+            "flops": c.flops,
+            "bytes": c.bytes,
+            "bytes_min": c.bytes_min,
+            "transcendental": c.transcendental,
+            "collectives": coll,
+            "collective_bytes": sum(v["bytes"] for v in coll.values()),
+            "warnings": self.warnings[:20],
+        }
+
+
+def analyze_text(text: str) -> Dict:
+    return HloCost(text).analyze()

@@ -1,0 +1,55 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(jax locks the device count on first backend initialization — the dry-run
+sets XLA_FLAGS before any jax import).
+
+Target: TPU v5e. Single pod = 16×16 = 256 chips, axes ("data", "model").
+Multi-pod = 2 pods = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is the outer data-parallel axis whose collectives cross DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (roofline §EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_shards: int = 1):
+    """Debug mesh over whatever devices exist (tests use 8 host devices)."""
+    n = len(jax.devices())
+    assert n % model_shards == 0
+    return jax.make_mesh((n // model_shards, model_shards), ("data", "model"))
+
+
+# Per-arch FSDP policy: how far parameters/optimizer state are sharded over
+# the data-like axes, chosen from per-device memory needs (see DESIGN.md §6).
+ARCH_FSDP = {
+    "qwen3-8b": "data",
+    "qwen3-14b": "data",
+    "nemotron-4-15b": "data",
+    "qwen1.5-110b": "data",
+    "kimi-k2-1t-a32b": "pod_data",
+    "qwen3-moe-30b-a3b": "data",
+    "internvl2-2b": "none",
+    "zamba2-1.2b": "none",
+    "musicgen-large": "none",
+    "rwkv6-1.6b": "none",
+    "linformer-paper": "none",
+}
+
+
+def fsdp_for(arch: str, multi_pod: bool) -> str:
+    f = ARCH_FSDP.get(arch, "none")
+    if f == "pod_data" and not multi_pod:
+        return "data"
+    return f

@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch × shape) cell.
+
+`input_specs(cfg, shape)` returns the exact abstract inputs the step function
+is lowered with — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.parallel.sharding import ParallelCtx
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Abstract batch for a train/prefill cell, or (batch_t, cache) for a
+    decode cell."""
+    if shape.kind in ("train", "prefill"):
+        return model_lib.make_train_batch_shapes(
+            cfg, batch=shape.global_batch, seq=shape.seq_len)
+    # decode: one new token with a cache of seq_len tokens
+    from repro.models.model import _impl
+    impl = _impl(cfg)
+    cache = jax.eval_shape(
+        lambda: impl.init_cache(cfg, batch=shape.global_batch,
+                                max_seq=shape.seq_len, dtype=jnp.bfloat16))
+    if cfg.embedding_inputs:
+        batch_t = {"embeds": jax.ShapeDtypeStruct(
+            (shape.global_batch, 1, cfg.d_model), jnp.dtype(cfg.dtype))}
+    else:
+        batch_t = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32)}
+    return {"batch_t": batch_t, "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# Input shardings
+# ---------------------------------------------------------------------------
+
+
+def _dp(ctx: ParallelCtx) -> Tuple[str, ...]:
+    return ctx.data_axes
+
+
+def _divisible(n: int, ctx: ParallelCtx, axes: Tuple[str, ...]) -> bool:
+    if ctx.mesh is None or not axes:
+        return False
+    size = 1
+    for a in axes:
+        size *= ctx.mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ParallelCtx):
+    """PartitionSpec tree matching input_specs(cfg, shape)."""
+    dp = _dp(ctx)
+    B = shape.global_batch
+    bspec = dp if _divisible(B, ctx, dp) else None
+
+    def token_like(ndim):
+        return P(bspec, *([None] * (ndim - 1)))
+
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        tree = input_specs(cfg, shape)
+        for k, v in tree.items():
+            specs[k] = token_like(v.ndim)
+        return specs
+
+    # decode: shard caches. Batch over dp when divisible; the long-context
+    # axis (cache slots / sequence) over "model" — and over EVERYTHING when
+    # batch=1 (long_500k), which is sequence-parallel decode.
+    tree = input_specs(cfg, shape)
+    seq_axes: Tuple[str, ...]
+    if bspec is None:
+        seq_axes = tuple(dp) + (ctx.model_axis,)
+    else:
+        seq_axes = (ctx.model_axis,)
+
+    def cache_spec(path_key: str, v) -> P:
+        nd = v.ndim
+        if path_key in ("comp_k", "comp_v", "k", "v"):
+            # (L, B, X, Hkv, Dh)
+            return P(None, bspec, seq_axes, None, None)
+        if path_key in ("raw_k", "raw_v"):
+            return P(None, bspec, None, None, None)
+        if path_key in ("mamba_ssm", "wkv"):
+            # (L, B, H, ...) — heads over model
+            hs = v.shape[2]
+            m = ctx.model_axis if hs % ctx.model_shards == 0 else None
+            return P(None, bspec, m, *([None] * (nd - 3)))
+        if path_key in ("mamba_conv", "tm_shift", "cm_shift"):
+            return P(None, bspec, *([None] * (nd - 2)))
+        if path_key == "length":
+            return P()
+        return P(*([None] * nd))
+
+    def walk(prefix, t):
+        if isinstance(t, dict):
+            return {k: walk(k, v) for k, v in t.items()}
+        return cache_spec(prefix, t)
+
+    cache_specs = walk("", tree["cache"])
+    bt = {k: token_like(v.ndim) for k, v in tree["batch_t"].items()}
+    return {"batch_t": bt, "cache": cache_specs}
+
+
+def as_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,230 @@
+"""Attention block: QKV/output projections + dispatch between the standard
+softmax baseline and the paper's Linformer forms.
+
+`init_attention` creates the per-layer parameters (E/F included here when the
+sharing mode is per-layer; the layerwise-shared E lives in the model's
+"shared" collection and is passed through `shared_lin`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.core import cache as cache_lib
+from repro.core import causal as causal_lib
+from repro.core import linformer as lin_lib
+from repro.models import layers as L
+
+NEG_INF = causal_lib.NEG_INF
+
+
+def init_attention(
+    rng: jax.Array, d_model: int, cfg: AttentionConfig, *, max_seq: int,
+    dtype,
+) -> Dict:
+    ks = jax.random.split(rng, 6)
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": L.dense_init(ks[0], (d_model, H * Dh), dtype),
+        "wk": L.dense_init(ks[1], (d_model, Hkv * Dh), dtype),
+        "wv": L.dense_init(ks[2], (d_model, Hkv * Dh), dtype),
+        "wo": L.dense_init(ks[3], (H * Dh, d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * Dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * Dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(Dh, dtype)
+        p["k_norm"] = L.init_rmsnorm(Dh, dtype)
+    if cfg.kind in ("linformer", "linformer_causal") \
+            and cfg.linformer.sharing != "layerwise":
+        # per-layer E/F (num_layers=1: the layer axis is added by the stacker)
+        lp = lin_lib.init_linformer_params(ks[4], cfg, num_layers=1,
+                                           max_seq=max_seq, dtype=dtype)
+        p["lin"] = jax.tree.map(lambda a: a[0], lp["per_layer"])
+    return p
+
+
+def _qkv(params: Dict, x: jax.Array, cfg: AttentionConfig,
+         positions: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(params["q_norm"], q)
+        k = L.rms_norm(params["k_norm"], k)
+    if cfg.use_rope:
+        pos = positions if positions is not None else jnp.arange(S)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _resolve_ef(params: Dict, shared_lin: Optional[Dict],
+                cfg: AttentionConfig) -> Tuple[jax.Array, jax.Array]:
+    if cfg.linformer.sharing == "layerwise":
+        assert shared_lin is not None, "layerwise sharing needs shared params"
+        E = shared_lin["E"]
+        return E, E
+    lp = params["lin"]
+    return lp["E"], lp.get("F", lp["E"])
+
+
+def standard_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Full softmax attention (the paper's baseline), GQA-grouped."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale_ = scale if scale is not None else Dh ** -0.5
+    qg = q.reshape(B, S, Hkv, G, Dh)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32) * scale_
+    if causal:
+        s = jnp.where(jnp.tril(jnp.ones((S, S), bool))[None, None, None],
+                      s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgst,bthd->bshgd", p, v).reshape(B, S, H, Dh)
+
+
+def apply_attention(
+    params: Dict,
+    x: jax.Array,
+    cfg: AttentionConfig,
+    *,
+    shared_lin: Optional[Dict] = None,
+    positions: Optional[jax.Array] = None,
+    chunked: bool = False,
+    cache_entry_spec: Optional[Dict] = None,
+):
+    """Full-sequence attention (training / prefill). x: (B, S, D).
+
+    With `cache_entry_spec` = {"max_seq": int, "dtype": ...}, also returns
+    this layer's decode-cache entry built from the SAME k/v (single-pass
+    prefill — no second forward)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, positions)
+    if cfg.kind == "standard":
+        out = standard_attention(q, k, v, causal=cfg.causal)
+    elif cfg.kind == "linformer":
+        E, F = _resolve_ef(params, shared_lin, cfg)
+        out = lin_lib.exact_linformer_attention(
+            q, k, v, E, F, kind=cfg.linformer.projection)
+    elif cfg.kind == "linformer_causal":
+        E, F = _resolve_ef(params, shared_lin, cfg)
+        fn = (causal_lib.blockwise_causal_attention_chunked if chunked
+              else causal_lib.blockwise_causal_attention)
+        out = fn(q, k, v, E, F, block_size=cfg.linformer.block_size)
+    else:
+        raise ValueError(f"unknown attention kind {cfg.kind!r}")
+    out = out.reshape(B, S, -1) @ params["wo"]
+    if cache_entry_spec is not None:
+        entry = _entry_from_kv(k, v, cfg,
+                               _resolve_ef(params, shared_lin, cfg)
+                               if cfg.kind == "linformer_causal" else None,
+                               max_seq=cache_entry_spec["max_seq"],
+                               dtype=cache_entry_spec["dtype"])
+        return out, entry
+    return out
+
+
+def _entry_from_kv(k, v, cfg: AttentionConfig, ef, *, max_seq, dtype):
+    """Decode-cache entry from already-computed k/v (rope applied)."""
+    B, S, Hkv, Dh = k.shape
+    if cfg.kind == "linformer_causal":
+        E, F = ef
+        c = cfg.linformer.block_size
+        r = cfg.linformer.block_slots
+        if S % c != 0:
+            raise ValueError(f"prefill length {S} not a multiple of block {c}")
+        nb = S // c
+        M = (max_seq // c) * r
+        comp_k = causal_lib.compress_blocks(
+            k.reshape(B, nb, c, Hkv, Dh), E).reshape(B, nb * r, Hkv, Dh)
+        comp_v = causal_lib.compress_blocks(
+            v.reshape(B, nb, c, Hkv, Dh), F).reshape(B, nb * r, Hkv, Dh)
+        pad = ((0, 0), (0, M - nb * r), (0, 0), (0, 0))
+        return {
+            "raw_k": jnp.zeros((B, c, Hkv, Dh), dtype),
+            "raw_v": jnp.zeros((B, c, Hkv, Dh), dtype),
+            "comp_k": jnp.pad(comp_k.astype(dtype), pad),
+            "comp_v": jnp.pad(comp_v.astype(dtype), pad),
+        }
+    if cfg.kind == "standard":
+        pad = ((0, 0), (0, max_seq - S), (0, 0), (0, 0))
+        return {"k": jnp.pad(k.astype(dtype), pad),
+                "v": jnp.pad(v.astype(dtype), pad)}
+    raise ValueError(f"no decode cache for attention kind {cfg.kind!r}")
+
+
+def apply_attention_decode(
+    params: Dict,
+    x_t: jax.Array,                 # (B, 1, D)
+    layer_cache: Dict[str, jax.Array],
+    t: jax.Array,                   # () int32 current position
+    cfg: AttentionConfig,
+    *,
+    shared_lin: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode step against the layer's cache."""
+    q, k, v = _qkv(params, x_t, cfg, positions=t[None] if t.ndim == 0 else t)
+    if cfg.kind == "linformer_causal":
+        E, F = _resolve_ef(params, shared_lin, cfg)
+        out, new_cache = cache_lib.compressed_decode_attention(
+            q, k, v, layer_cache, E, F, t)
+    elif cfg.kind == "standard":
+        out, new_cache = cache_lib.full_decode_attention(
+            q, k, v, layer_cache, t)
+    else:
+        raise ValueError(
+            f"attention kind {cfg.kind!r} has no decode path "
+            "(exact linformer is bidirectional/encoder-only)")
+    B = x_t.shape[0]
+    return out.reshape(B, 1, -1) @ params["wo"], new_cache
+
+
+def prefill_cache_entries(
+    params: Dict,
+    x: jax.Array,                   # (B, S, D) — normed block input
+    cfg: AttentionConfig,
+    *,
+    shared_lin: Optional[Dict],
+    max_seq: int,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    """Build this layer's decode-cache entry from a prefilled sequence.
+
+    For the compressed cache, S must be a multiple of block_size (the serving
+    engine decodes any remainder tokens individually); the raw ring buffer
+    starts empty at t = S.
+    """
+    q, k, v = _qkv(params, x, cfg, positions=None)
+    ef = (_resolve_ef(params, shared_lin, cfg)
+          if cfg.kind == "linformer_causal" else None)
+    return _entry_from_kv(k, v, cfg, ef, max_seq=max_seq, dtype=dtype)
+
+
+def decode_cache_spec(cfg: AttentionConfig, *, num_layers: int, batch: int,
+                      max_seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct spec of this attention kind's decode cache."""
+    if cfg.kind == "linformer_causal":
+        return cache_lib.compressed_cache_spec(
+            num_layers=num_layers, batch=batch, max_seq=max_seq,
+            block_size=cfg.linformer.block_size,
+            block_slots=cfg.linformer.block_slots,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim, dtype=dtype)
+    return cache_lib.full_cache_spec(
+        num_layers=num_layers, batch=batch, max_seq=max_seq,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim, dtype=dtype)

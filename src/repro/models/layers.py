@@ -1,0 +1,112 @@
+"""Shared neural-net layers (pure JAX, no flax): norms, rotary embeddings,
+MLP variants, embedding tables, init helpers.
+
+Convention: every module is a pair of pure functions
+  ``init_*(rng, ...) -> params``  /  ``apply(params, x, ...) -> y``
+with params as nested dicts of arrays.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLPConfig
+
+
+def dense_init(rng: jax.Array, shape, dtype, scale: Optional[float] = None):
+    """Fan-in scaled normal init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (NeoX half-rotation style)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    B, S, H, Dh = x.shape
+    freqs = rope_frequencies(Dh, theta)                  # (Dh/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, Dh/2)
+        ang = ang[None, :, None, :]                      # (1,S,1,Dh/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs          # (B,S,Dh/2)
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense feed-forward) variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng: jax.Array, d_model: int, cfg: MLPConfig, dtype) -> Dict:
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, cfg.d_ff), dtype),
+        "w_out": dense_init(ks[1], (cfg.d_ff, d_model), dtype),
+    }
+    if cfg.activation == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d_model, cfg.d_ff), dtype)
+    return p
+
+
+def apply_mlp(params: Dict, x: jax.Array, cfg: MLPConfig) -> jax.Array:
+    h = x @ params["w_in"]
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown activation {cfg.activation!r}")
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(rng: jax.Array, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def init_learned_positions(rng: jax.Array, max_seq: int, d_model: int,
+                           dtype) -> jax.Array:
+    return (jax.random.normal(rng, (max_seq, d_model)) * 0.02).astype(dtype)

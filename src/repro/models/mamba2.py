@@ -1,0 +1,214 @@
+"""Mamba2 (SSD — state-space duality) block, for the zamba2 hybrid trunk.
+
+Per head h with head dim P and state dim N, the recurrence is
+
+    h_t = a_t · h_{t-1} + dt_t · (B_t ⊗ x_t)        h ∈ R^{N×P}
+    y_t = C_t · h_t + D_skip · x_t
+
+with scalar per-head decay a_t = exp(-exp(A_log) · dt_t), dt_t = softplus(·).
+
+Training uses the chunked (block-parallel) SSD algorithm: exact intra-chunk
+attention-like computation + a lax.scan over chunk states. All decay factors
+are computed as exp of *differences* of cumulative logs (always ≤ 0), so the
+chunked form is numerically safe in fp32. A step function serves decode and
+the reference scan (tests assert chunked == scan).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import layers as L
+
+
+def dims(d_model: int, cfg: SSMConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.expand * d_model
+    P_ = cfg.head_dim
+    H = cfg.num_heads or d_inner // P_
+    assert H * P_ == d_inner
+    return d_inner, H, P_
+
+
+def init_mamba2(rng: jax.Array, d_model: int, cfg: SSMConfig, dtype) -> Dict:
+    d_inner, H, P_ = dims(d_model, cfg)
+    N = cfg.state_dim
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(rng, 5)
+    # in_proj -> [z (d_inner) | x (d_inner) | B (N) | C (N) | dt (H)]
+    return {
+        "w_in": L.dense_init(ks[0], (d_model, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),           # a = exp(-exp(A_log)·dt)
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -1.0, jnp.float32),
+        "norm": L.init_rmsnorm(d_inner, dtype),
+        "w_out": L.dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(params, x, cfg: SSMConfig, d_model: int):
+    d_inner, H, P_ = dims(d_model, cfg)
+    N = cfg.state_dim
+    zxbcdt = x @ params["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xr = zxbcdt[..., d_inner:2 * d_inner]
+    Bm = zxbcdt[..., 2 * d_inner:2 * d_inner + N]
+    Cm = zxbcdt[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, xr, Bm, Cm, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along S. xBC: (B,S,C); w: (W,C). If `state`
+    (B, W-1, C) is given, it supplies the left context (decode)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xBC[:, :W - 1])
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _discretize(params, dt):
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    log_a = -jnp.exp(params["A_log"]) * dt                            # ≤ 0
+    return dt, log_a
+
+
+def apply_mamba2(params: Dict, x: jax.Array, cfg: SSMConfig,
+                 return_state: bool = False):
+    """Training/prefill forward, chunked SSD. x: (B,S,D) -> (B,S,D).
+
+    With return_state=True also returns the recurrent state after the last
+    token ({ssm, conv}) — FREE from the chunk scan (no sequential replay);
+    this is how prefill materializes the decode state in O(S/chunk) steps.
+    """
+    Bsz, S, D = x.shape
+    d_inner, H, P_ = dims(D, cfg)
+    N = cfg.state_dim
+    Lc = cfg.chunk_size if (S % cfg.chunk_size == 0 and S >= cfg.chunk_size) \
+        else S
+    nc = S // Lc
+
+    z, xr, Bm, Cm, dt = _split_proj(params, x, cfg, D)
+    xBC_raw = jnp.concatenate([xr, Bm, Cm], -1)
+    xBC = _causal_conv(xBC_raw, params["conv_w"], params["conv_b"])
+    xr, Bm, Cm = xBC[..., :d_inner], xBC[..., d_inner:d_inner + N], \
+        xBC[..., d_inner + N:]
+    dt, log_a = _discretize(params, dt)                   # (B,S,H) fp32
+
+    xh = xr.reshape(Bsz, nc, Lc, H, P_).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Lc, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Lc, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Lc, H)
+    la = log_a.reshape(Bsz, nc, Lc, H)
+    cum = jnp.cumsum(la, axis=2)                          # (B,nc,Lc,H) inclusive
+
+    # intra-chunk: y[t] += sum_{s<=t} C_t·B_s · exp(cum[t]-cum[s]) · dt_s · x_s
+    G = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)             # (B,nc,t,s)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,t,s,H)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    W = G[..., None] * jnp.exp(dec) * dtc[:, :, None, :, :]  # (B,nc,t,s,H)
+    y = jnp.einsum("bctsh,bcshp->bcthp", W, xh)
+
+    # chunk states: S_c = sum_s exp(cum[end]-cum[s]) dt_s B_s ⊗ x_s
+    dec_end = cum[:, :, -1:, :] - cum                      # (B,nc,Lc,H) ≤ 0
+    contrib = jnp.exp(dec_end) * dtc                       # (B,nc,Lc,H)
+    S_c = jnp.einsum("bcsh,bcsn,bcshp->bchnp", contrib, Bc, xh)  # (B,nc,H,N,P)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, a_c = inp                                     # (B,H,N,P),(B,H)
+        h_new = h * a_c[..., None, None] + s_c
+        return h_new, h                                    # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bsz, H, N, P_), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # (B,nc,H,N,P)
+
+    # inter-chunk: y[t] += exp(cum[t]) · C_t · h_prev
+    y = y + jnp.einsum("bcth,bctn,bchnp->bcthp", jnp.exp(cum), Cc, h_prev)
+
+    y = y + params["D_skip"][None, None, None, :, None] * xh
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["w_out"]
+    if return_state:
+        W = params["conv_w"].shape[0]
+        tail = xBC_raw[:, max(S - (W - 1), 0):, :]
+        if tail.shape[1] < W - 1:                    # S < conv context
+            tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
+        state = {"ssm": h_last, "conv": tail}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recurrent reference / decode
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_state(batch: int, d_model: int, cfg: SSMConfig,
+                      dtype=jnp.float32) -> Dict:
+    d_inner, H, P_ = dims(d_model, cfg)
+    N = cfg.state_dim
+    conv_ch = d_inner + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, N, P_), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def step_mamba2(params: Dict, x_t: jax.Array, state: Dict,
+                cfg: SSMConfig) -> Tuple[jax.Array, Dict]:
+    """One-token step. x_t: (B,1,D)."""
+    Bsz, _, D = x_t.shape
+    d_inner, H, P_ = dims(D, cfg)
+    N = cfg.state_dim
+    z, xr, Bm, Cm, dt = _split_proj(params, x_t, cfg, D)
+    xBC = jnp.concatenate([xr, Bm, Cm], -1)                # (B,1,C)
+    conv_in = jnp.concatenate([state["conv"], xBC], axis=1)
+    out = sum(conv_in[:, i:i + 1] * params["conv_w"][i]
+              for i in range(cfg.conv_width))
+    xBC_c = jax.nn.silu(out + params["conv_b"])            # (B,1,C)
+    new_conv = conv_in[:, 1:]
+    xr = xBC_c[..., :d_inner]
+    Bm = xBC_c[..., d_inner:d_inner + N]
+    Cm = xBC_c[..., d_inner + N:]
+    dt, log_a = _discretize(params, dt)                    # (B,1,H)
+
+    xh = xr.reshape(Bsz, H, P_).astype(jnp.float32)
+    Bv = Bm.reshape(Bsz, N).astype(jnp.float32)
+    Cv = Cm.reshape(Bsz, N).astype(jnp.float32)
+    a = jnp.exp(log_a)[:, 0, :]                            # (B,H)
+    dtv = dt[:, 0, :]                                      # (B,H)
+    h = state["ssm"] * a[..., None, None] + \
+        jnp.einsum("bh,bn,bhp->bhnp", dtv, Bv, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h) + \
+        params["D_skip"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner).astype(x_t.dtype)
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["w_out"], {"ssm": h, "conv": new_conv}
+
+
+def apply_mamba2_scan(params: Dict, x: jax.Array, cfg: SSMConfig) -> jax.Array:
+    """Step-by-step reference (oracle for chunked-vs-scan tests)."""
+    Bsz, S, D = x.shape
+    state = init_mamba2_state(Bsz, D, cfg, x.dtype)
+
+    def body(st, xt):
+        y, st = step_mamba2(params, xt[:, None], st, cfg)
+        return st, y[:, 0]
+
+    _, ys = jax.lax.scan(body, state, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,146 @@
+"""Unified model API: dispatches on `ModelConfig.family` and provides the
+loss used by the trainer (causal LM or MLM), plus cache helpers for serving.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv_model, transformer, zamba
+from repro.parallel.sharding import ParallelCtx
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def _impl(cfg: ModelConfig):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer
+    if cfg.family == "hybrid":
+        return zamba
+    if cfg.family == "ssm":
+        return rwkv_model
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    return _impl(cfg).init_params(rng, cfg)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, *,
+            ctx: Optional[ParallelCtx] = None, **kw):
+    return _impl(cfg).forward(params, cfg, batch, ctx=ctx, **kw)
+
+
+def init_cache(cfg: ModelConfig, *, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict:
+    return _impl(cfg).init_cache(cfg, batch=batch, max_seq=max_seq,
+                                 dtype=dtype)
+
+
+def decode_step(params, cfg: ModelConfig, batch_t: Dict, cache: Dict, *,
+                ctx: Optional[ParallelCtx] = None):
+    return _impl(cfg).decode_step(params, cfg, batch_t, cache, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Stable CE in fp32. labels: (B,S) int; mask: (B,S) {0,1} loss weights.
+    Returns (sum_loss, sum_weight)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return nll.sum(), mask.sum()
+
+
+def chunked_head_ce(params, cfg: ModelConfig, hidden: jax.Array,
+                    labels: jax.Array, mask: jax.Array, *,
+                    ctx: Optional[ParallelCtx],
+                    chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """LM-head matmul + CE over sequence chunks: the (B, S, V) logits tensor
+    is never materialized; backward recomputes each chunk (checkpoint).
+    §Perf iteration qwen1.5-110b/train_4k."""
+    from repro.models.transformer import logits_from_hidden
+    B, S, D = hidden.shape
+    if S % chunk != 0:
+        chunk = S
+    n = S // chunk
+    hs = jnp.moveaxis(hidden.reshape(B, n, chunk, D), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h_c, y_c, m_c = inp
+        logits = logits_from_hidden(params, cfg, h_c, ctx)
+        nll, den = cross_entropy(logits, y_c, m_c)
+        return (carry[0] + nll, carry[1] + den), None
+
+    (nll, den), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ys, ms))
+    return nll, den
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, *,
+            ctx: Optional[ParallelCtx] = None
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens/embeds (+frontend_embeds), labels (B,S), loss_mask (B,S).
+
+    Causal LM: labels are inputs shifted by one (built by the data pipeline).
+    MLM: labels hold original ids at masked positions, loss_mask marks them.
+    """
+    labels = batch["labels"]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    use_chunked = (cfg.chunked_ce > 0
+                   and cfg.family in _TRANSFORMER_FAMILIES)
+    if use_chunked:
+        hidden, aux, _ = forward(params, cfg, batch, ctx=ctx,
+                                 return_hidden=True)
+        if cfg.frontend_embed_len > 0:
+            hidden = hidden[:, cfg.frontend_embed_len:]
+        nll_sum, denom = chunked_head_ce(params, cfg, hidden, labels, mask,
+                                         ctx=ctx, chunk=cfg.chunked_ce)
+    else:
+        logits, aux, _ = forward(params, cfg, batch, ctx=ctx)
+        if cfg.frontend_embed_len > 0:
+            # logits cover [frontend | text]; loss only on the text positions
+            logits = logits[:, cfg.frontend_embed_len:]
+        nll_sum, denom = cross_entropy(logits, labels, mask)
+    loss = nll_sum / jnp.maximum(denom, 1.0)
+    total = loss
+    if cfg.moe.num_experts > 0:
+        total = total + cfg.moe.aux_loss_weight * aux
+    metrics = {"loss": loss, "aux_loss": aux, "tokens": denom,
+               "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}
+    return total, metrics
+
+
+def make_train_batch_shapes(cfg: ModelConfig, *, batch: int, seq: int
+                            ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one training batch of this architecture —
+    the single source of truth used by input_specs() in the dry-run."""
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    shapes: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embedding_inputs:
+        shapes["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), f)
+        shapes["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        shapes["loss_mask"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        return shapes
+    text = seq - cfg.frontend_embed_len
+    shapes["tokens"] = jax.ShapeDtypeStruct((batch, text), i32)
+    if cfg.frontend_embed_len > 0:
+        shapes["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_embed_len, cfg.d_model), f)
+    shapes["labels"] = jax.ShapeDtypeStruct((batch, text), i32)
+    shapes["loss_mask"] = jax.ShapeDtypeStruct((batch, text), i32)
+    return shapes

@@ -1,0 +1,216 @@
+"""RWKV6 "Finch" block (data-dependent decay linear attention) — attn-free.
+
+Per head (head dim P), with per-channel data-dependent decay w_t ∈ (0,1):
+
+    y_t = r_t · ( S_{t-1} + diag(u) · k_t ⊗ v_t )
+    S_t = diag(w_t) · S_{t-1} + k_t ⊗ v_t              S ∈ R^{P×P}
+
+Token-shift "ddlerp" mixing and the decay w_t follow the Finch low-rank
+parameterization. Training uses a chunked parallel form; per-step log-decay is
+clamped to [-2, -1e-6] (identically at train and decode time) so the chunked
+factorization exp(±cum) stays in fp32 range — decays below e^-2/step zero out
+state within a few tokens anyway, so the clamp is modelling-neutral.
+
+Linformer is inapplicable here (no attention matrix) — see DESIGN.md §5.1.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig
+from repro.models import layers as L
+
+TM_DIM = 32          # ddlerp low-rank dim
+TD_DIM = 64          # decay low-rank dim
+LOG_W_MIN = -2.0
+LOG_W_MAX = -1e-6
+_MIX = ("w", "k", "v", "r", "g")
+
+
+def init_rwkv6(rng: jax.Array, d_model: int, d_ff: int, cfg: RWKVConfig,
+               dtype) -> Dict:
+    D = d_model
+    ks = jax.random.split(rng, 12)
+    p = {
+        # token-shift mixing
+        "maa_x": jnp.zeros((D,), dtype),
+        "maa": jnp.zeros((5, D), dtype),                   # per w,k,v,r,g
+        "tm_w1": L.dense_init(ks[0], (D, 5 * TM_DIM), dtype, scale=1e-2),
+        "tm_w2": L.dense_init(ks[1], (5, TM_DIM, D), dtype, scale=1e-2),
+        # data-dependent decay
+        "td_w1": L.dense_init(ks[2], (D, TD_DIM), dtype, scale=1e-2),
+        "td_w2": L.dense_init(ks[3], (TD_DIM, D), dtype, scale=1e-2),
+        "decay_base": jnp.zeros((D,), jnp.float32),
+        "bonus_u": (jax.random.normal(ks[4], (D,)) * 0.1).astype(jnp.float32),
+        # projections
+        "w_r": L.dense_init(ks[5], (D, D), dtype),
+        "w_k": L.dense_init(ks[6], (D, D), dtype),
+        "w_v": L.dense_init(ks[7], (D, D), dtype),
+        "w_g": L.dense_init(ks[8], (D, D), dtype),
+        "w_o": L.dense_init(ks[9], (D, D), dtype),
+        "ln_x": {"scale": jnp.ones((D,), dtype), "bias": jnp.zeros((D,), dtype)},
+        # channel mix
+        "cm_maa_k": jnp.zeros((D,), dtype),
+        "cm_maa_r": jnp.zeros((D,), dtype),
+        "cm_w_k": L.dense_init(ks[10], (D, d_ff), dtype),
+        "cm_w_v": L.dense_init(ks[11], (d_ff, D), dtype),
+        "cm_w_r": L.dense_init(jax.random.fold_in(rng, 99), (D, D), dtype),
+    }
+    return p
+
+
+def _shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Token shift: x_{t-1}, with `prev` (B,D) as the t=0 left context."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x, xx):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    B, S, D = x.shape
+    dx = xx - x
+    base = x + dx * params["maa_x"]
+    k5 = jnp.tanh(base @ params["tm_w1"]).reshape(B, S, 5, TM_DIM)
+    deltas = jnp.einsum("bsnt,ntd->nbsd", k5, params["tm_w2"])   # (5,B,S,D)
+    outs = []
+    for i in range(5):
+        mi = params["maa"][i] + deltas[i]
+        outs.append(x + dx * mi)
+    return outs                                            # [xw,xk,xv,xr,xg]
+
+
+def _log_decay(params, xw):
+    ww = params["decay_base"] + \
+        (jnp.tanh(xw @ params["td_w1"]) @ params["td_w2"]).astype(jnp.float32)
+    return jnp.clip(-jnp.exp(ww), LOG_W_MIN, LOG_W_MAX)    # (B,S,D)
+
+
+def _group_norm(p, y, H):
+    """Per-head layer norm; y: (B,S,H,P) -> (B,S,D)."""
+    B, S, _, P_ = y.shape
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    yn = (y32 - mu) * jax.lax.rsqrt(var + 1e-5)
+    yn = yn.reshape(B, S, H * P_)
+    return (yn * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32))
+
+
+def time_mix(params: Dict, x: jax.Array, cfg: RWKVConfig,
+             shift_prev: jax.Array, wkv_state: jax.Array
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked parallel WKV. x: (B,S,D). Returns (out, new_shift, new_state).
+
+    wkv_state: (B,H,P,P) initial state (zeros at sequence start).
+    """
+    B, S, D = x.shape
+    P_ = cfg.head_dim
+    H = D // P_
+    Lc = cfg.chunk_size if (S % cfg.chunk_size == 0 and S >= cfg.chunk_size) \
+        else S
+    nc = S // Lc
+
+    xx = _shift(x, shift_prev)
+    xw, xk, xv, xr, xg = _ddlerp(params, x, xx)
+    r = (xr @ params["w_r"]).reshape(B, S, H, P_).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, S, H, P_).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, S, H, P_).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    lw = _log_decay(params, xw).reshape(B, S, H, P_)       # (B,S,H,P) ≤ 0
+    u = params["bonus_u"].reshape(H, P_)
+
+    rc = r.reshape(B, nc, Lc, H, P_)
+    kc = k.reshape(B, nc, Lc, H, P_)
+    vc = v.reshape(B, nc, Lc, H, P_)
+    lwc = lw.reshape(B, nc, Lc, H, P_)
+    cum = jnp.cumsum(lwc, axis=2)                          # inclusive, ≤ 0
+    cum_prev = cum - lwc                                   # exclusive: decay up to t-1
+    cum_end = cum[:, :, -1:]                               # (B,nc,1,H,P)
+
+    # intra-chunk, strict lower triangle (bonus handles the diagonal):
+    # score[t,s] = Σ_i r_t[i] k_s[i] exp(cum_prev[t,i] - cum[s,i]), s < t
+    q_f = rc * jnp.exp(cum_prev)                           # bounded ≤ |r|
+    k_f = kc * jnp.exp(-cum)                               # bounded by clamp
+    sc = jnp.einsum("bcthi,bcshi->bchts", q_f, k_f)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool), k=-1)
+    sc = jnp.where(mask[None, None, None], sc, 0.0)
+    y = jnp.einsum("bchts,bcshj->bcthj", sc, vc)
+    # bonus (current token):
+    y = y + jnp.einsum("bcthi,hi,bcthi,bcthj->bcthj", rc,
+                       u.astype(jnp.float32), kc, vc)
+
+    # chunk states + inter-chunk scan
+    k_end = kc * jnp.exp(cum_end - cum)                    # bounded
+    S_c = jnp.einsum("bcshi,bcshj->bchij", k_end, vc)      # (B,nc,H,P,P)
+    a_c = jnp.exp(cum_end[:, :, 0])                        # (B,nc,H,P)
+
+    def scan_fn(h, inp):
+        s_c, a = inp                                       # (B,H,P,P),(B,H,P)
+        h_new = h * a[..., None] + s_c                     # decay keys axis i
+        return h_new, h
+
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, wkv_state.astype(jnp.float32),
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(a_c, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # (B,nc,H,P,P)
+
+    y = y + jnp.einsum("bcthi,bchij->bcthj", q_f, h_prev)
+    y = y.reshape(B, S, H, P_)
+
+    out = _group_norm(params["ln_x"], y, H).astype(x.dtype) * g
+    out = out @ params["w_o"]
+    return out, x[:, -1], h_last
+
+
+def channel_mix(params: Dict, x: jax.Array, shift_prev: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    xx = _shift(x, shift_prev)
+    dx = xx - x
+    xk = x + dx * params["cm_maa_k"]
+    xr = x + dx * params["cm_maa_r"]
+    kk = jnp.square(jax.nn.relu(xk @ params["cm_w_k"]))
+    out = jax.nn.sigmoid(xr @ params["cm_w_r"]) * (kk @ params["cm_w_v"])
+    return out, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Recurrent step (decode + oracle)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6_state(batch: int, d_model: int, cfg: RWKVConfig,
+                     dtype=jnp.float32) -> Dict:
+    P_ = cfg.head_dim
+    H = d_model // P_
+    return {
+        "wkv": jnp.zeros((batch, H, P_, P_), jnp.float32),
+        "tm_shift": jnp.zeros((batch, d_model), dtype),
+        "cm_shift": jnp.zeros((batch, d_model), dtype),
+    }
+
+
+def step_time_mix(params: Dict, x_t: jax.Array, cfg: RWKVConfig,
+                  state: Dict) -> Tuple[jax.Array, Dict]:
+    """x_t: (B,1,D) -> (out (B,1,D), new state pieces)."""
+    B, _, D = x_t.shape
+    P_ = cfg.head_dim
+    H = D // P_
+    xx = state["tm_shift"][:, None].astype(x_t.dtype)
+    xw, xk, xv, xr, xg = _ddlerp(params, x_t, xx)
+    r = (xr @ params["w_r"]).reshape(B, H, P_).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, H, P_).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, H, P_).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    w = jnp.exp(_log_decay(params, xw).reshape(B, H, P_))
+    u = params["bonus_u"].reshape(H, P_)
+
+    S = state["wkv"]
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    y = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * kv)
+    S_new = S * w[..., None] + kv
+    y = y.reshape(B, 1, H, P_)
+    out = _group_norm(params["ln_x"], y, H).astype(x_t.dtype) * g
+    return out @ params["w_o"], {"wkv": S_new, "tm_shift": x_t[:, 0]}

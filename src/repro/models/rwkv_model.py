@@ -1,0 +1,109 @@
+"""RWKV6 full model (attention-free SSM family)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import rwkv6 as r6
+from repro.models.transformer import _dtype, logits_from_hidden, remat_wrap
+from repro.parallel.sharding import ParallelCtx, shard_activation
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    params: Dict = {
+        "embed": {"tok": L.init_embedding(ks[0], cfg.padded_vocab_size, cfg.d_model,
+                                          dt)},
+    }
+
+    def layer(r):
+        return {"ln1": L.init_rmsnorm(cfg.d_model, dt),
+                "ln2": L.init_rmsnorm(cfg.d_model, dt),
+                "rwkv": r6.init_rwkv6(r, cfg.d_model, cfg.mlp.d_ff, cfg.rwkv,
+                                      dt)}
+
+    params["layers"] = jax.vmap(layer)(jax.random.split(ks[1], cfg.num_layers))
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+    params["lm_head"] = L.dense_init(ks[2], (cfg.d_model, cfg.padded_vocab_size), dt)
+    return params
+
+
+def forward(
+    params: Dict, cfg: ModelConfig, batch: Dict, *,
+    ctx: Optional[ParallelCtx] = None,
+    return_cache: bool = False,
+    cache_max_seq: Optional[int] = None,
+    cache_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    x = L.embed_tokens(params["embed"]["tok"], batch["tokens"])
+    x = shard_activation(x, ctx)
+    B, S, _ = x.shape
+    P_ = cfg.rwkv.head_dim
+    H = cfg.d_model // P_
+    zero_shift = jnp.zeros((B, cfg.d_model), x.dtype)
+    zero_wkv = jnp.zeros((B, H, P_, P_), jnp.float32)
+
+    def body(carry, lp):
+        h = carry
+        tm, tm_shift, wkv = r6.time_mix(lp["rwkv"],
+                                        L.rms_norm(lp["ln1"], h), cfg.rwkv,
+                                        zero_shift, zero_wkv)
+        h = h + tm
+        cm, cm_shift = r6.channel_mix(lp["rwkv"], L.rms_norm(lp["ln2"], h),
+                                      zero_shift)
+        h = shard_activation(h + cm, ctx)
+        return h, (tm_shift, cm_shift, wkv)
+
+    body = remat_wrap(body, cfg.remat)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    logits = logits_from_hidden(params, cfg, x, ctx)
+
+    cache = None
+    if return_cache:
+        tm_shift, cm_shift, wkv = states
+        cache = {"wkv": wkv, "tm_shift": tm_shift, "cm_shift": cm_shift,
+                 "length": jnp.asarray(S, jnp.int32)}
+    return logits, jnp.zeros((), jnp.float32), cache
+
+
+def init_cache(cfg: ModelConfig, *, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict:
+    P_ = cfg.rwkv.head_dim
+    H = cfg.d_model // P_
+    return {
+        "wkv": jnp.zeros((cfg.num_layers, batch, H, P_, P_), jnp.float32),
+        "tm_shift": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dtype),
+        "cm_shift": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(
+    params: Dict, cfg: ModelConfig, batch_t: Dict, cache: Dict, *,
+    ctx: Optional[ParallelCtx] = None,
+) -> Tuple[jax.Array, Dict]:
+    x = L.embed_tokens(params["embed"]["tok"], batch_t["tokens"])
+
+    def body(h, inp):
+        lp, wkv, tms, cms = inp
+        tm_out, st = r6.step_time_mix(
+            lp["rwkv"], L.rms_norm(lp["ln1"], h), cfg.rwkv,
+            {"wkv": wkv, "tm_shift": tms})
+        h = h + tm_out
+        normed = L.rms_norm(lp["ln2"], h)
+        cm_out, new_cms = r6.channel_mix(lp["rwkv"], normed,
+                                         cms)
+        h = h + cm_out
+        return h, (st["wkv"], st["tm_shift"], new_cms)
+
+    x, (wkv, tms, cms) = jax.lax.scan(
+        body, x, (params["layers"], cache["wkv"], cache["tm_shift"],
+                  cache["cm_shift"]))
+    logits = logits_from_hidden(params, cfg, x, ctx)
+    return logits, {"wkv": wkv, "tm_shift": tms, "cm_shift": cms,
+                    "length": cache["length"] + 1}

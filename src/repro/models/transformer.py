@@ -1,0 +1,386 @@
+"""Transformer model families: dense decoder LMs (qwen3/nemotron/qwen1.5),
+MoE decoders (kimi-k2, qwen3-moe), VLM/audio backbones (internvl2, musicgen)
+and the paper's bidirectional encoder (linformer-paper MLM track).
+
+Layers are scanned (stacked params + lax.scan) so HLO size and compile time
+are depth-independent; `cfg.scan_layers=False` falls back to an unrolled loop
+(needed for non-uniform Linformer k, where per-layer shapes differ).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import linformer as lin_lib
+from repro.core.projections import effective_k
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.parallel.sharding import ParallelCtx, shard_activation
+
+import dataclasses
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# One transformer block
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng: jax.Array, cfg: ModelConfig, *, lin_k: Optional[int] = None
+               ) -> Dict:
+    """One decoder/encoder block. `lin_k` overrides the Linformer k (used for
+    non-uniform projected dimension in the unrolled encoder)."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    acfg = cfg.attention
+    if lin_k is not None:
+        acfg = dataclasses.replace(
+            acfg, linformer=dataclasses.replace(acfg.linformer, k=lin_k))
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model, dt),
+        "ln2": L.init_rmsnorm(cfg.d_model, dt),
+        "attn": attn_lib.init_attention(ks[0], cfg.d_model, acfg,
+                                        max_seq=cfg.max_seq_len, dtype=dt),
+    }
+    if cfg.moe.num_experts > 0:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.moe, cfg.mlp, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.mlp, dt)
+    return p
+
+
+def _act_spec(ctx: Optional[ParallelCtx], cfg: ModelConfig):
+    """Residual-stream sharding between blocks: batch over data axes, and —
+    with cfg.seq_shard_activations — the sequence over "model" (sequence
+    parallelism for the carry; GSPMD inserts the gather where attention
+    needs the full sequence)."""
+    if ctx is None or ctx.mesh is None:
+        return None
+    from jax.sharding import PartitionSpec as P
+    if cfg.seq_shard_activations:
+        return P(ctx.data_axes, ctx.model_axis, None)
+    return P(ctx.data_axes, None, None)
+
+
+def apply_block(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    shared_lin: Optional[Dict],
+    ctx: Optional[ParallelCtx],
+    chunked_attn: bool = False,
+    cache_entry_spec: Optional[Dict] = None,
+):
+    """Returns (x, moe_aux_loss[, cache_entry])."""
+    spec = _act_spec(ctx, cfg)
+    res = attn_lib.apply_attention(params["attn"], L.rms_norm(params["ln1"], x),
+                                   cfg.attention, shared_lin=shared_lin,
+                                   chunked=chunked_attn,
+                                   cache_entry_spec=cache_entry_spec)
+    entry = None
+    if cache_entry_spec is not None:
+        h, entry = res
+    else:
+        h = res
+    x = x + h
+    x = shard_activation(x, ctx, spec)
+    hin = L.rms_norm(params["ln2"], x)
+    if cfg.moe.num_experts > 0:
+        h, aux = moe_lib.apply_moe(params["moe"], hin, cfg.moe, cfg.mlp, ctx)
+    else:
+        h, aux = L.apply_mlp(params["mlp"], hin, cfg.mlp), jnp.zeros((), jnp.float32)
+    x = shard_activation(x + h, ctx, spec)
+    if cache_entry_spec is not None:
+        return x, aux, entry
+    return x, aux
+
+
+def apply_block_decode(
+    params: Dict,
+    x_t: jax.Array,
+    layer_cache: Dict,
+    t: jax.Array,
+    cfg: ModelConfig,
+    *,
+    shared_lin: Optional[Dict],
+    ctx: Optional[ParallelCtx],
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    h, new_cache = attn_lib.apply_attention_decode(
+        params["attn"], L.rms_norm(params["ln1"], x_t), layer_cache, t,
+        cfg.attention, shared_lin=shared_lin)
+    x_t = x_t + h
+    hin = L.rms_norm(params["ln2"], x_t)
+    if cfg.moe.num_experts > 0:
+        h, aux = moe_lib.apply_moe(params["moe"], hin, cfg.moe, cfg.mlp, ctx)
+    else:
+        h, aux = L.apply_mlp(params["mlp"], hin, cfg.mlp), jnp.zeros((), jnp.float32)
+    return x_t + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 6)
+    params: Dict = {"embed": {}}
+    if not cfg.embedding_inputs:
+        params["embed"]["tok"] = L.init_embedding(ks[0], cfg.padded_vocab_size,
+                                                  cfg.d_model, dt)
+    if not cfg.attention.use_rope:
+        params["embed"]["pos"] = L.init_learned_positions(
+            ks[1], cfg.max_seq_len, cfg.d_model, dt)
+
+    lin = cfg.attention.linformer
+    uses_linformer = cfg.attention.kind in ("linformer", "linformer_causal")
+    if uses_linformer and lin.sharing == "layerwise":
+        params["shared"] = {
+            "lin": lin_lib.init_linformer_params(
+                ks[2], cfg.attention, num_layers=cfg.num_layers,
+                max_seq=cfg.max_seq_len, dtype=dt)["shared"]
+        }
+
+    if cfg.scan_layers:
+        rngs = jax.random.split(ks[3], cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda r: init_block(r, cfg))(rngs)
+    else:
+        blocks = []
+        for i in range(cfg.num_layers):
+            k_i = (effective_k(lin.k, lin.k_decay, i, cfg.num_layers)
+                   if uses_linformer and cfg.attention.kind == "linformer"
+                   else None)
+            blocks.append(init_block(jax.random.fold_in(ks[3], i), cfg,
+                                     lin_k=k_i))
+        params["layers_list"] = blocks
+
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+    if cfg.tie_embeddings and not cfg.embedding_inputs:
+        pass  # reuse embed.tok
+    else:
+        params["lm_head"] = L.dense_init(ks[4], (cfg.d_model, cfg.padded_vocab_size),
+                                         dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: Dict, cfg: ModelConfig, batch: Dict,
+                 ctx: Optional[ParallelCtx]) -> jax.Array:
+    """Assemble the (B, S, D) input stream from tokens and/or stub-frontend
+    embeddings (VLM patches prepended; audio frames replace tokens)."""
+    if cfg.embedding_inputs:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = L.embed_tokens(params["embed"]["tok"], batch["tokens"])
+        if cfg.frontend_embed_len > 0:
+            fe = batch["frontend_embeds"].astype(x.dtype)   # (B, P, D)
+            x = jnp.concatenate([fe, x], axis=1)
+    if "pos" in params.get("embed", {}):
+        S = x.shape[1]
+        x = x + params["embed"]["pos"][:S][None]
+    return shard_activation(x, ctx)
+
+
+def logits_from_hidden(params: Dict, cfg: ModelConfig, x: jax.Array,
+                       ctx: Optional[ParallelCtx]) -> jax.Array:
+    x = L.rms_norm(params["final_norm"], x)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"]["tok"].T
+    logits = x @ head
+    if ctx is not None and ctx.mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        logits = shard_activation(logits, ctx,
+                                  P(ctx.data_axes, None, "model"))
+    return logits
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict,
+    *,
+    ctx: Optional[ParallelCtx] = None,
+    return_cache: bool = False,
+    cache_max_seq: Optional[int] = None,
+    cache_dtype=jnp.bfloat16,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """Full-sequence forward. Returns (logits, moe_aux, cache|None).
+
+    With return_cache=True the sequence length must be a multiple of the
+    Linformer block size (standard attention: any length); the returned cache
+    is positioned at t = S, ready for decode_step.
+    """
+    x = embed_inputs(params, cfg, batch, ctx)
+    B, S, _ = x.shape
+    chunked = S >= 8192
+    shared_lin = params.get("shared", {}).get("lin")
+    single_pass = return_cache and cfg.single_pass_cache
+    entry_spec = ({"max_seq": cache_max_seq or cfg.max_seq_len,
+                   "dtype": cache_dtype} if single_pass else None)
+
+    entries = None
+    if cfg.scan_layers:
+        def body(carry, lp):
+            h, aux = carry
+            out = apply_block(lp, h, cfg, shared_lin=shared_lin, ctx=ctx,
+                              chunked_attn=chunked,
+                              cache_entry_spec=entry_spec)
+            if single_pass:
+                h2, aux2, entry = out
+                return (h2, aux + aux2), entry
+            h2, aux2 = out
+            return (h2, aux + aux2), None
+
+        body = remat_wrap(body, cfg.remat)
+        (x, aux), entries = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        outs = []
+        for lp in params["layers_list"]:
+            out = apply_block(lp, x, cfg, shared_lin=shared_lin, ctx=ctx,
+                              chunked_attn=chunked,
+                              cache_entry_spec=entry_spec)
+            if single_pass:
+                x, a, entry = out
+                outs.append(entry)
+            else:
+                x, a = out
+            aux = aux + a
+        if single_pass:
+            entries = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    logits = x if return_hidden else logits_from_hidden(params, cfg, x, ctx)
+
+    cache = None
+    if return_cache:
+        if single_pass:
+            cache = dict(entries)
+            cache["length"] = jnp.asarray(S, jnp.int32)
+        else:
+            cache = build_cache_from_sequence(
+                params, cfg, batch, max_seq=cache_max_seq or cfg.max_seq_len,
+                dtype=cache_dtype, ctx=ctx)
+    return logits, aux, cache
+
+
+def build_cache_from_sequence(params, cfg, batch, *, max_seq, dtype, ctx):
+    """Recompute per-layer K/V once more to materialize a decode cache after
+    prefill (sequence length must be a multiple of the block size for the
+    compressed cache). Separate pass keeps the scan body cache-free."""
+    x = embed_inputs(params, cfg, batch, ctx)
+    B, S, _ = x.shape
+    shared_lin = params.get("shared", {}).get("lin")
+    acfg = cfg.attention
+    chunked = S >= 8192
+
+    def body(carry, lp):
+        h, _ = carry
+        normed = L.rms_norm(lp["ln1"], h)
+        entries = attn_lib.prefill_cache_entries(
+            lp["attn"], normed, acfg, shared_lin=shared_lin,
+            max_seq=max_seq, dtype=dtype)
+        h2, aux2 = apply_block(lp, h, cfg, shared_lin=shared_lin, ctx=ctx,
+                               chunked_attn=chunked)
+        return (h2, aux2), entries
+
+    body = remat_wrap(body, cfg.remat)
+    if cfg.scan_layers:
+        _, entries = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                  params["layers"])
+    else:
+        outs = []
+        carry = (x, jnp.zeros((), jnp.float32))
+        for lp in params["layers_list"]:
+            carry, e = body(carry, lp)
+            outs.append(e)
+        entries = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    entries["length"] = jnp.asarray(S, jnp.int32)
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, *, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict:
+    spec = attn_lib.decode_cache_spec(cfg.attention, num_layers=cfg.num_layers,
+                                      batch=batch, max_seq=max_seq, dtype=dtype)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+
+
+def cache_spec(cfg: ModelConfig, *, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict:
+    return attn_lib.decode_cache_spec(cfg.attention, num_layers=cfg.num_layers,
+                                      batch=batch, max_seq=max_seq, dtype=dtype)
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    batch_t: Dict,
+    cache: Dict,
+    *,
+    ctx: Optional[ParallelCtx] = None,
+) -> Tuple[jax.Array, Dict]:
+    """One decode step. batch_t: {"tokens": (B,1)} or {"embeds": (B,1,D)}.
+    Returns (logits (B,1,V), updated cache)."""
+    t = cache["length"]
+    if cfg.embedding_inputs:
+        x = batch_t["embeds"].astype(_dtype(cfg))
+    else:
+        x = L.embed_tokens(params["embed"]["tok"], batch_t["tokens"])
+    if "pos" in params.get("embed", {}):
+        x = x + params["embed"]["pos"][t][None, None]
+    x = shard_activation(x, ctx)
+    shared_lin = params.get("shared", {}).get("lin")
+
+    layer_caches = {k: v for k, v in cache.items() if k != "length"}
+
+    def body(h, inp):
+        lp, lc = inp
+        h2, new_lc, _ = apply_block_decode(lp, h, lc, t, cfg,
+                                           shared_lin=shared_lin, ctx=ctx)
+        return h2, new_lc
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches))
+    else:
+        outs = []
+        for i, lp in enumerate(params["layers_list"]):
+            lc = jax.tree.map(lambda a: a[i], layer_caches)
+            x, nc = body(x, (lp, lc))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    logits = logits_from_hidden(params, cfg, x, ctx)
+    new_caches["length"] = t + 1
+    return logits, new_caches

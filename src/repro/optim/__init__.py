@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401
+from repro.optim.grad_utils import (  # noqa: F401
+    clip_by_global_norm,
+    global_norm,
+)

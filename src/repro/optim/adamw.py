@@ -1,0 +1,58 @@
+"""AdamW in pure JAX over pytrees.
+
+Moments can be stored in bf16 (`moment_dtype`) to halve optimizer memory —
+the update math always runs in fp32. Optimizer state mirrors parameter
+sharding (ZeRO by construction: the dry-run shards opt state exactly like the
+FSDP'd parameters).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def adamw_init(params, cfg: OptimizerConfig) -> Dict:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, opt_state: Dict, params, cfg: OptimizerConfig, lr: jax.Array,
+) -> Tuple[Dict, Dict]:
+    """Returns (new_params, new_opt_state). lr is the scheduled step size."""
+    step = opt_state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = mu32 / c1
+        vhat = nu32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2), standard
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), mu32.astype(mu.dtype),
+                nu32.astype(nu.dtype))
+
+    flat = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"], params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}

@@ -1,0 +1,72 @@
+"""Gradient utilities: global-norm clipping, microbatch accumulation, and
+error-feedback int8 gradient compression for bandwidth-limited (cross-pod)
+reductions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Dict, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback int8 compression (for cross-pod / DCN gradient reduction)
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, residual):
+    """Error-feedback compression: quantize (g + residual); the quantization
+    error becomes the next step's residual, so the compressed reduction is
+    unbiased over time (Karimireddy et al., 2019). The int8 payload is what
+    would cross the DCN — a 4× byte reduction vs fp32 (2× vs bf16).
+
+    Returns (quantized {q, scale} tree, new_residual tree).
+    """
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                grads)
+
+    def one(g, r):
+        tot = g.astype(jnp.float32) + r
+        q, s = quantize_int8(tot)
+        deq = dequantize_int8(q, s)
+        return {"q": q, "scale": s}, tot - deq
+
+    pairs = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_res
+
+
+def decompress(comp):
+    return jax.tree.map(
+        lambda c: dequantize_int8(c["q"], c["scale"]),
+        comp, is_leaf=lambda c: isinstance(c, dict) and "q" in c)

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def make_schedule(cfg: OptimizerConfig):
+    def lr_at(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "linear":
+            frac = jnp.clip((s - cfg.warmup_steps) /
+                            max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            decay = 1.0 - frac
+        else:  # cosine
+            frac = jnp.clip((s - cfg.warmup_steps) /
+                            max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * warm * decay
+
+    return lr_at

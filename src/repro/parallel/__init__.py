@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ParallelCtx,
+    param_shardings,
+    shard_activation,
+)

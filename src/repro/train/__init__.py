@@ -1,0 +1,5 @@
+from repro.train.trainer import Trainer, make_train_step  # noqa: F401
+from repro.train.compressed_dp import (  # noqa: F401
+    init_residual,
+    make_compressed_train_step,
+)

@@ -1,0 +1,222 @@
+"""Training loop: jit'd train step (with microbatch gradient accumulation),
+checkpoint/auto-resume fault tolerance, preemption handling and a straggler
+watchdog.
+
+`make_train_step` is also what the multi-pod dry-run lowers — the exact
+production step (fwd + bwd + clip + AdamW), not a simplified proxy.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, OptimizerConfig, TrainConfig
+from repro.data import DataState, SyntheticCorpus, pipeline
+from repro.models import model as model_lib
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
+    make_schedule
+from repro.parallel.sharding import ParallelCtx
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    *,
+    ctx: Optional[ParallelCtx] = None,
+    microbatch: int = 0,
+) -> Callable:
+    """Build the pure train step: (params, opt_state, batch) -> (params,
+    opt_state, metrics). With microbatch > 0, the global batch is split and
+    gradients are accumulated in fp32 over a lax.scan (bf16 activations,
+    fp32 accumulation — grad-reduction precision control per DESIGN §6)."""
+    sched = make_schedule(opt_cfg)
+
+    def loss_for(p, b):
+        return model_lib.loss_fn(p, cfg, b, ctx=ctx)
+
+    def compute_grads(params, batch):
+        if not microbatch:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+            return grads, metrics
+
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        assert gb % microbatch == 0, (gb, microbatch)
+        n_micro = gb // microbatch
+        stacked = jax.tree.map(
+            lambda x: x.reshape((n_micro, microbatch) + x.shape[1:]), batch)
+
+        def body(acc, mb):
+            (_, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_micro, acc, grads)
+            return acc, metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, metrics = jax.lax.scan(body, zeros, stacked)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        lr = sched(opt_state["step"])
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Drives the step function with fault tolerance.
+
+    * auto-resume: scans `checkpoint_dir` at startup and restores the latest
+      complete checkpoint (params, optimizer, data state).
+    * preemption: `preempt_check()` (injectable — SIGTERM flag, file flag, or
+      test hook) triggers an immediate checkpoint + clean exit.
+    * straggler watchdog: logs steps slower than `straggler_factor` × the
+      running median (on real fleets this feeds the controller's evictions;
+      here it is observability + tests).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        *,
+        ctx: Optional[ParallelCtx] = None,
+        preempt_check: Optional[Callable[[], bool]] = None,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.ctx = ctx
+        self.preempt_check = preempt_check or (lambda: False)
+        self.log = log_fn
+        self.ckpt = Checkpointer(tcfg.checkpoint_dir)
+        self.corpus = SyntheticCorpus(cfg.vocab_size, seed=tcfg.seed)
+        self.step_times = []
+
+        self.compressed = bool(
+            tcfg.compressed_pod_grads and ctx is not None
+            and ctx.mesh is not None and "pod" in ctx.mesh.axis_names)
+        if self.compressed:
+            from repro.train.compressed_dp import make_compressed_train_step
+            step_fn = make_compressed_train_step(cfg, tcfg.optimizer, ctx)
+            self.train_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        else:
+            step_fn = make_train_step(cfg, tcfg.optimizer, ctx=ctx,
+                                      microbatch=tcfg.microbatch)
+            self.train_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def _place(self, params, opt_state):
+        """On a mesh, lay params/optimizer out per the sharding rules (the
+        elastic-restart path flows through here too: restored host arrays are
+        device_put with the *current* mesh's shardings)."""
+        if self.ctx is None or self.ctx.mesh is None:
+            return params, opt_state
+        from repro.parallel.sharding import param_shardings
+        p_sh = param_shardings(params, self.ctx)
+        params = jax.tree.map(jax.device_put, params, p_sh)
+        opt_state = {
+            "mu": jax.tree.map(jax.device_put, opt_state["mu"],
+                               param_shardings(opt_state["mu"], self.ctx)),
+            "nu": jax.tree.map(jax.device_put, opt_state["nu"],
+                               param_shardings(opt_state["nu"], self.ctx)),
+            "step": opt_state["step"],
+        }
+        return params, opt_state
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, rng: Optional[jax.Array] = None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.tcfg.seed)
+        params = model_lib.init_params(rng, self.cfg)
+        opt_state = adamw_init(params, self.tcfg.optimizer)
+        if self.compressed:
+            from repro.train.compressed_dp import init_residual
+            self._residual = init_residual(
+                params, self.ctx.mesh.shape["pod"])
+        return params, opt_state, DataState(self.tcfg.seed, 0)
+
+    def restore_or_init(self):
+        params, opt_state, dstate = self.init_state()
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            tmpl = {"params": params, "opt_state": opt_state}
+            if self.compressed:
+                tmpl["residual"] = self._residual
+            restored, meta = self.ckpt.restore(latest, tmpl)
+            params, opt_state = restored["params"], restored["opt_state"]
+            if self.compressed:
+                self._residual = restored["residual"]
+            dstate = DataState.from_dict(meta["data_state"])
+            params, opt_state = self._place(params, opt_state)
+            self.log(f"[trainer] resumed from step {latest}")
+            return params, opt_state, dstate, latest
+        params, opt_state = self._place(params, opt_state)
+        return params, opt_state, dstate, 0
+
+    def save(self, step, params, opt_state, dstate):
+        state = {"params": params, "opt_state": opt_state}
+        if self.compressed:
+            state["residual"] = self._residual
+        self.ckpt.save(step, state,
+                       metadata={"data_state": dstate.to_dict()})
+
+    # -- loop ---------------------------------------------------------------
+
+    def run(self, steps: Optional[int] = None) -> Dict[str, float]:
+        tcfg = self.tcfg
+        steps = steps if steps is not None else tcfg.steps
+        params, opt_state, dstate, start = self.restore_or_init()
+        stream = pipeline.batches(
+            self.corpus, dstate, batch=tcfg.global_batch, seq=tcfg.seq_len,
+            objective=self.cfg.objective, mask_prob=tcfg.mlm_mask_prob)
+        last_metrics: Dict[str, float] = {}
+        for step in range(start, steps):
+            np_batch, dstate = next(stream)
+            batch = jax.tree.map(jnp.asarray, np_batch)
+            t0 = time.perf_counter()
+            if self.compressed:
+                params, opt_state, self._residual, metrics = self.train_step(
+                    params, opt_state, self._residual, batch)
+            else:
+                params, opt_state, metrics = self.train_step(params,
+                                                             opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            self._watchdog(step, dt)
+            last_metrics = metrics
+            if (step + 1) % tcfg.log_every == 0:
+                self.log(f"[trainer] step {step + 1} "
+                         f"loss={metrics['loss']:.4f} "
+                         f"gnorm={metrics['grad_norm']:.3f} {dt * 1e3:.0f}ms")
+            if (step + 1) % tcfg.checkpoint_every == 0:
+                self.save(step + 1, params, opt_state, dstate)
+            if self.preempt_check():
+                self.save(step + 1, params, opt_state, dstate)
+                self.log(f"[trainer] preempted at step {step + 1}; "
+                         "checkpointed and exiting")
+                last_metrics["preempted_at"] = step + 1
+                return last_metrics
+        self.save(steps, params, opt_state, dstate)
+        self._params = params
+        return last_metrics
+
+    def _watchdog(self, step: int, dt: float, factor: float = 2.0):
+        if len(self.step_times) >= 8:
+            med = float(np.median(self.step_times[-32:]))
+            if dt > factor * med:
+                self.log(f"[watchdog] step {step} took {dt:.3f}s "
+                         f"(median {med:.3f}s) — straggler")

@@ -1,0 +1,41 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device;
+the multi-device dry-run tests spawn subprocesses with their own flags."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def f32(cfg):
+    """Smoke configs in float32 for numerically tight assertions."""
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng_ = jax.random.PRNGKey(seed)
+    if cfg.embedding_inputs:
+        return {
+            "embeds": jax.random.normal(rng_, (B, S, cfg.d_model),
+                                        jnp.float32),
+            "labels": jnp.zeros((B, S), jnp.int32),
+            "loss_mask": jnp.ones((B, S), jnp.int32),
+        }
+    text = S - cfg.frontend_embed_len
+    toks = jax.random.randint(rng_, (B, text), 0, cfg.vocab_size)
+    b = {
+        "tokens": toks,
+        "labels": toks,
+        "loss_mask": jnp.ones((B, text), jnp.int32),
+    }
+    if cfg.frontend_embed_len:
+        b["frontend_embeds"] = jax.random.normal(
+            jax.random.fold_in(rng_, 1),
+            (B, cfg.frontend_embed_len, cfg.d_model), jnp.float32)
+    return b

@@ -1,0 +1,190 @@
+"""Core Linformer (paper Eq. 7): equivalences, sharing modes, projections."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionConfig, LinformerConfig
+from repro.core import (attend_compressed, exact_linformer_attention,
+                        init_linformer_params, num_projection_matrices,
+                        project_kv)
+from repro.core.causal import NEG_INF
+from repro.core.projections import (blockwise_project, conv_as_linear,
+                                    effective_k, linear_project, pool_weights)
+
+
+def _qkv(B=2, S=32, H=4, Hkv=2, Dh=8, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, S, H, Dh)),
+            jax.random.normal(ks[1], (B, S, Hkv, Dh)),
+            jax.random.normal(ks[2], (B, S, Hkv, Dh)))
+
+
+def _std_attention(q, k, v, causal=False):
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    qg = q.reshape(B, S, Hkv, H // Hkv, Dh)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, k) / np.sqrt(Dh)
+    if causal:
+        s = jnp.where(jnp.tril(jnp.ones((S, S), bool)), s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhgst,bthd->bshgd", p, v).reshape(B, S, H, Dh)
+
+
+class TestExactForm:
+    def test_identity_projection_recovers_standard_attention(self):
+        q, k, v = _qkv()
+        E = jnp.eye(32)
+        out = exact_linformer_attention(q, k, v, E, E)
+        np.testing.assert_allclose(out, _std_attention(q, k, v), atol=2e-5)
+
+    def test_output_shape_and_linear_cost_shape(self):
+        q, k, v = _qkv(S=64)
+        E = jax.random.normal(jax.random.PRNGKey(9), (64, 8)) * 0.3
+        kbar, vbar = project_kv(k, v, E, E)
+        assert kbar.shape == (2, 8, 2, 8)           # (B, k, Hkv, Dh)
+        out = exact_linformer_attention(q, k, v, E, E)
+        assert out.shape == q.shape
+
+    def test_e_rows_sliced_for_short_sequences(self):
+        q, k, v = _qkv(S=16)
+        E = jax.random.normal(jax.random.PRNGKey(9), (64, 8)) * 0.3
+        out = exact_linformer_attention(q, k, v, E, E)
+        out2 = exact_linformer_attention(q, k, v, E[:16], E[:16])
+        np.testing.assert_allclose(out, out2, atol=1e-6)
+
+    def test_key_padding_zeroed_before_compression(self):
+        q, k, v = _qkv()
+        E = jax.random.normal(jax.random.PRNGKey(9), (32, 8)) * 0.3
+        mask = jnp.ones((2, 32), bool).at[:, 20:].set(False)
+        out1 = exact_linformer_attention(q, k, v, E, E,
+                                         key_padding_mask=mask)
+        # zeroing the padded keys/values by hand must be identical
+        keep = mask[:, :, None, None]
+        out2 = exact_linformer_attention(q, k * keep, v * keep, E, E)
+        np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+    def test_per_head_projection(self):
+        q, k, v = _qkv()
+        E = jax.random.normal(jax.random.PRNGKey(4), (2, 32, 8)) * 0.3
+        out = exact_linformer_attention(q, k, v, E, E)
+        assert out.shape == q.shape
+        # head 0 result must differ from shared-E result
+        out_shared = exact_linformer_attention(q, k, v, E[0], E[0])
+        assert not np.allclose(out, out_shared)
+
+
+class TestSharing:
+    def _cfg(self, sharing):
+        return AttentionConfig(
+            kind="linformer", num_heads=12, num_kv_heads=12, head_dim=16,
+            linformer=LinformerConfig(k=8, sharing=sharing))
+
+    @pytest.mark.parametrize("sharing,expected", [
+        ("headwise", 24), ("kv", 12), ("layerwise", 1), ("none", 288)])
+    def test_distinct_matrix_counts_paper_s4(self, sharing, expected):
+        # paper §4: 12-layer 12-head -> headwise 24, kv 12, layerwise 1
+        cfg = self._cfg(sharing)
+        assert num_projection_matrices(cfg, 12) == expected
+
+    @pytest.mark.parametrize("sharing", ["headwise", "kv", "layerwise", "none"])
+    def test_init_shapes(self, sharing):
+        cfg = self._cfg(sharing)
+        p = init_linformer_params(jax.random.PRNGKey(0), cfg, num_layers=3,
+                                  max_seq=64)
+        if sharing == "layerwise":
+            assert p["shared"]["E"].shape == (64, 8)
+        elif sharing == "none":
+            assert p["per_layer"]["E"].shape == (3, 12, 64, 8)
+        else:
+            assert p["per_layer"]["E"].shape == (3, 64, 8)
+        if sharing == "headwise":
+            assert "F" in p["per_layer"]
+        if sharing == "kv":
+            assert "F" not in p["per_layer"]
+
+
+class TestProjections:
+    def test_conv_is_blockdiagonal_linear(self):
+        # paper §4 "general projections": conv(kernel=stride=c) == structured E
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 2, 8))
+        W = jax.random.normal(jax.random.PRNGKey(1), (8, 2)) * 0.5
+        blockwise = blockwise_project(x, W)
+        E = conv_as_linear(W, 32)
+        dense = linear_project(x, E)
+        np.testing.assert_allclose(blockwise, dense, atol=1e-5)
+
+    def test_pool_weights_rows_average(self):
+        w = pool_weights(8, 2)
+        assert w.shape == (8, 2)
+        np.testing.assert_allclose(w.sum(axis=0), [1.0, 1.0], atol=1e-6)
+        x = jnp.ones((1, 8, 1, 4))
+        out = blockwise_project(x, w)
+        np.testing.assert_allclose(out, jnp.ones((1, 2, 1, 4)), atol=1e-6)
+
+    def test_effective_k_nonuniform(self):
+        # paper §4: higher layers can use smaller k
+        ks = [effective_k(128, 0.25, i, 12) for i in range(12)]
+        assert ks[0] == 128
+        assert ks[-1] == 32
+        assert all(a >= b for a, b in zip(ks, ks[1:]))
+        assert effective_k(128, 1.0, 5, 12) == 128
+
+
+class TestNonuniformK:
+    """Paper §4: smaller projected dimension in higher layers, end to end
+    (unscanned encoder path — per-layer E shapes differ)."""
+
+    def test_encoder_with_k_decay_runs_and_shrinks(self):
+        import dataclasses
+        import jax
+        from repro.configs import get_smoke_config
+        from repro.models import model as M
+
+        base = get_smoke_config("linformer-paper")
+        cfg = dataclasses.replace(
+            base, dtype="float32", num_layers=4, scan_layers=False,
+            attention=dataclasses.replace(
+                base.attention,
+                linformer=dataclasses.replace(base.attention.linformer,
+                                              k=16, sharing="headwise",
+                                              k_decay=0.25)))
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        ks = [blk["attn"]["lin"]["E"].shape[-1]
+              for blk in params["layers_list"]]
+        assert ks[0] == 16 and ks[-1] == 4
+        assert all(a >= b for a, b in zip(ks, ks[1:]))
+        toks = jnp.ones((2, 32), jnp.int32)
+        batch = {"tokens": toks, "labels": toks,
+                 "loss_mask": jnp.ones((2, 32), jnp.int32)}
+        loss, _ = M.loss_fn(params, cfg, batch)
+        assert bool(jnp.isfinite(loss))
+        g = jax.grad(lambda p: M.loss_fn(p, cfg, batch)[0])(params)
+        assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+
+
+class TestAttendCompressed:
+    def test_kv_mask(self):
+        q, k, v = _qkv()
+        E = jax.random.normal(jax.random.PRNGKey(2), (32, 8)) * 0.3
+        kbar, vbar = project_kv(k, v, E, E)
+        mask = jnp.arange(8) < 4
+        out = attend_compressed(q, kbar, vbar, kv_mask=mask)
+        out2 = attend_compressed(q, kbar[:, :4], vbar[:, :4])
+        np.testing.assert_allclose(out, out2, atol=1e-5)
+
+    def test_output_in_convex_hull_of_values(self):
+        q, k, v = _qkv()
+        E = jax.random.normal(jax.random.PRNGKey(2), (32, 8)) * 0.3
+        kbar, vbar = project_kv(k, v, E, E)
+        out = attend_compressed(q, kbar, vbar)
+        # softmax mixture => outputs bounded by compressed-value extremes
+        hi = vbar.max(axis=1)[:, None]
+        lo = vbar.min(axis=1)[:, None]
+        G = q.shape[2] // vbar.shape[2]
+        hi = jnp.repeat(hi, G, axis=2)
+        lo = jnp.repeat(lo, G, axis=2)
+        assert bool(jnp.all(out <= hi + 1e-5))
+        assert bool(jnp.all(out >= lo - 1e-5))

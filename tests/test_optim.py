@@ -1,0 +1,103 @@
+"""Optimizer: AdamW math, schedules, clipping, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
+    global_norm, make_schedule
+from repro.optim.grad_utils import (compress_with_feedback, decompress,
+                                    dequantize_int8, quantize_int8)
+
+
+class TestAdamW:
+    def test_matches_reference_formula(self):
+        cfg = OptimizerConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                              weight_decay=0.0)
+        p = {"w": jnp.array([[1.0, -2.0]]), "b": jnp.array([0.5])}
+        g = {"w": jnp.array([[0.1, 0.2]]), "b": jnp.array([-0.3])}
+        st = adamw_init(p, cfg)
+        newp, st = adamw_update(g, st, p, cfg, jnp.asarray(0.1))
+        # step 1: mhat = g, vhat = g^2  =>  delta = g/(|g|+eps) = sign(g)
+        np.testing.assert_allclose(newp["w"], p["w"] - 0.1 * np.sign(g["w"]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(newp["b"], p["b"] - 0.1 * np.sign(g["b"]),
+                                   atol=1e-5)
+
+    def test_weight_decay_applies_to_matrices_only(self):
+        cfg = OptimizerConfig(lr=1.0, weight_decay=0.1)
+        p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        g = jax.tree.map(jnp.zeros_like, p)
+        st = adamw_init(p, cfg)
+        newp, _ = adamw_update(g, st, p, cfg, jnp.asarray(1.0))
+        assert float(newp["w"][0, 0]) == pytest.approx(0.9)
+        assert float(newp["b"][0]) == pytest.approx(1.0)
+
+    def test_bf16_moments(self):
+        cfg = OptimizerConfig(moment_dtype="bfloat16")
+        p = {"w": jnp.ones((4, 4))}
+        st = adamw_init(p, cfg)
+        assert st["mu"]["w"].dtype == jnp.bfloat16
+        g = {"w": jnp.full((4, 4), 0.01)}
+        newp, st = adamw_update(g, st, p, cfg, jnp.asarray(1e-2))
+        assert bool(jnp.isfinite(newp["w"]).all())
+
+    def test_convergence_on_quadratic(self):
+        cfg = OptimizerConfig(lr=0.1, warmup_steps=0, weight_decay=0.0)
+        p = {"x": jnp.array([5.0, -3.0])}
+        st = adamw_init(p, cfg)
+        for _ in range(200):
+            g = {"x": 2 * p["x"]}
+            p, st = adamw_update(g, st, p, cfg, jnp.asarray(0.1))
+        assert float(jnp.abs(p["x"]).max()) < 0.1
+
+
+class TestSchedules:
+    def test_warmup_then_cosine(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                              schedule="cosine")
+        lr = make_schedule(cfg)
+        assert float(lr(0)) == 0.0
+        assert float(lr(5)) == pytest.approx(0.5)
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(110)) == pytest.approx(0.0, abs=1e-6)
+        assert float(lr(60)) == pytest.approx(0.5, abs=1e-6)
+
+    def test_linear_and_constant(self):
+        lin = make_schedule(OptimizerConfig(lr=2.0, warmup_steps=0,
+                                            total_steps=100,
+                                            schedule="linear"))
+        assert float(lin(50)) == pytest.approx(1.0)
+        const = make_schedule(OptimizerConfig(lr=2.0, warmup_steps=0,
+                                              schedule="constant"))
+        assert float(const(1000)) == pytest.approx(2.0)
+
+
+class TestGradUtils:
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((10,), 3.0)}
+        clipped, gn = clip_by_global_norm(g, 1.0)
+        assert float(gn) == pytest.approx(np.sqrt(90.0), rel=1e-5)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+        # under the limit -> unchanged
+        g2 = {"a": jnp.full((4,), 0.01)}
+        clipped2, _ = clip_by_global_norm(g2, 1.0)
+        np.testing.assert_allclose(clipped2["a"], g2["a"], atol=1e-7)
+
+    def test_quantize_roundtrip_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 7
+        q, s = quantize_int8(x)
+        err = jnp.abs(dequantize_int8(q, s) - x)
+        assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_is_unbiased_over_steps(self):
+        """With a constant gradient, EF-compressed sum converges to true sum."""
+        g = {"w": jnp.array([0.001, 0.5, -0.3])}
+        res = None
+        total = jnp.zeros(3)
+        n = 50
+        for _ in range(n):
+            comp, res = compress_with_feedback(g, res)
+            total = total + decompress(comp)["w"]
+        np.testing.assert_allclose(total / n, g["w"], atol=2e-3)

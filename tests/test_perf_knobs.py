@@ -1,0 +1,84 @@
+"""§Perf optimization knobs must be exact-equivalence transforms."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from tests.conftest import f32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = f32(get_smoke_config("qwen3-8b"))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks,
+             "loss_mask": jnp.ones((2, 32), jnp.int32)}
+    return cfg, p, batch
+
+
+def test_single_pass_cache_identical(setup):
+    cfg, p, batch = setup
+    _, _, two = M.forward(p, cfg, batch, return_cache=True, cache_max_seq=64,
+                          cache_dtype=jnp.float32)
+    cfg1 = dataclasses.replace(cfg, single_pass_cache=True)
+    _, _, one = M.forward(p, cfg1, batch, return_cache=True, cache_max_seq=64,
+                          cache_dtype=jnp.float32)
+    for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(two)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_single_pass_cache_decodes_correctly(setup):
+    cfg, p, batch = setup
+    cfg1 = dataclasses.replace(cfg, single_pass_cache=True)
+    full, _, _ = M.forward(p, cfg, {**batch, "tokens": batch["tokens"]})
+    logits, _, cache = M.forward(p, cfg1,
+                                 {"tokens": batch["tokens"][:, :16]},
+                                 return_cache=True, cache_max_seq=64,
+                                 cache_dtype=jnp.float32)
+    for t in range(16, 32):
+        lg, cache = M.decode_step(p, cfg1,
+                                  {"tokens": batch["tokens"][:, t:t + 1]},
+                                  cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, t]), atol=2e-4,
+                                   rtol=2e-3)
+
+
+def test_chunked_ce_matches_full(setup):
+    cfg, p, batch = setup
+    cfgc = dataclasses.replace(cfg, chunked_ce=8)
+    l0, m0 = M.loss_fn(p, cfg, batch)
+    l1, m1 = M.loss_fn(p, cfgc, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+    g0 = jax.grad(lambda pp: M.loss_fn(pp, cfg, batch)[0])(p)
+    g1 = jax.grad(lambda pp: M.loss_fn(pp, cfgc, batch)[0])(p)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_chunked_ce_non_divisible_falls_back(setup):
+    cfg, p, batch = setup
+    cfgc = dataclasses.replace(cfg, chunked_ce=7)   # 32 % 7 != 0
+    l1, _ = M.loss_fn(p, cfgc, batch)
+    l0, _ = M.loss_fn(p, cfg, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+
+
+def test_moe_capacity_floor_one_smoke():
+    cfg = f32(get_smoke_config("kimi-k2-1t-a32b"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_floor_one=True,
+                                     capacity_factor=8.0))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.ones((2, 32), jnp.int32)
+    batch = {"tokens": toks, "labels": toks,
+             "loss_mask": jnp.ones((2, 32), jnp.int32)}
+    loss, _ = M.loss_fn(p, cfg, batch)
+    assert bool(jnp.isfinite(loss))

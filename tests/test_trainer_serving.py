@@ -1,0 +1,161 @@
+"""Trainer fault tolerance + serving engine behaviour."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import OptimizerConfig, TrainConfig
+from repro.models import model as M
+from repro.serving import ServingEngine
+from repro.serving.engine import bucket_requests
+from repro.train import Trainer
+from tests.conftest import f32
+
+
+def _tcfg(tmp_path, **kw):
+    base = dict(seq_len=32, global_batch=4, steps=10, log_every=100,
+                checkpoint_every=5, checkpoint_dir=str(tmp_path),
+                optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                          total_steps=100))
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+class TestTrainer:
+    def test_loss_decreases(self, tmp_path):
+        cfg = f32(get_smoke_config("qwen3-8b"))
+        tr = Trainer(cfg, _tcfg(tmp_path, steps=30), log_fn=lambda s: None)
+        params, opt, ds = tr.init_state()
+        stream_losses = []
+        from repro.data import pipeline
+        stream = pipeline.batches(tr.corpus, ds, batch=4, seq=32)
+        for step in range(30):
+            b, ds = next(stream)
+            batch = jax.tree.map(jnp.asarray, b)
+            params, opt, m = tr.train_step(params, opt, batch)
+            stream_losses.append(float(m["loss"]))
+        assert np.mean(stream_losses[-5:]) < np.mean(stream_losses[:5]) - 0.3
+
+    def test_preemption_checkpoint_and_resume(self, tmp_path):
+        cfg = f32(get_smoke_config("qwen3-8b"))
+        calls = {"n": 0}
+
+        def preempt():
+            calls["n"] += 1
+            return calls["n"] == 3          # preempt at step 3
+
+        tr = Trainer(cfg, _tcfg(tmp_path), preempt_check=preempt,
+                     log_fn=lambda s: None)
+        m = tr.run()
+        assert m["preempted_at"] == 3
+        # resume continues from the preemption checkpoint
+        tr2 = Trainer(cfg, _tcfg(tmp_path), log_fn=lambda s: None)
+        params, opt, ds, start = tr2.restore_or_init()
+        assert start == 3
+        assert ds.step == 3                 # data stream resumes exactly
+        m2 = tr2.run()
+        assert "preempted_at" not in m2
+
+    def test_resume_reproduces_batch_stream(self, tmp_path):
+        """No skipped/duplicated data after failover (DESIGN §6)."""
+        from repro.data import DataState, SyntheticCorpus, pipeline
+        c = SyntheticCorpus(512, seed=0)
+        full = []
+        stream = pipeline.batches(c, DataState(0, 0), batch=2, seq=16)
+        for _ in range(6):
+            b, st = next(stream)
+            full.append(b["tokens"])
+        resumed = []
+        stream2 = pipeline.batches(c, DataState(0, 3), batch=2, seq=16)
+        for _ in range(3):
+            b, st = next(stream2)
+            resumed.append(b["tokens"])
+        for a, b in zip(full[3:], resumed):
+            np.testing.assert_array_equal(a, b)
+
+    def test_microbatch_accumulation_close_to_full_batch(self, tmp_path):
+        cfg = f32(get_smoke_config("qwen3-8b"))
+        from repro.train.trainer import make_train_step
+        from repro.optim import adamw_init
+        ocfg = OptimizerConfig(lr=1e-3, warmup_steps=0)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params, ocfg)
+        from repro.data import DataState, SyntheticCorpus, make_causal_batch
+        b = jax.tree.map(jnp.asarray, make_causal_batch(
+            SyntheticCorpus(512), DataState(0, 0), batch=4, seq=32))
+        full = make_train_step(cfg, ocfg)(params, opt, b)
+        micro = make_train_step(cfg, ocfg, microbatch=2)(params, opt, b)
+        np.testing.assert_allclose(float(full[2]["loss"]),
+                                   float(micro[2]["loss"]), rtol=1e-4)
+        w_f = jax.tree.leaves(full[0])[0]
+        w_m = jax.tree.leaves(micro[0])[0]
+        np.testing.assert_allclose(w_f, w_m, atol=5e-5)
+
+    def test_straggler_watchdog_logs(self, tmp_path):
+        cfg = f32(get_smoke_config("qwen3-8b"))
+        logs = []
+        tr = Trainer(cfg, _tcfg(tmp_path), log_fn=logs.append)
+        tr.step_times = [0.1] * 10
+        tr._watchdog(11, 0.5)
+        assert any("straggler" in l for l in logs)
+
+
+class TestServing:
+    def _engine(self, arch="qwen3-8b", temperature=0.0):
+        cfg = f32(get_smoke_config(arch))
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return ServingEngine(params, cfg, max_seq=128,
+                             cache_dtype=jnp.float32,
+                             temperature=temperature), cfg, params
+
+    def test_bucket_requests(self):
+        prompts = [[1] * 4, [1] * 7, [2] * 4, [3] * 4, [1] * 7]
+        buckets = bucket_requests(prompts, max_batch=2)
+        for b in buckets:
+            lens = {len(prompts[i]) for i in b}
+            assert len(lens) == 1
+            assert len(b) <= 2
+        assert sorted(i for b in buckets for i in b) == [0, 1, 2, 3, 4]
+
+    def test_greedy_generation_matches_manual_decode(self):
+        eng, cfg, params = self._engine()
+        prompt = np.array([[1, 5, 9, 2, 7, 4, 8, 3] * 2], np.int32)  # 16 = block multiple
+        out = eng.generate_batch(prompt, max_new_tokens=4)
+        # manual: full forward for first token, then stepwise
+        logits, _, cache = M.forward(
+            params, cfg, {"tokens": jnp.asarray(prompt)}, return_cache=True,
+            cache_max_seq=128, cache_dtype=jnp.float32)
+        cur = int(jnp.argmax(logits[:, -1], -1)[0])
+        toks = [cur]
+        for _ in range(3):
+            lg, cache = M.decode_step(
+                params, cfg, {"tokens": jnp.asarray([[cur]], jnp.int32)},
+                cache)
+            cur = int(jnp.argmax(lg[0, 0]))
+            toks.append(cur)
+        assert out[0].tolist() == toks
+
+    def test_prefill_with_remainder_tokens(self):
+        """Prompt length not a multiple of the block: remainder decodes."""
+        eng, cfg, params = self._engine()
+        p1 = np.array([[1, 5, 9, 2, 7, 4, 8, 3, 6, 1, 2, 3, 4, 5, 6, 7, 9, 9,
+                        9]], np.int32)       # 19 tokens, block=16
+        out = eng.generate_batch(p1, max_new_tokens=3)
+        assert out.shape == (1, 3)
+
+    def test_serve_mixed_lengths(self):
+        eng, cfg, params = self._engine()
+        prompts = [[1, 2, 3], [4, 5, 6], [1, 2, 3, 4, 5, 6, 7, 8]]
+        outs = eng.serve(prompts, max_new_tokens=4, max_batch=2)
+        assert len(outs) == 3
+        assert all(len(o) <= 4 for o in outs)
+
+    def test_compressed_cache_smaller_than_full(self):
+        eng_lin, cfg, params = self._engine()
+        cfg_std = cfg.with_attention_kind("standard")
+        eng_std = ServingEngine(params, cfg_std, max_seq=128,
+                                cache_dtype=jnp.float32)
+        assert eng_lin.cache_bytes(4) < eng_std.cache_bytes(4)
