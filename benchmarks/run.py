@@ -20,9 +20,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (figure1_spectrum, figure3_pretrain, roofline,
-                            table1_complexity, table2_downstream,
-                            table3_efficiency)
+    from benchmarks import (decode_throughput, figure1_spectrum,
+                            figure3_pretrain, roofline, table1_complexity,
+                            table2_downstream, table3_efficiency)
     benches = {
         "table1_complexity": table1_complexity.run,
         "figure1_spectrum": figure1_spectrum.run,
@@ -30,6 +30,7 @@ def main() -> None:
         "table2_downstream": table2_downstream.run,
         "table3_efficiency": table3_efficiency.run,
         "roofline": roofline.run,
+        "decode_throughput": decode_throughput.run,
     }
     if args.only:
         keep = set(args.only.split(","))

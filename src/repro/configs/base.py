@@ -45,6 +45,12 @@ class LinformerConfig:
 @dataclass(frozen=True)
 class AttentionConfig:
     kind: str = "standard"          # "standard" | "linformer" | "linformer_causal"
+    # compute backend for the linformer kinds:
+    #   "auto"      — resolved per platform by kernels/ops.resolve_backend
+    #                 (fused Pallas kernels: Mosaic on TPU, interpret on CPU)
+    #   "fused"     — force the Pallas kernel path
+    #   "reference" — force the pure-jnp einsum implementations
+    backend: str = "auto"
     num_heads: int = 8
     num_kv_heads: int = 8           # GQA: kv heads (== num_heads -> MHA)
     head_dim: int = 64
@@ -174,6 +180,11 @@ class ModelConfig:
     def with_attention_kind(self, kind: str) -> "ModelConfig":
         return dataclasses.replace(
             self, attention=dataclasses.replace(self.attention, kind=kind)
+        )
+
+    def with_attention_backend(self, backend: str) -> "ModelConfig":
+        return dataclasses.replace(
+            self, attention=dataclasses.replace(self.attention, backend=backend)
         )
 
     @property

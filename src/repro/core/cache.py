@@ -60,12 +60,18 @@ def compressed_decode_attention(
     t: jax.Array,             # () int32 — number of tokens already cached
     *,
     scale: Optional[float] = None,
+    backend: str = "reference",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode step of blockwise-causal Linformer attention.
 
     Appends (k_t, v_t) at position t, attends [raw block ≤ t | compressed
     prefix blocks], and folds the block into r compressed slots when t
     completes it. Returns (out (B,1,H,Dh), updated per-layer cache).
+
+    backend="fused" routes the attention math through the masked Pallas
+    kernel (kernels/ops.fused_decode_attention): the GQA group axis is folded
+    into the kernel's query axis — K/V are never repeated — and slot validity
+    is an additive score bias. Cache bookkeeping is identical either way.
     """
     raw_k, raw_v = layer_cache["raw_k"], layer_cache["raw_v"]
     comp_k, comp_v = layer_cache["comp_k"], layer_cache["comp_v"]
@@ -84,21 +90,33 @@ def compressed_decode_attention(
     raw_v = jax.lax.dynamic_update_slice_in_dim(raw_v, v_t.astype(raw_v.dtype),
                                                 pos, axis=1)
 
-    qg = q_t.reshape(B, Hkv, G, Dh)
-    # local scores over the raw ring buffer
-    s_loc = jnp.einsum("bhgd,bkhd->bhgk", qg, raw_k).astype(jnp.float32) * scale_
     loc_ok = jnp.arange(c) <= pos
-    s_loc = jnp.where(loc_ok[None, None, None, :], s_loc, NEG_INF)
-    # global scores over compressed slots of completed previous blocks
-    s_glob = jnp.einsum("bhgd,bmhd->bhgm", qg, comp_k).astype(jnp.float32) * scale_
     glob_ok = jnp.arange(M) < blk * r
-    s_glob = jnp.where(glob_ok[None, None, None, :], s_glob, NEG_INF)
+    if backend == "fused":
+        from repro.kernels import ops as kernel_ops
+        bias = jnp.where(jnp.concatenate([loc_ok, glob_ok]),
+                         0.0, NEG_INF).astype(jnp.float32)
+        out = kernel_ops.fused_decode_attention(
+            q_t,
+            jnp.concatenate([raw_k, comp_k], axis=1),
+            jnp.concatenate([raw_v, comp_v], axis=1),
+            bias, scale=scale_)
+    else:
+        qg = q_t.reshape(B, Hkv, G, Dh)
+        # local scores over the raw ring buffer
+        s_loc = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                           raw_k).astype(jnp.float32) * scale_
+        s_loc = jnp.where(loc_ok[None, None, None, :], s_loc, NEG_INF)
+        # global scores over compressed slots of completed previous blocks
+        s_glob = jnp.einsum("bhgd,bmhd->bhgm", qg,
+                            comp_k).astype(jnp.float32) * scale_
+        s_glob = jnp.where(glob_ok[None, None, None, :], s_glob, NEG_INF)
 
-    s = jnp.concatenate([s_loc, s_glob], axis=-1)
-    p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
-    out = jnp.einsum("bhgk,bkhd->bhgd", p[..., :c], raw_v)
-    out = out + jnp.einsum("bhgm,bmhd->bhgd", p[..., c:], comp_v)
-    out = out.reshape(B, 1, H, Dh)
+        s = jnp.concatenate([s_loc, s_glob], axis=-1)
+        p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
+        out = jnp.einsum("bhgk,bkhd->bhgd", p[..., :c], raw_v)
+        out = out + jnp.einsum("bhgm,bmhd->bhgd", p[..., c:], comp_v)
+        out = out.reshape(B, 1, H, Dh)
 
     # fold the block into compressed slots when it completes (pos == c-1).
     # Compute unconditionally (O(c·r·Dh·Hkv), tiny) and commit via select —

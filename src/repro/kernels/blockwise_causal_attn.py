@@ -11,6 +11,10 @@ Grid: (B·H, nb). Blocks:
   k̄, v̄           : (1, M, Dh)   — pinned
   out             : (1, c, Dh)
 
+GQA: K/V carry their native Hkv heads; the index maps route grid row
+b·H + h to kv row b·Hkv + h//G (G = H/Hkv), so grouped query heads share
+one kv stream without any jnp.repeat materialization in HBM.
+
 Causality: local scores use a (c, c) lower-triangular mask; global scores
 mask slots whose owning block ≥ the current grid block (slot i belongs to
 block i // r).
@@ -67,9 +71,9 @@ def _kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, out_ref, *,
 
 def blockwise_causal_attn(
     q: jax.Array,       # (B, H, S, Dh)
-    k: jax.Array,       # (B, H, S, Dh)  (kv heads pre-repeated to H)
+    k: jax.Array,       # (B, Hkv, S, Dh) — native kv heads, H % Hkv == 0
     v: jax.Array,
-    kbar: jax.Array,    # (B, H, M, Dh)  compressed slots, M = (S/c)*r
+    kbar: jax.Array,    # (B, Hkv, M, Dh)  compressed slots, M = (S/c)*r
     vbar: jax.Array,
     *,
     block_size: int,
@@ -78,26 +82,34 @@ def blockwise_causal_attn(
     interpret: bool = False,
 ) -> jax.Array:
     B, H, S, Dh = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
     c = block_size
     assert S % c == 0
     nb = S // c
     M = kbar.shape[2]
     assert M == nb * block_slots, (M, nb, block_slots)
     q3 = q.reshape(B * H, S, Dh)
-    k3 = k.reshape(B * H, S, Dh)
-    v3 = v.reshape(B * H, S, Dh)
-    kb3 = kbar.reshape(B * H, M, Dh)
-    vb3 = vbar.reshape(B * H, M, Dh)
+    k3 = k.reshape(B * Hkv, S, Dh)
+    v3 = v.reshape(B * Hkv, S, Dh)
+    kb3 = kbar.reshape(B * Hkv, M, Dh)
+    vb3 = vbar.reshape(B * Hkv, M, Dh)
+
+    # grid row b·H + h reads kv row b·Hkv + h//G — the GQA group share
+    # happens in the index map, never as a repeated HBM tensor.
+    def kv_row(bh):
+        return (bh // H) * Hkv + (bh % H) // G
 
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, r=block_slots),
         grid=(B * H, nb),
         in_specs=[
             pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
-            pl.BlockSpec((1, M, Dh), lambda bh, n: (bh, 0, 0)),
-            pl.BlockSpec((1, M, Dh), lambda bh, n: (bh, 0, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),

@@ -14,6 +14,11 @@ Grid: (B·H, S / bq). Block shapes:
   q    (1, bq, Dh)   — streamed per grid step
   k̄,v̄  (1, k,  Dh)   — pinned (same block for every s-step)
   out  (1, bq, Dh)
+
+An optional additive score `bias` (k,) supports slot-validity masking (0 for
+attendable slots, NEG_INF otherwise) — used by the single-token decode path,
+where the attendable prefix of [raw block | compressed slots] depends on the
+current position.
 """
 from __future__ import annotations
 
@@ -24,19 +29,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(q_ref, kbar_ref, vbar_ref, out_ref, *, scale: float):
-    q = q_ref[0]                                   # (bq, Dh)
-    kbar = kbar_ref[0]                             # (k, Dh)
-    vbar = vbar_ref[0]
+def _softmax_attend(q, kbar, vbar, scale, bias=None):
     s = jax.lax.dot_general(
         q, kbar, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale          # (bq, k)
+    if bias is not None:
+        s = s + bias
     s = s - jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
-    out = jax.lax.dot_general(
+    return jax.lax.dot_general(
         p.astype(vbar.dtype), vbar, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+
+
+def _kernel(q_ref, kbar_ref, vbar_ref, out_ref, *, scale: float):
+    out = _softmax_attend(q_ref[0], kbar_ref[0], vbar_ref[0], scale)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def _kernel_bias(q_ref, kbar_ref, vbar_ref, bias_ref, out_ref, *,
+                 scale: float):
+    out = _softmax_attend(q_ref[0], kbar_ref[0], vbar_ref[0], scale,
+                          bias=bias_ref[...])                # bias (1, k)
     out_ref[0] = out.astype(out_ref.dtype)
 
 
@@ -47,6 +62,7 @@ def linformer_attn(
     *,
     scale: float,
     block_q: int = 256,
+    bias: "jax.Array | None" = None,  # optional (K,) additive score bias (fp32)
     interpret: bool = False,
 ) -> jax.Array:
     B, H, S, Dh = q.shape
@@ -58,16 +74,23 @@ def linformer_attn(
     v3 = vbar.reshape(B * H, K, Dh)
 
     grid = (B * H, S // bq)
+    in_specs = [
+        pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
+        pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
+        pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
+    ]
+    operands = [q3, k3, v3]
+    kernel = functools.partial(_kernel, scale=scale)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, K), lambda bh, s: (0, 0)))
+        operands.append(bias.astype(jnp.float32).reshape(1, K))
+        kernel = functools.partial(_kernel_bias, scale=scale)
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
-            pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
-            pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
         interpret=interpret,
-    )(q3, k3, v3)
+    )(*operands)
     return out.reshape(B, H, S, Dh)

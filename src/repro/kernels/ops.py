@@ -1,12 +1,32 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels + attention-backend dispatch.
 
 On CPU (this container) the kernels execute in interpret mode — the kernel
 body runs as traced Python, validating the exact TPU program logic. On TPU
 they compile through Mosaic. `interpret=None` auto-detects.
 
+Backend dispatch rules (`resolve_backend`, consumed by models/attention.py):
+
+* ``backend="auto"`` (the `AttentionConfig` default) resolves to ``"fused"``
+  on every platform: Mosaic-compiled on TPU, interpret-mode on CPU — the
+  model forward, trainer, and serving engine therefore exercise the exact
+  TPU program logic by default.
+* ``"fused"`` / ``"reference"`` force the Pallas kernels or the pure-jnp
+  einsum implementations respectively.
+* Within the fused path, `fused_seq_projection` handles only the paper's
+  shared linear E ∈ R^{S×K}; per-head (Hkv, S, K) or conv/pool projections
+  fall back to the reference projection while the attention itself stays
+  fused (models/attention.py applies this rule).
+
+All fused ops are trainable: `fused_linformer_attention` carries an analytic
+custom VJP; `fused_seq_projection` is linear (analytic VJP below);
+`fused_blockwise_causal_attention` recomputes its backward through the
+pure-jnp reference (same math, so gradients match the reference path).
+
 Layout note: kernels use (B, H, S, Dh); the model uses (B, S, H, Dh). These
 wrappers accept model layout and handle GQA head repetition for the
-compressed operands (cheap: K is small).
+compressed operands (cheap: K is small). The single-token decode wrapper
+`fused_decode_attention` instead folds the GQA group axis into the kernel's
+query-sequence axis, so K/V are never repeated.
 """
 from __future__ import annotations
 
@@ -20,13 +40,42 @@ from repro.kernels import blockwise_causal_attn as bca
 from repro.kernels import linformer_attn as la
 from repro.kernels import ref
 from repro.kernels import seq_projection as sp
-from repro.core.causal import compress_blocks
+from repro.core.causal import (blockwise_causal_attention,
+                               blockwise_causal_attention_chunked,
+                               compress_blocks)
+
+BACKENDS = ("reference", "fused")
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve an `AttentionConfig.backend` knob to a concrete backend.
+
+    "auto" per platform: TPU -> fused (Mosaic-compiled); CPU -> fused in
+    interpret mode (the kernel logic is the validated default path on this
+    container); any other platform (e.g. GPU, which has no Mosaic lowering
+    and where interpret mode would be pathologically slow) -> reference.
+    """
+    if backend in BACKENDS:
+        return backend
+    if backend != "auto":
+        raise ValueError(
+            f"unknown attention backend {backend!r}; "
+            f"expected 'auto' or one of {BACKENDS}")
+    return "fused" if jax.default_backend() in ("tpu", "cpu") else "reference"
+
+
+def _divisor_block(size: int, preferred: int) -> int:
+    """Largest block ≤ preferred that divides `size` (kernels tile evenly)."""
+    b = max(1, min(preferred, size))
+    while size % b:
+        b -= 1
+    return b
 
 
 def _to_kernel_layout(x):        # (B,S,H,D) -> (B,H,S,D)
@@ -100,9 +149,32 @@ def fused_linformer_attention(
     qk = _to_kernel_layout(q)
     kb = _to_kernel_layout(kbar)
     vb = _to_kernel_layout(vbar)
-    out = _linformer_attn_diff(qk, kb, vb, scale, block_q,
+    out = _linformer_attn_diff(qk, kb, vb, scale,
+                               _divisor_block(q.shape[1], block_q),
                                _auto_interpret(interpret))
     return _from_kernel_layout(out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _seq_projection_diff(xk, E, block_s, interpret):
+    """Differentiable fused projection (kernel layout). The op is linear:
+    out = Eᵀ·x, so dx = E·dout and dE = Σ_{b,h} x·doutᵀ."""
+    return sp.seq_projection(xk, E, block_s=block_s, interpret=interpret)
+
+
+def _sp_fwd(xk, E, block_s, interpret):
+    return _seq_projection_diff(xk, E, block_s, interpret), (xk, E)
+
+
+def _sp_bwd(block_s, interpret, res, do):
+    xk, E = res
+    do32 = do.astype(jnp.float32)
+    dx = jnp.einsum("bhkd,sk->bhsd", do32, E.astype(jnp.float32))
+    dE = jnp.einsum("bhsd,bhkd->sk", xk.astype(jnp.float32), do32)
+    return dx.astype(xk.dtype), dE.astype(E.dtype)
+
+
+_seq_projection_diff.defvjp(_sp_fwd, _sp_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
@@ -113,9 +185,64 @@ def fused_seq_projection(
     block_s: int = 512,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    out = sp.seq_projection(_to_kernel_layout(x), E, block_s=block_s,
-                            interpret=_auto_interpret(interpret))
+    out = _seq_projection_diff(_to_kernel_layout(x), E,
+                               _divisor_block(x.shape[1], block_s),
+                               _auto_interpret(interpret))
     return _from_kernel_layout(out)        # (B, K, H, Dh)
+
+
+def _blockwise_causal_fused(q, k, v, E, F, block_size, block_slots, scale,
+                            interpret):
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    nb = S // block_size
+    kbar = compress_blocks(k.reshape(B, nb, block_size, Hkv, Dh), E)
+    vbar = compress_blocks(v.reshape(B, nb, block_size, Hkv, Dh), F)
+    kbar = kbar.reshape(B, nb * block_slots, Hkv, Dh)
+    vbar = vbar.reshape(B, nb * block_slots, Hkv, Dh)
+    # K/V keep their native Hkv heads: the kernel's index maps route each
+    # grouped query head to its kv row (no G-fold jnp.repeat in HBM).
+    out = bca.blockwise_causal_attn(
+        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
+        _to_kernel_layout(kbar), _to_kernel_layout(vbar),
+        block_size=block_size, block_slots=block_slots, scale=scale,
+        interpret=interpret)
+    return _from_kernel_layout(out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _blockwise_causal_diff(q, k, v, E, F, block_size, block_slots, scale,
+                           interpret):
+    """Differentiable fused blockwise-causal attention: Pallas forward,
+    backward recomputed through the pure-jnp reference (identical math, so
+    gradients match the reference path; the recompute is the standard
+    no-stored-probabilities tradeoff)."""
+    return _blockwise_causal_fused(q, k, v, E, F, block_size, block_slots,
+                                   scale, interpret)
+
+
+def _bca_fwd(q, k, v, E, F, block_size, block_slots, scale, interpret):
+    out = _blockwise_causal_diff(q, k, v, E, F, block_size, block_slots,
+                                 scale, interpret)
+    return out, (q, k, v, E, F)
+
+
+def _bca_bwd(block_size, block_slots, scale, interpret, res, do):
+    q, k, v, E, F = res
+    # Long sequences recompute through the memory-bounded chunked reference
+    # (same math): the plain form materializes the full (…, S, nb·r) global
+    # score tensor, which the fused forward exists to avoid. Threshold
+    # mirrors the forward's `chunked = S >= 8192` rule (models/transformer).
+    ref_fn = (blockwise_causal_attention_chunked if q.shape[1] >= 8192
+              else blockwise_causal_attention)
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_, E_, F_: ref_fn(
+            q_, k_, v_, E_, F_, block_size=block_size, scale=scale),
+        q, k, v, E, F)
+    return vjp(do)
+
+
+_blockwise_causal_diff.defvjp(_bca_fwd, _bca_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -124,7 +251,7 @@ def fused_blockwise_causal_attention(
     q: jax.Array,        # (B, S, H, Dh)
     k: jax.Array,        # (B, S, Hkv, Dh)
     v: jax.Array,
-    E: jax.Array,        # (c, r)
+    E: jax.Array,        # (c, r) or (Hkv, c, r)
     F: jax.Array,
     *,
     block_size: int,
@@ -132,17 +259,39 @@ def fused_blockwise_causal_attention(
     scale: float,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    B, S, H, Dh = q.shape
-    Hkv = k.shape[2]
-    nb = S // block_size
-    kbar = compress_blocks(k.reshape(B, nb, block_size, Hkv, Dh), E)
-    vbar = compress_blocks(v.reshape(B, nb, block_size, Hkv, Dh), F)
-    kbar = kbar.reshape(B, nb * block_slots, Hkv, Dh)
-    vbar = vbar.reshape(B, nb * block_slots, Hkv, Dh)
+    if q.shape[1] % block_size != 0:
+        raise ValueError(
+            f"S={q.shape[1]} must be a multiple of block_size={block_size}")
+    return _blockwise_causal_diff(q, k, v, E, F, block_size, block_slots,
+                                  scale, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def fused_decode_attention(
+    q_t: jax.Array,      # (B, 1, H, Dh) — one decode token
+    k_cat: jax.Array,    # (B, T, Hkv, Dh) — [raw block | compressed slots]
+    v_cat: jax.Array,
+    bias: jax.Array,     # (T,) fp32 — 0 for attendable slots, NEG_INF else
+    *,
+    scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Single-token GQA decode attention through the fused kernel.
+
+    Instead of repeating K/V to the query head count, the GQA group axis is
+    folded into the kernel's query-sequence axis: q (B, 1, Hkv·G, Dh) is
+    viewed as (B, Hkv, G, Dh) — G queries per kv head, all sharing that
+    head's [raw | compressed] slots. Slot validity (the raw ring-buffer
+    prefix ≤ pos and the blk·r completed compressed slots) arrives as an
+    additive score bias, so one kernel handles every (pos, blk) without
+    re-specialization.
+    """
+    B, _, H, Dh = q_t.shape
+    Hkv = k_cat.shape[2]
     G = H // Hkv
-    rep = lambda x: _repeat_kv(_to_kernel_layout(x), H)
-    out = bca.blockwise_causal_attn(
-        _to_kernel_layout(q), rep(k), rep(v), rep(kbar), rep(vbar),
-        block_size=block_size, block_slots=block_slots, scale=scale,
-        interpret=_auto_interpret(interpret))
-    return _from_kernel_layout(out)
+    qk = q_t.reshape(B, Hkv, G, Dh)             # kernel layout: S-axis = G
+    kb = _to_kernel_layout(k_cat)               # (B, Hkv, T, Dh)
+    vb = _to_kernel_layout(v_cat)
+    out = la.linformer_attn(qk, kb, vb, scale=scale, block_q=G, bias=bias,
+                            interpret=_auto_interpret(interpret))
+    return out.reshape(B, 1, H, Dh)

@@ -22,6 +22,12 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "reference", "fused"],
+                    help="attention compute backend (default: config's "
+                         "'auto' -> fused Pallas kernels)")
+    ap.add_argument("--decode-chunk", type=int, default=32,
+                    help="tokens per device-resident decode scan chunk")
     args = ap.parse_args()
 
     import jax
@@ -47,7 +53,9 @@ def main():
 
     eng = ServingEngine(params, cfg, max_seq=args.max_seq,
                         cache_dtype=jnp.float32 if args.smoke else jnp.bfloat16,
-                        temperature=args.temperature)
+                        temperature=args.temperature,
+                        decode_chunk=args.decode_chunk,
+                        attention_backend=args.backend)
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(4, cfg.vocab_size,
                                  int(rng.choice([8, 16, 16, 32]))))

@@ -4,6 +4,11 @@ softmax baseline and the paper's Linformer forms.
 `init_attention` creates the per-layer parameters (E/F included here when the
 sharing mode is per-layer; the layerwise-shared E lives in the model's
 "shared" collection and is passed through `shared_lin`).
+
+Compute-backend dispatch: `cfg.backend` ("auto" | "reference" | "fused",
+resolved by kernels/ops.resolve_backend) selects between the pure-jnp einsum
+reference implementations and the fused Pallas kernels for both linformer
+kinds, in the full-sequence forward AND the single-token decode path.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ from repro.configs.base import AttentionConfig
 from repro.core import cache as cache_lib
 from repro.core import causal as causal_lib
 from repro.core import linformer as lin_lib
+from repro.kernels import ops as kernel_ops
 from repro.models import layers as L
 
 NEG_INF = causal_lib.NEG_INF
@@ -81,6 +87,28 @@ def _resolve_ef(params: Dict, shared_lin: Optional[Dict],
     return lp["E"], lp.get("F", lp["E"])
 
 
+def _fused_exact_linformer(q: jax.Array, k: jax.Array, v: jax.Array,
+                           E: jax.Array, F: jax.Array,
+                           cfg: AttentionConfig) -> jax.Array:
+    """Exact (bidirectional) Linformer through the Pallas kernels.
+
+    The fused sequence-projection kernel handles the paper's default shared
+    linear E ∈ R^{S×K}; per-head or conv/pool projections compress via the
+    reference ops (cheap: output is K slots) with the attention still fused.
+    """
+    S, Dh = k.shape[1], q.shape[-1]
+    if cfg.linformer.projection == "linear" and E.ndim == 2:
+        Es = E[:S] if E.shape[0] != S else E
+        Fs = F[:S] if F.shape[0] != S else F
+        kbar = kernel_ops.fused_seq_projection(k, Es)
+        vbar = kernel_ops.fused_seq_projection(v, Fs)
+    else:
+        kbar, vbar = lin_lib.project_kv(k, v, E, F,
+                                        kind=cfg.linformer.projection)
+    return kernel_ops.fused_linformer_attention(q, kbar, vbar,
+                                                scale=Dh ** -0.5)
+
+
 def standard_attention(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
     scale: Optional[float] = None,
@@ -115,18 +143,31 @@ def apply_attention(
     this layer's decode-cache entry built from the SAME k/v (single-pass
     prefill — no second forward)."""
     B, S, _ = x.shape
+    backend = kernel_ops.resolve_backend(cfg.backend)
     q, k, v = _qkv(params, x, cfg, positions)
     if cfg.kind == "standard":
         out = standard_attention(q, k, v, causal=cfg.causal)
     elif cfg.kind == "linformer":
         E, F = _resolve_ef(params, shared_lin, cfg)
-        out = lin_lib.exact_linformer_attention(
-            q, k, v, E, F, kind=cfg.linformer.projection)
+        if backend == "fused":
+            out = _fused_exact_linformer(q, k, v, E, F, cfg)
+        else:
+            out = lin_lib.exact_linformer_attention(
+                q, k, v, E, F, kind=cfg.linformer.projection)
     elif cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
-        fn = (causal_lib.blockwise_causal_attention_chunked if chunked
-              else causal_lib.blockwise_causal_attention)
-        out = fn(q, k, v, E, F, block_size=cfg.linformer.block_size)
+        if backend == "fused":
+            # the kernel streams query blocks itself (forward); the backward
+            # recompute switches to the chunked reference at long S inside
+            # ops._bca_bwd, so `chunked` needs no handling here
+            out = kernel_ops.fused_blockwise_causal_attention(
+                q, k, v, E, F, block_size=cfg.linformer.block_size,
+                block_slots=cfg.linformer.block_slots,
+                scale=cfg.head_dim ** -0.5)
+        else:
+            fn = (causal_lib.blockwise_causal_attention_chunked if chunked
+                  else causal_lib.blockwise_causal_attention)
+            out = fn(q, k, v, E, F, block_size=cfg.linformer.block_size)
     else:
         raise ValueError(f"unknown attention kind {cfg.kind!r}")
     out = out.reshape(B, S, -1) @ params["wo"]
@@ -183,7 +224,8 @@ def apply_attention_decode(
     if cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
         out, new_cache = cache_lib.compressed_decode_attention(
-            q, k, v, layer_cache, E, F, t)
+            q, k, v, layer_cache, E, F, t,
+            backend=kernel_ops.resolve_backend(cfg.backend))
     elif cfg.kind == "standard":
         out, new_cache = cache_lib.full_decode_attention(
             q, k, v, layer_cache, t)

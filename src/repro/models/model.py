@@ -45,6 +45,50 @@ def decode_step(params, cfg: ModelConfig, batch_t: Dict, cache: Dict, *,
     return _impl(cfg).decode_step(params, cfg, batch_t, cache, ctx=ctx)
 
 
+def decode_scan(
+    params,
+    cfg: ModelConfig,
+    cur: jax.Array,        # (B,) int32 — first un-emitted sampled token
+    finished: jax.Array,   # (B,) bool — rows whose output is frozen to eos
+    cache: Dict,
+    rng: jax.Array,
+    *,
+    n_steps: int,
+    eos_id: int,
+    temperature: float = 0.0,
+    ctx: Optional[ParallelCtx] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Dict, jax.Array]:
+    """Device-resident multi-token decode: a lax.scan over `n_steps` steps
+    with on-device sampling (argmax / categorical) and on-device EOS
+    masking. No host round-trips inside — the caller syncs ONCE per chunk
+    on the returned tokens (the serving engine's chunked decode contract).
+
+    Each step emits `cur` (frozen to eos_id for finished rows), feeds the
+    emitted token back through `decode_step`, and samples the next token.
+    Returns (tokens (B, n_steps), next cur, finished, cache, rng).
+    """
+
+    def sample(logits, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    def step(carry, _):
+        cur, finished, cache, rng = carry
+        tok = jnp.where(finished, eos_id, cur)
+        finished = finished | (tok == eos_id)
+        rng, sub = jax.random.split(rng)
+        logits, cache = decode_step(
+            params, cfg, {"tokens": tok[:, None].astype(jnp.int32)}, cache,
+            ctx=ctx)
+        nxt = sample(logits[:, 0], sub)
+        return (nxt, finished, cache, rng), tok
+
+    (cur, finished, cache, rng), toks = jax.lax.scan(
+        step, (cur, finished, cache, rng), None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), cur, finished, cache, rng
+
+
 # ---------------------------------------------------------------------------
 # Losses
 # ---------------------------------------------------------------------------

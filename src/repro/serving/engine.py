@@ -1,9 +1,18 @@
-"""Batched serving engine: parallel prefill + jit'd single-token decode.
+"""Batched serving engine: parallel prefill + device-resident chunked decode.
 
 Prefill strategy (linformer_causal): the full-block prefix (⌊S/c⌋·c tokens)
 is prefilled in ONE parallel forward that also materializes the compressed
 cache; the ≤c-1 remainder tokens run through the decode path. Standard
 attention prefills the full prompt in one pass.
+
+Chunked decode contract: generation runs as jitted `lax.scan` chunks of
+`decode_chunk` tokens (model.decode_scan) — sampling, EOS masking, and the
+cache update all stay on device, and the host syncs ONCE per chunk (to
+receive the chunk's tokens and check the all-finished early exit) instead of
+once per token. The per-token Python loop that this replaces is kept as
+`generate_batch_per_token` — the measured baseline of
+benchmarks/decode_throughput.py. The final partial chunk compiles a second
+scan length at most; chunk functions are cached per length.
 
 Batching model: requests are grouped into equal-prompt-length buckets by the
 scheduler (`bucket_requests`); each bucket decodes together with a shared
@@ -17,7 +26,7 @@ benchmarks/table3_efficiency.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,13 +61,18 @@ class ServingEngine:
         ctx: Optional[ParallelCtx] = None,
         cache_dtype=jnp.bfloat16,
         temperature: float = 0.0,
+        decode_chunk: int = 32,
+        attention_backend: Optional[str] = None,
     ):
+        if attention_backend is not None:
+            cfg = cfg.with_attention_backend(attention_backend)
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
         self.ctx = ctx
         self.cache_dtype = cache_dtype
         self.temperature = temperature
+        self.decode_chunk = max(1, decode_chunk)
 
         self._decode = jax.jit(
             lambda p, b, c: model_lib.decode_step(p, cfg, b, c, ctx=ctx))
@@ -67,6 +81,7 @@ class ServingEngine:
                 p, cfg, b, ctx=ctx, return_cache=True,
                 cache_max_seq=max_seq, cache_dtype=cache_dtype),
         )
+        self._chunk_fns: Dict[int, Callable] = {}
 
     # -- internals ------------------------------------------------------
 
@@ -102,15 +117,72 @@ class ServingEngine:
             logits = logits_t[:, 0]
         return cache, logits
 
+    def _chunk_fn(self, n: int) -> Callable:
+        """Jitted n-step device-resident decode (cached per scan length)."""
+        fn = self._chunk_fns.get(n)
+        if fn is None:
+            cfg, ctx, temp = self.cfg, self.ctx, self.temperature
+            fn = jax.jit(
+                lambda p, cur, fin, cache, rng: model_lib.decode_scan(
+                    p, cfg, cur, fin, cache, rng, n_steps=n, eos_id=EOS,
+                    temperature=temp, ctx=ctx),
+                donate_argnums=(3,))
+            self._chunk_fns[n] = fn
+        return fn
+
     # -- public API -------------------------------------------------------
 
     def generate_batch(self, tokens: np.ndarray, max_new_tokens: int,
                        rng: Optional[jax.Array] = None) -> np.ndarray:
         """Greedy/temperature generation for one equal-length batch.
-        tokens: (B, S) int array. Returns (B, max_new_tokens)."""
+        tokens: (B, S) int array. Returns (B, max_new_tokens).
+
+        Decodes in device-resident `decode_chunk`-token scans: one host sync
+        per chunk (fetch tokens + all-finished early exit) instead of one per
+        generated token."""
         rng = rng if rng is not None else jax.random.PRNGKey(0)
-        B = tokens.shape[0]
         cache, logits = self.prefill(tokens)
+        return self.decode_tokens(cache, logits, max_new_tokens, rng)
+
+    def decode_tokens(self, cache: Dict, logits: jax.Array,
+                      max_new_tokens: int,
+                      rng: Optional[jax.Array] = None) -> np.ndarray:
+        """Decode phase given a prefilled cache and last-token logits.
+        NOTE: the chunk scan donates `cache` — it is consumed."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        B = logits.shape[0]
+        outs = np.full((B, max_new_tokens), EOS, np.int32)
+        finished = jnp.zeros((B,), bool)
+        cur = self._sample(logits, rng)
+        done = 0
+        while done < max_new_tokens:
+            n = min(self.decode_chunk, max_new_tokens - done)
+            toks, cur, finished, cache, rng = self._chunk_fn(n)(
+                self.params, cur, finished, cache, rng)
+            outs[:, done:done + n] = np.asarray(toks)   # the chunk's one sync
+            done += n
+            if bool(np.asarray(finished).all()):
+                break
+        return outs
+
+    def generate_batch_per_token(self, tokens: np.ndarray,
+                                 max_new_tokens: int,
+                                 rng: Optional[jax.Array] = None
+                                 ) -> np.ndarray:
+        """Legacy per-token decode loop (one host round-trip per token) —
+        kept as the measured baseline for benchmarks/decode_throughput.py."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        cache, logits = self.prefill(tokens)
+        return self.decode_tokens_per_token(cache, logits, max_new_tokens,
+                                            rng)
+
+    def decode_tokens_per_token(self, cache: Dict, logits: jax.Array,
+                                max_new_tokens: int,
+                                rng: Optional[jax.Array] = None
+                                ) -> np.ndarray:
+        """Per-token decode phase (baseline counterpart of decode_tokens)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        B = logits.shape[0]
         outs = np.zeros((B, max_new_tokens), np.int32)
         finished = jnp.zeros((B,), bool)
         cur = self._sample(logits, rng)

@@ -96,7 +96,13 @@ class Trainer:
         ctx: Optional[ParallelCtx] = None,
         preempt_check: Optional[Callable[[], bool]] = None,
         log_fn: Callable[[str], None] = print,
+        attention_backend: Optional[str] = None,
     ):
+        # attention_backend overrides cfg.attention.backend for this run
+        # ("reference" | "fused"; None keeps the config's knob, whose "auto"
+        # default resolves to the fused Pallas kernels — kernels/ops.py).
+        if attention_backend is not None:
+            cfg = cfg.with_attention_backend(attention_backend)
         self.cfg = cfg
         self.tcfg = tcfg
         self.ctx = ctx
