@@ -1,11 +1,15 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
 import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -28,3 +32,14 @@ def fit_scaling_exponent(ns, ts) -> float:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_bench_json(name: str, payload: Dict) -> str:
+    """Persist a benchmark's result as BENCH_<name>.json at the repo root —
+    the committed perf-trajectory record (one file per benchmark, overwritten
+    each run so the git history carries the trend)."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.configs.base import AttentionConfig, LinformerConfig, ModelConfig
 from repro.models import model as M
 from repro.serving import ServingEngine
@@ -99,6 +99,15 @@ def run(quick: bool = True):
         emit(f"decode_throughput/scanned/s{S}", t_new / n_tokens * 1e6,
              f"tok_per_s={tok_s_new:.1f},speedup={t_old / t_new:.2f}x")
         results[S] = (tok_s_old, tok_s_new)
+    write_bench_json("decode_throughput", {
+        "mode": "quick" if quick else "full",
+        "n_tokens": n_tokens,
+        "by_prefill_len": {
+            str(S): {"tok_per_s_per_token_loop": round(old, 1),
+                     "tok_per_s_scanned": round(new, 1),
+                     "speedup": round(new / old, 2)}
+            for S, (old, new) in results.items()},
+    })
     return results
 
 

@@ -21,8 +21,9 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (decode_throughput, figure1_spectrum,
-                            figure3_pretrain, roofline, table1_complexity,
-                            table2_downstream, table3_efficiency)
+                            figure3_pretrain, roofline, serving_throughput,
+                            table1_complexity, table2_downstream,
+                            table3_efficiency)
     benches = {
         "table1_complexity": table1_complexity.run,
         "figure1_spectrum": figure1_spectrum.run,
@@ -31,6 +32,7 @@ def main() -> None:
         "table3_efficiency": table3_efficiency.run,
         "roofline": roofline.run,
         "decode_throughput": decode_throughput.run,
+        "serving_throughput": serving_throughput.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -13,6 +13,14 @@ Two cache families:
 
 Caches are plain dicts of arrays (pytrees); layer axis leads so scanned layers
 carry their slice through ``lax.scan``.
+
+Per-row positions: the cache carries a ``lengths`` (B,) int32 vector — one
+position counter per batch row — instead of a shared scalar. Every row of a
+decode batch may sit at its own position (the continuous-batching scheduler
+admits/evicts rows between decode chunks, so rows are never aligned); masks,
+ring-buffer writes and the block fold are all per-row. The decode attention
+functions still accept a scalar ``t`` (broadcast to every row), which is the
+legacy shared-position behaviour.
 """
 from __future__ import annotations
 
@@ -22,6 +30,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.causal import NEG_INF
+
+
+def rowwise_t(t: jax.Array, batch: int) -> jax.Array:
+    """Broadcast a scalar position to a (B,) per-row position vector."""
+    t = jnp.asarray(t, jnp.int32)
+    if t.ndim == 0:
+        return jnp.broadcast_to(t, (batch,))
+    return t
+
+
+def _row_update(buf: jax.Array, new: jax.Array, start: jax.Array) -> jax.Array:
+    """Per-row dynamic_update_slice along axis 1: buf (B, N, ...), new
+    (B, n, ...), start (B,) int32 — row b gets new[b] written at start[b]."""
+    return jax.vmap(
+        lambda b, u, s: jax.lax.dynamic_update_slice_in_dim(b, u, s, axis=0)
+    )(buf, new, start)
 
 
 # ---------------------------------------------------------------------------
@@ -41,7 +65,7 @@ def compressed_cache_spec(
         "raw_v": kv(num_layers, batch, block_size, num_kv_heads, head_dim),
         "comp_k": kv(num_layers, batch, M, num_kv_heads, head_dim),
         "comp_v": kv(num_layers, batch, M, num_kv_heads, head_dim),
-        "length": jax.ShapeDtypeStruct((), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
 
 
@@ -57,21 +81,26 @@ def compressed_decode_attention(
     layer_cache: Dict[str, jax.Array],   # per-layer slices: raw_k (B,c,Hkv,Dh), comp_k (B,M,Hkv,Dh)
     E: jax.Array,             # (c, r) or (Hkv, c, r)
     F: jax.Array,
-    t: jax.Array,             # () int32 — number of tokens already cached
+    t: jax.Array,             # () or (B,) int32 — tokens already cached per row
     *,
     scale: Optional[float] = None,
     backend: str = "reference",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode step of blockwise-causal Linformer attention.
 
-    Appends (k_t, v_t) at position t, attends [raw block ≤ t | compressed
-    prefix blocks], and folds the block into r compressed slots when t
-    completes it. Returns (out (B,1,H,Dh), updated per-layer cache).
+    Appends (k_t, v_t) at each row's position t[b], attends [raw block ≤ t[b]
+    | compressed prefix blocks], and folds a row's block into r compressed
+    slots when t[b] completes it. Every mask, ring-buffer write and block
+    fold is PER ROW — rows of a continuous batch sit at unequal positions.
+    A scalar t broadcasts to all rows (the legacy shared-position form).
+    Returns (out (B,1,H,Dh), updated per-layer cache).
 
-    backend="fused" routes the attention math through the masked Pallas
+    backend="fused" routes the attention math through the Pallas decode
     kernel (kernels/ops.fused_decode_attention): the GQA group axis is folded
-    into the kernel's query axis — K/V are never repeated — and slot validity
-    is an additive score bias. Cache bookkeeping is identical either way.
+    into the kernel's query axis — K/V are never repeated — the raw and
+    compressed caches stay two pinned operands (no per-step HBM concatenate)
+    and slot validity is a per-row additive score bias. Cache bookkeeping is
+    identical either way.
     """
     raw_k, raw_v = layer_cache["raw_k"], layer_cache["raw_v"]
     comp_k, comp_v = layer_cache["comp_k"], layer_cache["comp_v"]
@@ -82,35 +111,32 @@ def compressed_decode_attention(
     G = H // Hkv
     scale_ = scale if scale is not None else Dh ** -0.5
 
-    pos = jnp.mod(t, c)
-    blk = t // c
+    t = rowwise_t(t, B)
+    pos = jnp.mod(t, c)                         # (B,)
+    blk = t // c                                # (B,)
 
-    raw_k = jax.lax.dynamic_update_slice_in_dim(raw_k, k_t.astype(raw_k.dtype),
-                                                pos, axis=1)
-    raw_v = jax.lax.dynamic_update_slice_in_dim(raw_v, v_t.astype(raw_v.dtype),
-                                                pos, axis=1)
+    raw_k = _row_update(raw_k, k_t.astype(raw_k.dtype), pos)
+    raw_v = _row_update(raw_v, v_t.astype(raw_v.dtype), pos)
 
-    loc_ok = jnp.arange(c) <= pos
-    glob_ok = jnp.arange(M) < blk * r
+    loc_ok = jnp.arange(c)[None, :] <= pos[:, None]         # (B, c)
+    glob_ok = jnp.arange(M)[None, :] < (blk * r)[:, None]   # (B, M)
     if backend == "fused":
         from repro.kernels import ops as kernel_ops
-        bias = jnp.where(jnp.concatenate([loc_ok, glob_ok]),
-                         0.0, NEG_INF).astype(jnp.float32)
+        bias_loc = jnp.where(loc_ok, 0.0, NEG_INF).astype(jnp.float32)
+        bias_glob = jnp.where(glob_ok, 0.0, NEG_INF).astype(jnp.float32)
         out = kernel_ops.fused_decode_attention(
-            q_t,
-            jnp.concatenate([raw_k, comp_k], axis=1),
-            jnp.concatenate([raw_v, comp_v], axis=1),
-            bias, scale=scale_)
+            q_t, raw_k, raw_v, comp_k, comp_v, bias_loc, bias_glob,
+            scale=scale_)
     else:
         qg = q_t.reshape(B, Hkv, G, Dh)
         # local scores over the raw ring buffer
         s_loc = jnp.einsum("bhgd,bkhd->bhgk", qg,
                            raw_k).astype(jnp.float32) * scale_
-        s_loc = jnp.where(loc_ok[None, None, None, :], s_loc, NEG_INF)
+        s_loc = jnp.where(loc_ok[:, None, None, :], s_loc, NEG_INF)
         # global scores over compressed slots of completed previous blocks
         s_glob = jnp.einsum("bhgd,bmhd->bhgm", qg,
                             comp_k).astype(jnp.float32) * scale_
-        s_glob = jnp.where(glob_ok[None, None, None, :], s_glob, NEG_INF)
+        s_glob = jnp.where(glob_ok[:, None, None, :], s_glob, NEG_INF)
 
         s = jnp.concatenate([s_loc, s_glob], axis=-1)
         p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
@@ -118,20 +144,18 @@ def compressed_decode_attention(
         out = out + jnp.einsum("bhgm,bmhd->bhgd", p[..., c:], comp_v)
         out = out.reshape(B, 1, H, Dh)
 
-    # fold the block into compressed slots when it completes (pos == c-1).
-    # Compute unconditionally (O(c·r·Dh·Hkv), tiny) and commit via select —
-    # cheaper than lax.cond's control flow on TPU.
+    # fold a row's block into its compressed slots when it completes
+    # (pos[b] == c-1). Compute unconditionally (O(c·r·Dh·Hkv), tiny) and
+    # commit per row via select — cheaper than lax.cond's control flow.
     if E.ndim == 2:
         new_ks = jnp.einsum("bchd,cr->brhd", raw_k, E.astype(raw_k.dtype))
         new_vs = jnp.einsum("bchd,cr->brhd", raw_v, F.astype(raw_v.dtype))
     else:
         new_ks = jnp.einsum("bchd,hcr->brhd", raw_k, E.astype(raw_k.dtype))
         new_vs = jnp.einsum("bchd,hcr->brhd", raw_v, F.astype(raw_v.dtype))
-    done = pos == (c - 1)
-    comp_k_new = jax.lax.dynamic_update_slice_in_dim(comp_k, new_ks, blk * r,
-                                                     axis=1)
-    comp_v_new = jax.lax.dynamic_update_slice_in_dim(comp_v, new_vs, blk * r,
-                                                     axis=1)
+    done = (pos == (c - 1))[:, None, None, None]
+    comp_k_new = _row_update(comp_k, new_ks, blk * r)
+    comp_v_new = _row_update(comp_v, new_vs, blk * r)
     comp_k = jnp.where(done, comp_k_new, comp_k)
     comp_v = jnp.where(done, comp_v_new, comp_v)
 
@@ -152,7 +176,7 @@ def full_cache_spec(
     return {
         "k": kv(num_layers, batch, max_seq, num_kv_heads, head_dim),
         "v": kv(num_layers, batch, max_seq, num_kv_heads, head_dim),
-        "length": jax.ShapeDtypeStruct((), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
 
 
@@ -166,22 +190,24 @@ def full_decode_attention(
     k_t: jax.Array,           # (B, 1, Hkv, Dh)
     v_t: jax.Array,
     layer_cache: Dict[str, jax.Array],   # k/v: (B, S, Hkv, Dh)
-    t: jax.Array,
+    t: jax.Array,             # () or (B,) int32 per-row positions
     *,
     scale: Optional[float] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode step of standard causal attention with a full KV cache."""
+    """One decode step of standard causal attention with a full KV cache.
+    Writes and masks are per row; a scalar t broadcasts to all rows."""
     ck, cv = layer_cache["k"], layer_cache["v"]
     B, S, Hkv, Dh = ck.shape
     H = q_t.shape[2]
     G = H // Hkv
     scale_ = scale if scale is not None else Dh ** -0.5
-    ck = jax.lax.dynamic_update_slice_in_dim(ck, k_t.astype(ck.dtype), t, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cv, v_t.astype(cv.dtype), t, axis=1)
+    t = rowwise_t(t, B)
+    ck = _row_update(ck, k_t.astype(ck.dtype), t)
+    cv = _row_update(cv, v_t.astype(cv.dtype), t)
     qg = q_t.reshape(B, Hkv, G, Dh)
     s = jnp.einsum("bhgd,bshd->bhgs", qg, ck).astype(jnp.float32) * scale_
-    ok = jnp.arange(S) <= t
-    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    ok = jnp.arange(S)[None, :] <= t[:, None]               # (B, S)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
     out = jnp.einsum("bhgs,bshd->bhgd", p, cv).reshape(B, 1, H, Dh)
     return out, {"k": ck, "v": cv}

@@ -20,12 +20,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import linformer as lin_lib
-from repro.parallel.sharding import ParallelCtx
+from repro.parallel.sharding import ParallelCtx, shard_map as _shard_map
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def seq_parallel_linformer_attention(

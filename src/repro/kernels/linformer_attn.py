@@ -15,10 +15,13 @@ Grid: (B·H, S / bq). Block shapes:
   k̄,v̄  (1, k,  Dh)   — pinned (same block for every s-step)
   out  (1, bq, Dh)
 
-An optional additive score `bias` (k,) supports slot-validity masking (0 for
-attendable slots, NEG_INF otherwise) — used by the single-token decode path,
-where the attendable prefix of [raw block | compressed slots] depends on the
-current position.
+`decode_attn` is the single-token decode variant used by the
+continuous-batching decode path: the raw ring-buffer block and the
+compressed prefix slots stay TWO pinned operands (no per-step HBM
+concatenate — the cache-residency contract), each with a per-row (B, ·)
+additive validity bias (0 for attendable slots, NEG_INF otherwise — every
+row sits at its own position); the softmax normalizes over their
+concatenated scores inside the kernel.
 """
 from __future__ import annotations
 
@@ -29,12 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _softmax_attend(q, kbar, vbar, scale, bias=None):
+def _softmax_attend(q, kbar, vbar, scale):
     s = jax.lax.dot_general(
         q, kbar, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale          # (bq, k)
-    if bias is not None:
-        s = s + bias
     s = s - jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
@@ -48,13 +49,6 @@ def _kernel(q_ref, kbar_ref, vbar_ref, out_ref, *, scale: float):
     out_ref[0] = out.astype(out_ref.dtype)
 
 
-def _kernel_bias(q_ref, kbar_ref, vbar_ref, bias_ref, out_ref, *,
-                 scale: float):
-    out = _softmax_attend(q_ref[0], kbar_ref[0], vbar_ref[0], scale,
-                          bias=bias_ref[...])                # bias (1, k)
-    out_ref[0] = out.astype(out_ref.dtype)
-
-
 def linformer_attn(
     q: jax.Array,       # (B, H, S, Dh)
     kbar: jax.Array,    # (B, H, K, Dh)
@@ -62,7 +56,6 @@ def linformer_attn(
     *,
     scale: float,
     block_q: int = 256,
-    bias: "jax.Array | None" = None,  # optional (K,) additive score bias (fp32)
     interpret: bool = False,
 ) -> jax.Array:
     B, H, S, Dh = q.shape
@@ -74,23 +67,82 @@ def linformer_attn(
     v3 = vbar.reshape(B * H, K, Dh)
 
     grid = (B * H, S // bq)
-    in_specs = [
-        pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
-        pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
-        pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
-    ]
-    operands = [q3, k3, v3]
-    kernel = functools.partial(_kernel, scale=scale)
-    if bias is not None:
-        in_specs.append(pl.BlockSpec((1, K), lambda bh, s: (0, 0)))
-        operands.append(bias.astype(jnp.float32).reshape(1, K))
-        kernel = functools.partial(_kernel_bias, scale=scale)
     out = pl.pallas_call(
-        kernel,
+        functools.partial(_kernel, scale=scale),
         grid=grid,
-        in_specs=in_specs,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
+            pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
+            pl.BlockSpec((1, K, Dh), lambda bh, s: (bh, 0, 0)),
+        ],
         out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, s: (bh, s, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
         interpret=interpret,
-    )(*operands)
+    )(q3, k3, v3)
     return out.reshape(B, H, S, Dh)
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode kernel: [raw block | compressed prefix] as two pinned
+# operands (cache residency — no per-step HBM concatenate)
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(q_ref, rk_ref, rv_ref, ck_ref, cv_ref, bl_ref, bg_ref,
+                   out_ref, *, scale: float):
+    q = q_ref[0]                                             # (G, Dh)
+    s_loc = jax.lax.dot_general(
+        q, rk_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale + bl_ref[...]
+    s_glob = jax.lax.dot_general(
+        q, ck_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale + bg_ref[...]
+    s = jnp.concatenate([s_loc, s_glob], axis=-1)            # (G, c + M)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    c = rk_ref.shape[1]
+    out = jax.lax.dot_general(
+        p[:, :c].astype(rv_ref.dtype), rv_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out += jax.lax.dot_general(
+        p[:, c:].astype(cv_ref.dtype), cv_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def decode_attn(
+    q: jax.Array,        # (B, Hkv, G, Dh) — GQA group folded into the q axis
+    raw_k: jax.Array,    # (B, Hkv, c, Dh) — raw ring buffer, pinned
+    raw_v: jax.Array,
+    comp_k: jax.Array,   # (B, Hkv, M, Dh) — compressed slots, pinned
+    comp_v: jax.Array,
+    bias_loc: jax.Array,   # (B, c) fp32: 0 attendable / NEG_INF masked
+    bias_glob: jax.Array,  # (B, M) fp32
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, Dh = q.shape
+    c, M = raw_k.shape[2], comp_k.shape[2]
+    grid = (B * Hkv,)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, c), lambda bh: (bh // Hkv, 0)),
+            pl.BlockSpec((1, M), lambda bh: (bh // Hkv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dh), lambda bh: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(q.reshape(B * Hkv, G, Dh), raw_k.reshape(B * Hkv, c, Dh),
+      raw_v.reshape(B * Hkv, c, Dh), comp_k.reshape(B * Hkv, M, Dh),
+      comp_v.reshape(B * Hkv, M, Dh), bias_loc.astype(jnp.float32),
+      bias_glob.astype(jnp.float32))
+    return out.reshape(B, Hkv, G, Dh)

@@ -268,10 +268,13 @@ def fused_blockwise_causal_attention(
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def fused_decode_attention(
-    q_t: jax.Array,      # (B, 1, H, Dh) — one decode token
-    k_cat: jax.Array,    # (B, T, Hkv, Dh) — [raw block | compressed slots]
-    v_cat: jax.Array,
-    bias: jax.Array,     # (T,) fp32 — 0 for attendable slots, NEG_INF else
+    q_t: jax.Array,        # (B, 1, H, Dh) — one decode token per row
+    raw_k: jax.Array,      # (B, c, Hkv, Dh) — raw ring buffer (resident)
+    raw_v: jax.Array,
+    comp_k: jax.Array,     # (B, M, Hkv, Dh) — compressed slots (resident)
+    comp_v: jax.Array,
+    bias_loc: jax.Array,   # (B, c) fp32 — 0 attendable, NEG_INF masked
+    bias_glob: jax.Array,  # (B, M) fp32
     *,
     scale: float,
     interpret: Optional[bool] = None,
@@ -281,17 +284,20 @@ def fused_decode_attention(
     Instead of repeating K/V to the query head count, the GQA group axis is
     folded into the kernel's query-sequence axis: q (B, 1, Hkv·G, Dh) is
     viewed as (B, Hkv, G, Dh) — G queries per kv head, all sharing that
-    head's [raw | compressed] slots. Slot validity (the raw ring-buffer
-    prefix ≤ pos and the blk·r completed compressed slots) arrives as an
-    additive score bias, so one kernel handles every (pos, blk) without
-    re-specialization.
+    head's raw + compressed slots. The raw block and the compressed prefix
+    stay TWO pinned kernel operands (cache residency: no per-step HBM
+    concatenate of the caches), each with a PER-ROW additive validity bias
+    (the raw ring prefix ≤ pos[b] and the blk[b]·r completed slots), so one
+    kernel handles every per-row (pos, blk) combination — the contract the
+    continuous-batching scheduler relies on.
     """
     B, _, H, Dh = q_t.shape
-    Hkv = k_cat.shape[2]
+    Hkv = raw_k.shape[2]
     G = H // Hkv
     qk = q_t.reshape(B, Hkv, G, Dh)             # kernel layout: S-axis = G
-    kb = _to_kernel_layout(k_cat)               # (B, Hkv, T, Dh)
-    vb = _to_kernel_layout(v_cat)
-    out = la.linformer_attn(qk, kb, vb, scale=scale, block_q=G, bias=bias,
-                            interpret=_auto_interpret(interpret))
+    out = la.decode_attn(
+        qk, _to_kernel_layout(raw_k), _to_kernel_layout(raw_v),
+        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v),
+        bias_loc, bias_glob, scale=scale,
+        interpret=_auto_interpret(interpret))
     return out.reshape(B, 1, H, Dh)

@@ -1,7 +1,9 @@
-"""Serving launcher: load (or init) weights for an arch and serve batched
-requests from a prompt file or synthetic traffic.
+"""Serving launcher: load (or init) weights for an arch and serve synthetic
+mixed-length traffic through the continuous-batching scheduler (default) or
+the static bucketed baseline.
 
     python -m repro.launch.serve --arch qwen3-8b --smoke --requests 8
+    python -m repro.launch.serve --arch qwen3-8b --smoke --scheduler static
 """
 import argparse
 import dataclasses
@@ -28,6 +30,11 @@ def main():
                          "'auto' -> fused Pallas kernels)")
     ap.add_argument("--decode-chunk", type=int, default=32,
                     help="tokens per device-resident decode scan chunk")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "static"],
+                    help="continuous: slot-based admission/eviction between "
+                         "decode chunks; static: equal-length bucketed "
+                         "batches (baseline)")
     args = ap.parse_args()
 
     import jax
@@ -60,13 +67,27 @@ def main():
     prompts = [list(rng.integers(4, cfg.vocab_size,
                                  int(rng.choice([8, 16, 16, 32]))))
                for _ in range(args.requests)]
+    mode = args.scheduler
+    if mode == "continuous" and not eng.supports_continuous_batching:
+        print(f"[serve] {cfg.family!r} cache has no per-row positions; "
+              "falling back to the static bucketed scheduler")
+        mode = "static"
     t0 = time.perf_counter()
-    outs = eng.serve(prompts, max_new_tokens=args.max_new_tokens,
-                     max_batch=args.max_batch)
+    if mode == "continuous":
+        outs, sched = eng.serve(prompts, args.max_new_tokens,
+                                max_batch=args.max_batch,
+                                return_scheduler=True)
+    else:
+        outs = eng.serve_static(prompts, args.max_new_tokens,
+                                max_batch=args.max_batch)
+        sched = None
     dt = time.perf_counter() - t0
     n_tok = sum(len(o) for o in outs)
-    print(f"[serve] {len(prompts)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s); cache/request ≈ "
+    occ = (f", occupancy {sched.stats.mean_occupancy:.2f} over "
+           f"{sched.stats.chunks} chunks" if sched is not None else "")
+    print(f"[serve] {mode}: {len(prompts)} requests, {n_tok} "
+          f"tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s){occ}; "
+          f"cache/request ≈ "
           f"{eng.cache_bytes(args.max_batch) // args.max_batch} B")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i} ({len(prompts[i])} prompt toks) -> {o[:10]}")

@@ -95,8 +95,10 @@ def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ParallelCtx):
             return P(None, bspec, m, *([None] * (nd - 3)))
         if path_key in ("mamba_conv", "tm_shift", "cm_shift"):
             return P(None, bspec, *([None] * (nd - 2)))
-        if path_key == "length":
+        if path_key == "length":        # legacy shared scalar (ssm/hybrid)
             return P()
+        if path_key == "lengths":       # (B,) per-row position counters
+            return P(bspec)
         return P(*([None] * nd))
 
     def walk(prefix, t):

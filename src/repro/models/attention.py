@@ -214,13 +214,15 @@ def apply_attention_decode(
     params: Dict,
     x_t: jax.Array,                 # (B, 1, D)
     layer_cache: Dict[str, jax.Array],
-    t: jax.Array,                   # () int32 current position
+    t: jax.Array,                   # () or (B,) int32 current position(s)
     cfg: AttentionConfig,
     *,
     shared_lin: Optional[Dict] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One-token decode step against the layer's cache."""
-    q, k, v = _qkv(params, x_t, cfg, positions=t[None] if t.ndim == 0 else t)
+    """One-token decode step against the layer's cache. A (B,) t gives each
+    row its own position (rope + cache write + mask all per row)."""
+    positions = t[None] if t.ndim == 0 else t[:, None]      # (1,) or (B, 1)
+    q, k, v = _qkv(params, x_t, cfg, positions=positions)
     if cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
         out, new_cache = cache_lib.compressed_decode_attention(

@@ -65,6 +65,9 @@ def decode_scan(
 
     Each step emits `cur` (frozen to eos_id for finished rows), feeds the
     emitted token back through `decode_step`, and samples the next token.
+    Finished rows also freeze their per-row position counter
+    (cache["lengths"]), so an idle slot of a continuous-batching pool never
+    advances past the cache capacity no matter how long it sits empty.
     Returns (tokens (B, n_steps), next cur, finished, cache, rng).
     """
 
@@ -78,9 +81,13 @@ def decode_scan(
         tok = jnp.where(finished, eos_id, cur)
         finished = finished | (tok == eos_id)
         rng, sub = jax.random.split(rng)
+        prev_lengths = cache.get("lengths")
         logits, cache = decode_step(
             params, cfg, {"tokens": tok[:, None].astype(jnp.int32)}, cache,
             ctx=ctx)
+        if prev_lengths is not None:    # ssm/hybrid caches keep a scalar
+            cache["lengths"] = jnp.where(finished, prev_lengths,
+                                         cache["lengths"])
         nxt = sample(logits[:, 0], sub)
         return (nxt, finished, cache, rng), tok
 

@@ -21,12 +21,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MLPConfig, MoEConfig
 from repro.models import layers as L
-from repro.parallel.sharding import ParallelCtx
+from repro.parallel.sharding import ParallelCtx, shard_map as _shard_map
 
-try:  # jax>=0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def init_moe(rng: jax.Array, d_model: int, cfg: MoEConfig, mlp: MLPConfig,

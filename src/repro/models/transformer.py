@@ -282,7 +282,7 @@ def forward(
     if return_cache:
         if single_pass:
             cache = dict(entries)
-            cache["length"] = jnp.asarray(S, jnp.int32)
+            cache["lengths"] = jnp.full((B,), S, jnp.int32)
         else:
             cache = build_cache_from_sequence(
                 params, cfg, batch, max_seq=cache_max_seq or cfg.max_seq_len,
@@ -321,7 +321,7 @@ def build_cache_from_sequence(params, cfg, batch, *, max_seq, dtype, ctx):
             carry, e = body(carry, lp)
             outs.append(e)
         entries = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
-    entries["length"] = jnp.asarray(S, jnp.int32)
+    entries["lengths"] = jnp.full((B,), S, jnp.int32)
     return entries
 
 
@@ -352,18 +352,19 @@ def decode_step(
     ctx: Optional[ParallelCtx] = None,
 ) -> Tuple[jax.Array, Dict]:
     """One decode step. batch_t: {"tokens": (B,1)} or {"embeds": (B,1,D)}.
-    Returns (logits (B,1,V), updated cache)."""
-    t = cache["length"]
+    Returns (logits (B,1,V), updated cache). Positions are per row: row b
+    decodes at cache["lengths"][b]."""
+    t = cache["lengths"]                    # (B,) per-row positions
     if cfg.embedding_inputs:
         x = batch_t["embeds"].astype(_dtype(cfg))
     else:
         x = L.embed_tokens(params["embed"]["tok"], batch_t["tokens"])
     if "pos" in params.get("embed", {}):
-        x = x + params["embed"]["pos"][t][None, None]
+        x = x + params["embed"]["pos"][t][:, None]      # (B, 1, D)
     x = shard_activation(x, ctx)
     shared_lin = params.get("shared", {}).get("lin")
 
-    layer_caches = {k: v for k, v in cache.items() if k != "length"}
+    layer_caches = {k: v for k, v in cache.items() if k != "lengths"}
 
     def body(h, inp):
         lp, lc = inp
@@ -382,5 +383,5 @@ def decode_step(
         new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 
     logits = logits_from_hidden(params, cfg, x, ctx)
-    new_caches["length"] = t + 1
+    new_caches["lengths"] = t + 1
     return logits, new_caches

@@ -156,7 +156,7 @@ def init_cache(cfg: ModelConfig, *, batch: int, max_seq: int,
         "mamba_conv": jnp.zeros((cfg.num_layers, batch,
                                  cfg.ssm.conv_width - 1, conv_ch), dtype),
         "attn": {k: jnp.zeros(v.shape, v.dtype) for k, v in attn_spec.items()
-                 if k != "length"},
+                 if k != "lengths"},
         "length": jnp.zeros((), jnp.int32),
     }
 

@@ -1,1 +1,3 @@
 from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    Request, ScheduleStats, Scheduler, SlotPool)

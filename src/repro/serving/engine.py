@@ -1,4 +1,24 @@
-"""Batched serving engine: parallel prefill + device-resident chunked decode.
+"""Serving engine: slot-based continuous batching over device-resident decode.
+
+Slot/scheduler model (the default `serve` path): the engine owns a fixed
+pool of `max_batch` cache slots — one batch row of a single pool cache —
+and a `Scheduler` (serving/scheduler.py) admits/evicts requests *between*
+device-resident decode chunks:
+
+* admission: a queued request is prefilled alone (B=1), its cache rows are
+  `dynamic_update_slice`d into a free pool slot, and its per-row position
+  counter (`cache["lengths"][slot]`) starts at the prompt length;
+* decode: the whole pool scans `decode_chunk` tokens on device
+  (model.decode_scan — one host sync per chunk), idle slots riding along
+  finished-masked;
+* retirement: EOS or an exhausted per-request token budget frees the slot
+  for the next admission round, streaming the finished tokens back through
+  a completion callback.
+
+Because every cache write, rope position, attention mask and block fold is
+per-row (core/cache.py), a slot decodes identically whatever its
+neighbours are doing — continuous scheduling is byte-identical to the
+static bucketed baseline, kept as `serve_static`.
 
 Prefill strategy (linformer_causal): the full-block prefix (⌊S/c⌋·c tokens)
 is prefilled in ONE parallel forward that also materializes the compressed
@@ -7,17 +27,16 @@ attention prefills the full prompt in one pass.
 
 Chunked decode contract: generation runs as jitted `lax.scan` chunks of
 `decode_chunk` tokens (model.decode_scan) — sampling, EOS masking, and the
-cache update all stay on device, and the host syncs ONCE per chunk (to
-receive the chunk's tokens and check the all-finished early exit) instead of
-once per token. The per-token Python loop that this replaces is kept as
+cache update all stay on device, and the host syncs ONCE per chunk instead
+of once per token. The per-token Python loop is kept as
 `generate_batch_per_token` — the measured baseline of
-benchmarks/decode_throughput.py. The final partial chunk compiles a second
-scan length at most; chunk functions are cached per length.
+benchmarks/decode_throughput.py.
 
-Batching model: requests are grouped into equal-prompt-length buckets by the
-scheduler (`bucket_requests`); each bucket decodes together with a shared
-position counter. EOS'd rows keep decoding but their outputs are frozen
-(finished mask) — the standard static-batching scheme.
+Cache ownership: the chunk scan DONATES its cache buffers. The batch-level
+helpers (`decode_tokens`) consume the cache they are given; the scheduler
+path instead routes every donation through the pool's single owner
+(scheduler.SlotPool), which swaps in the returned buffers atomically — a
+live scheduler can therefore never observe a donated (invalidated) cache.
 
 The decode-time win of the paper's technique shows up here as cache size:
 c + r·S/c slots instead of S (≈14× at 32k, ≈16× at 512k) — see
@@ -26,7 +45,7 @@ benchmarks/table3_efficiency.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +68,17 @@ def bucket_requests(prompts: Sequence[Sequence[int]], max_batch: int
         for j in range(0, len(idxs), max_batch):
             buckets.append(idxs[j:j + max_batch])
     return buckets
+
+
+def _per_request_max_new(max_new_tokens: Union[int, Sequence[int]],
+                         n: int) -> List[int]:
+    if isinstance(max_new_tokens, int):
+        return [max_new_tokens] * n
+    out = list(max_new_tokens)
+    if len(out) != n:
+        raise ValueError(f"max_new_tokens has {len(out)} entries "
+                         f"for {n} prompts")
+    return out
 
 
 class ServingEngine:
@@ -82,6 +112,8 @@ class ServingEngine:
                 cache_max_seq=max_seq, cache_dtype=cache_dtype),
         )
         self._chunk_fns: Dict[int, Callable] = {}
+        self._write_slot = jax.jit(self._write_slot_impl,
+                                   donate_argnums=(0,))
 
     # -- internals ------------------------------------------------------
 
@@ -130,6 +162,44 @@ class ServingEngine:
             self._chunk_fns[n] = fn
         return fn
 
+    # -- slot-pool surface (consumed by serving/scheduler.py) -------------
+
+    def init_pool_cache(self, max_batch: int) -> Dict:
+        """A fresh (max_batch)-row pool cache, every slot idle at t=0."""
+        return model_lib.init_cache(self.cfg, batch=max_batch,
+                                    max_seq=self.max_seq,
+                                    dtype=self.cache_dtype)
+
+    @staticmethod
+    def _write_slot_impl(pool: Dict, slot: Dict, row: jax.Array) -> Dict:
+        """Copy a B=1 cache into pool row `row`. Cache leaves are
+        (L, B, ...) except the per-row `lengths` (B,)."""
+        out = {}
+        for key, v in pool.items():
+            axis = 0 if key == "lengths" else 1
+            out[key] = jax.lax.dynamic_update_slice_in_dim(
+                v, slot[key].astype(v.dtype), row, axis=axis)
+        return out
+
+    def write_pool_slot(self, pool: Dict, slot_cache: Dict, row: int) -> Dict:
+        """Admission write: donate `pool`, return it with `row` replaced by
+        the request's prefilled cache (traced row index — one compile)."""
+        return self._write_slot(pool, slot_cache, jnp.asarray(row, jnp.int32))
+
+    def pool_chunk_fn(self, n: int) -> Callable:
+        """The scheduler's decode-chunk entry point (donates the cache —
+        call through the pool owner only)."""
+        return self._chunk_fn(n)
+
+    def prefill_request(self, tokens: Sequence[int], rng: jax.Array
+                        ) -> Tuple[Dict, int]:
+        """Prefill ONE request (B=1). Returns (slot cache positioned at the
+        prompt length, first sampled token)."""
+        arr = np.asarray([list(tokens)], np.int32)
+        cache, logits = self.prefill(arr)
+        first = int(np.asarray(self._sample(logits, rng))[0])
+        return cache, first
+
     # -- public API -------------------------------------------------------
 
     def generate_batch(self, tokens: np.ndarray, max_new_tokens: int,
@@ -148,7 +218,9 @@ class ServingEngine:
                       max_new_tokens: int,
                       rng: Optional[jax.Array] = None) -> np.ndarray:
         """Decode phase given a prefilled cache and last-token logits.
-        NOTE: the chunk scan donates `cache` — it is consumed."""
+        NOTE: the chunk scan donates `cache` — it is consumed. Long-lived
+        callers that must survive donation (the scheduler) own their cache
+        through scheduler.SlotPool instead of calling this."""
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         B = logits.shape[0]
         outs = np.full((B, max_new_tokens), EOS, np.int32)
@@ -199,15 +271,90 @@ class ServingEngine:
             cur = self._sample(logits_t[:, 0], sub)
         return outs
 
-    def serve(self, prompts: Sequence[Sequence[int]], max_new_tokens: int,
-              max_batch: int = 8) -> List[List[int]]:
-        """Schedule arbitrary requests: bucket by length, batch, generate."""
+    @property
+    def supports_continuous_batching(self) -> bool:
+        """Slot scheduling needs per-row position counters, which only the
+        transformer-family caches carry; ssm/hybrid caches share a scalar
+        position (and recurrent state writes are not yet per-row)."""
+        return self.cfg.family in model_lib._TRANSFORMER_FAMILIES
+
+    def _check_budgets(self, prompts, budgets) -> None:
+        for i, p in enumerate(prompts):
+            if len(p) + budgets[i] > self.max_seq:
+                raise ValueError(
+                    f"request {i}: prompt {len(p)} + budget {budgets[i]} "
+                    f"exceeds max_seq={self.max_seq}")
+
+    def serve(self, prompts: Sequence[Sequence[int]],
+              max_new_tokens: Union[int, Sequence[int]],
+              max_batch: int = 8,
+              *,
+              arrival_chunks: Optional[Sequence[int]] = None,
+              on_token: Optional[Callable[[int, int], None]] = None,
+              on_complete: Optional[Callable[[int, List[int]], None]] = None,
+              rng: Optional[jax.Array] = None,
+              return_scheduler: bool = False):
+        """Serve arbitrary mixed-length requests with slot-based continuous
+        batching: a `max_batch`-slot pool, admission/retirement between
+        decode chunks (serving/scheduler.py).
+
+        `max_new_tokens` may be one int or a per-request sequence;
+        `arrival_chunks` optionally replays an arrival trace (request i
+        admissible after that much virtual time, in chunk units).
+        `on_token`/`on_complete` stream per-request progress. Returns
+        outputs ordered like `prompts` (or (outputs, scheduler) with
+        return_scheduler=True, for stats).
+
+        Model families whose cache has no per-row position counters
+        (ssm/hybrid) fall back to the static bucketed scheduler; streaming
+        callbacks then fire after each bucket completes."""
+        budgets = _per_request_max_new(max_new_tokens, len(prompts))
+        if not self.supports_continuous_batching:
+            if return_scheduler or arrival_chunks is not None:
+                raise ValueError(
+                    f"family {self.cfg.family!r} has a shared-scalar cache: "
+                    "no continuous scheduler (serve falls back to the "
+                    "static bucketed path, which has no scheduler stats "
+                    "and cannot replay an arrival trace)")
+            outputs = self.serve_static(prompts, budgets,
+                                        max_batch=max_batch)
+            for i, out in enumerate(outputs):
+                if on_token is not None:
+                    for tok in out:
+                        on_token(i, tok)
+                if on_complete is not None:
+                    on_complete(i, out)
+            return outputs
+        from repro.serving.scheduler import Request, Scheduler
+        arrivals = list(arrival_chunks) if arrival_chunks is not None \
+            else [0] * len(prompts)
+        self._check_budgets(prompts, budgets)
+        sched = Scheduler(self, max_batch, rng=rng)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(rid=i, tokens=tuple(p),
+                                 max_new_tokens=budgets[i],
+                                 arrival_chunk=arrivals[i]))
+        results = sched.run(on_token=on_token, on_complete=on_complete)
+        outputs = [results[i] for i in range(len(prompts))]
+        if return_scheduler:
+            return outputs, sched
+        return outputs
+
+    def serve_static(self, prompts: Sequence[Sequence[int]],
+                     max_new_tokens: Union[int, Sequence[int]],
+                     max_batch: int = 8) -> List[List[int]]:
+        """Static bucketed baseline: bucket by equal prompt length, decode
+        each bucket to its LONGEST request budget (short requests pad out
+        long ones — the waste continuous batching removes)."""
+        budgets = _per_request_max_new(max_new_tokens, len(prompts))
+        self._check_budgets(prompts, budgets)
         results: List[Optional[List[int]]] = [None] * len(prompts)
         for bucket in bucket_requests(prompts, max_batch):
             toks = np.asarray([list(prompts[i]) for i in bucket], np.int32)
-            gen = self.generate_batch(toks, max_new_tokens)
+            n = max(budgets[i] for i in bucket)
+            gen = self.generate_batch(toks, n)
             for row, i in enumerate(bucket):
-                out = gen[row].tolist()
+                out = gen[row, :budgets[i]].tolist()
                 if EOS in out:
                     out = out[:out.index(EOS)]
                 results[i] = out

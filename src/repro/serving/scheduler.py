@@ -1,0 +1,236 @@
+"""Slot-based continuous-batching scheduler over the device-resident decode
+loop.
+
+Admission/eviction contract
+---------------------------
+
+The unit of work is a *slot*: one row of a fixed (max_batch)-row pool cache.
+The scheduler mutates the pool ONLY between decode chunks:
+
+* **Admission** — a queued request whose arrival time has passed is prefilled
+  alone (B=1, its own forward), its cache rows are `dynamic_update_slice`d
+  into the pool at a free slot, its first sampled token becomes the slot's
+  `cur`, and its per-row position counter (`cache["lengths"][slot]`) is set
+  to the prompt length. Admission never perturbs live rows: every cache
+  write, rope position, attention mask and block fold is per-row
+  (core/cache.py), so a slot's math is identical whether its neighbours are
+  mid-request, freshly admitted, or idle.
+* **Decode** — the pool decodes `decode_chunk` tokens as one jitted
+  `lax.scan` (model.decode_scan): ONE host sync per chunk. Idle slots ride
+  along `finished`-masked (their outputs are frozen to EOS and their
+  position counters do not advance).
+* **Eviction / retirement** — after the chunk's host sync, each live slot's
+  tokens are scanned: an EOS or an exhausted per-request `max_new_tokens`
+  budget retires the slot (completion callback fires; the slot is free for
+  the next admission round). Tokens a row produced past its retirement point
+  are discarded — they never reach the request's output, and the slot's
+  cache rows are fully overwritten by the next admission.
+
+The pool cache has a single owner (`SlotPool`): the chunk scan donates the
+cache buffers, so `SlotPool` swaps in the returned cache each chunk and no
+other live reference can dangle (the donation-safety contract the serving
+engine relies on).
+
+Determinism: greedy decode of a request depends only on its own prompt —
+per-row masks make every row's attention independent of its neighbours — so
+continuous scheduling produces byte-identical outputs to the static bucketed
+baseline (`ServingEngine.serve_static`), under any arrival order and any
+pool size (tests/test_serving_scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import EOS
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    `arrival_chunk`: the request becomes admissible once that much virtual
+    time has passed (executed decode chunks + idle ticks, `stats.ticks`) —
+    the replay knob for arrival traces (benchmarks/serving_throughput.py);
+    0 = available immediately.
+    """
+
+    rid: int
+    tokens: Tuple[int, ...]
+    max_new_tokens: int
+    arrival_chunk: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request
+    emitted: List[int]
+
+
+@dataclasses.dataclass
+class ScheduleStats:
+    chunks: int = 0                    # decode chunks actually executed
+    idle_ticks: int = 0                # empty-pool ticks (no decode ran)
+    row_steps: int = 0                 # occupied-slot decode steps
+    occupancy_sum: float = 0.0         # Σ per-executed-chunk occupied frac
+
+    @property
+    def ticks(self) -> int:
+        """Virtual time: executed chunks + idle ticks (arrival clock)."""
+        return self.chunks + self.idle_ticks
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean occupied fraction over EXECUTED chunks (idle ticks, where
+        nothing decoded, are excluded)."""
+        return self.occupancy_sum / max(self.chunks, 1)
+
+
+class SlotPool:
+    """Sole owner of the live pool cache + per-slot decode state.
+
+    All jitted mutations (slot writes, chunk scans) donate the cache and the
+    pool swaps in the result, so external references can never observe a
+    donated buffer.
+    """
+
+    def __init__(self, engine, max_batch: int):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.cache = engine.init_pool_cache(max_batch)
+        if "lengths" not in self.cache:
+            raise ValueError(
+                "continuous batching needs per-row position counters "
+                "(cache['lengths']); this model family has a shared scalar "
+                "cache — use serve_static")
+        self.cur = np.full((max_batch,), EOS, np.int32)
+        self.finished = np.ones((max_batch,), bool)
+        self.slots: List[Optional[_Slot]] = [None] * max_batch
+
+    # -- slot table ------------------------------------------------------
+
+    def free_rows(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def occupancy(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- mutations (between chunks only) ---------------------------------
+
+    def admit(self, row: int, request: Request, slot_cache: Dict,
+              first_token: int) -> None:
+        """Write a prefilled request into `row`. `slot_cache` is a B=1 cache
+        positioned at the prompt length; `first_token` the token sampled
+        from the prefill logits (the row's first emitted token)."""
+        self.cache = self.engine.write_pool_slot(self.cache, slot_cache, row)
+        self.cur[row] = first_token
+        self.finished[row] = False
+        self.slots[row] = _Slot(request=request, emitted=[])
+
+    def retire(self, row: int) -> None:
+        self.slots[row] = None
+        self.cur[row] = EOS
+        self.finished[row] = True
+
+    def decode_chunk(self, n: int, rng: jax.Array
+                     ) -> Tuple[np.ndarray, jax.Array]:
+        """Run one n-step device-resident decode chunk over the pool.
+        Returns (tokens (max_batch, n), next rng). The chunk scan donates
+        the pool cache; the returned cache replaces it atomically."""
+        toks, cur, finished, cache, rng = self.engine.pool_chunk_fn(n)(
+            self.engine.params, jnp.asarray(self.cur),
+            jnp.asarray(self.finished), self.cache, rng)
+        self.cache = cache
+        self.cur = np.array(cur)            # writable host copies
+        self.finished = np.array(finished)
+        return np.asarray(toks), rng
+
+
+class Scheduler:
+    """FCFS continuous-batching scheduler: admit into free slots between
+    decode chunks, retire on EOS / per-request token budget, stream
+    completions. See the module docstring for the full contract."""
+
+    def __init__(self, engine, max_batch: int,
+                 rng: Optional[jax.Array] = None):
+        self.engine = engine
+        self.pool = SlotPool(engine, max_batch)
+        self.queue: deque[Request] = deque()
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.stats = ScheduleStats()
+
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    # -- internals -------------------------------------------------------
+
+    def _admit_ready(self) -> None:
+        """Fill free slots with arrived requests (FCFS; later-arriving
+        requests never jump the queue)."""
+        free = self.pool.free_rows()
+        while free and self.queue \
+                and self.queue[0].arrival_chunk <= self.stats.ticks:
+            req = self.queue.popleft()
+            self.rng, sub = jax.random.split(self.rng)
+            slot_cache, first = self.engine.prefill_request(req.tokens, sub)
+            self.pool.admit(free.pop(0), req, slot_cache, first)
+
+    def _drain_chunk(self, toks: np.ndarray,
+                     on_token: Optional[Callable[[int, int], None]],
+                     on_complete: Optional[Callable[[int, List[int]], None]],
+                     results: Dict[int, List[int]]) -> None:
+        """Distribute a chunk's tokens to their requests; retire EOS'd /
+        budget-exhausted slots."""
+        for row in range(self.pool.max_batch):
+            slot = self.pool.slots[row]
+            if slot is None:
+                continue
+            done = False
+            budget = slot.request.max_new_tokens
+            for tok in toks[row].tolist():
+                # budget check BEFORE appending: a ≤0 budget emits nothing
+                # (matching serve_static's gen[row, :0] truncation)
+                if tok == EOS or len(slot.emitted) >= budget:
+                    done = True
+                    break
+                slot.emitted.append(tok)
+                if on_token is not None:
+                    on_token(slot.request.rid, tok)
+            if len(slot.emitted) >= budget:
+                done = True
+            if done:
+                results[slot.request.rid] = slot.emitted
+                if on_complete is not None:
+                    on_complete(slot.request.rid, slot.emitted)
+                self.pool.retire(row)
+
+    # -- main loop -------------------------------------------------------
+
+    def run(self,
+            on_token: Optional[Callable[[int, int], None]] = None,
+            on_complete: Optional[Callable[[int, List[int]], None]] = None,
+            ) -> Dict[int, List[int]]:
+        """Drive the pool until every submitted request completes. Returns
+        {rid: tokens} (tokens exclude EOS, capped at max_new_tokens)."""
+        results: Dict[int, List[int]] = {}
+        chunk = self.engine.decode_chunk
+        while self.queue or self.pool.occupancy:
+            self._admit_ready()
+            if not self.pool.occupancy:
+                # nothing live yet: let virtual time pass so future
+                # arrival_chunk requests become admissible
+                self.stats.idle_ticks += 1
+                continue
+            toks, self.rng = self.pool.decode_chunk(chunk, self.rng)
+            self.stats.chunks += 1
+            self.stats.row_steps += self.pool.occupancy * chunk
+            self.stats.occupancy_sum += self.pool.occupancy \
+                / self.pool.max_batch
+            self._drain_chunk(toks, on_token, on_complete, results)
+        return results

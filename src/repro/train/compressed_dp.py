@@ -8,9 +8,18 @@ cross-pod hop runs on int8 payloads with error feedback (Karimireddy et al.,
 quantized gradients, and each pod's quantization error is fed back into its
 next step — unbiased over time, 4× fewer DCN bytes than fp32 (2× vs bf16).
 
-Built with a partial-auto shard_map: only the "pod" axis is manual (its psum
-is replaced by quantize → psum(int32) → dequantize); the within-pod
-data/model axes stay under GSPMD as usual.
+Built with an EXPLICIT pod axis under plain GSPMD (no shard_map): the batch
+is reshaped to a leading (n_pods, ...) axis sharded P("pod"), params are
+broadcast along it (each device holds its own pod's copy — the same bytes as
+replication), and `jax.vmap` over that axis yields per-pod gradients with a
+materialized pod dimension. The error-feedback quantize → int32 sum →
+dequantize then runs as ordinary array ops whose cross-pod all-reduce the
+partitioner inserts for the `sum(axis=0)`. An earlier partial-manual
+shard_map formulation (only "pod" manual, data/model under GSPMD) hits an
+XLA SPMD-partitioner CHECK (`sharding.IsManualSubgroup()`) when a scanned
+layer stack is partitioned inside the partial-manual region on the pinned
+toolchain — the explicit-axis form is equivalent math with none of that
+fragility.
 """
 from __future__ import annotations
 
@@ -19,7 +28,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.models import model as model_lib
@@ -27,30 +36,28 @@ from repro.optim import adamw_update, clip_by_global_norm, make_schedule
 from repro.optim.grad_utils import quantize_int8
 from repro.parallel.sharding import ParallelCtx
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
 
+def compressed_pod_reduce(grads_pod, residual_pod, n_pods: int):
+    """Error-feedback int8 mean-reduction over an explicit leading pod axis.
 
-def compressed_pod_psum(grads, residual, axis: str = "pod"):
-    """Error-feedback int8 psum over `axis` (call inside shard_map).
-
-    grads: per-pod fp32/bf16 gradient pytree. residual: this pod's feedback
-    state (fp32, same structure). Returns (mean-reduced fp32 grads, new
-    residual). int8 payloads are summed in int32."""
-    n = jax.lax.psum(1, axis)
+    grads_pod: per-pod gradients (n_pods, ...) per leaf — each pod's own
+    (uncompressed) contribution. residual_pod: matching feedback state.
+    Returns (mean-reduced fp32 grads without the pod axis, new residual).
+    int8 payloads are summed in int32; each pod keeps `tot - sent` so
+    quantization error re-enters its next step (unbiased over time).
+    """
 
     def one(g, r):
         tot = g.astype(jnp.float32) + r
-        q, scale = quantize_int8(tot)
-        qsum = jax.lax.psum(q.astype(jnp.int32), axis)
-        ssum = jax.lax.psum(scale, axis) / n     # shared scale (mean)
-        reduced = qsum.astype(jnp.float32) * ssum / n
-        sent = q.astype(jnp.float32) * scale     # what this pod contributed
+        q, scale = jax.vmap(quantize_int8)(tot)          # scale: (n_pods,)
+        qsum = q.astype(jnp.int32).sum(axis=0)           # the DCN hop
+        ssum = scale.mean()                              # shared scale (mean)
+        reduced = qsum.astype(jnp.float32) * ssum / n_pods
+        bshape = (n_pods,) + (1,) * (tot.ndim - 1)
+        sent = q.astype(jnp.float32) * scale.reshape(bshape)
         return reduced, tot - sent
 
-    pairs = jax.tree.map(one, grads, residual)
+    pairs = jax.tree.map(one, grads_pod, residual_pod)
     red = jax.tree.map(lambda t: t[0], pairs,
                        is_leaf=lambda t: isinstance(t, tuple))
     res = jax.tree.map(lambda t: t[1], pairs,
@@ -78,49 +85,49 @@ def make_compressed_train_step(
 
     Requires a mesh with a "pod" axis and params NOT FSDP-sharded over it
     (the pod axis is pure DP, so per-pod grads are defined).
-
-    Known limitation: with params explicitly PLACED as 2-axis-sharded
-    (vocab over "model" + FSDP over "data"), XLA's SPMD partitioner hits a
-    CHECK failure partitioning the embedding gather inside the partial-manual
-    region (ExpandDeviceGroupsWithIota, observed in XLA for jax 0.8). Use
-    TP-only placement (fsdp="none") with compressed DP, or leave params
-    unplaced and let GSPMD choose.
     """
     mesh = ctx.mesh
     assert mesh is not None and "pod" in mesh.axis_names
     assert "pod" not in ctx.fsdp_axes, \
         "compressed DP needs params replicated across pods"
+    n_pods = mesh.shape["pod"]
     sched = make_schedule(opt_cfg)
-    # inside the pod-manual region, activation constraints must not mention
-    # the manual axis
+    # inside the vmapped per-pod body, activation constraints must not
+    # mention the pod axis (it is the vmapped dimension)
     inner_ctx = dataclasses.replace(ctx, exclude_data_axes=("pod",))
 
+    def pod_sharding(x):
+        return NamedSharding(mesh, P(*(("pod",) + (None,) * (x.ndim - 1))))
+
     def step(params, opt_state, residual, batch):
-        def per_pod(params_, residual_, batch_):
-            residual_ = jax.tree.map(lambda r: r[0], residual_)
+        # explicit pod axis: each pod sees its own batch shard and its own
+        # copy of the params (broadcast_to + P('pod') = one copy per pod on
+        # device, the same bytes as plain replication)
+        params_pod = jax.tree.map(
+            lambda p: jax.lax.with_sharding_constraint(
+                jnp.broadcast_to(p[None], (n_pods,) + p.shape),
+                pod_sharding(p[None])), params)
+        batch_pod = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]),
+                NamedSharding(mesh, P("pod", inner_ctx.data_axes))),
+            batch)
 
-            def loss_fn(p):
-                return model_lib.loss_fn(p, cfg, batch_, ctx=inner_ctx)
+        def mean_loss(pp):
+            losses, metrics = jax.vmap(
+                lambda p, b: model_lib.loss_fn(p, cfg, b, ctx=inner_ctx)
+            )(pp, batch_pod)
+            return losses.mean(), metrics
 
-            (_, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params_)
-            grads, residual_ = compressed_pod_psum(grads, residual_, "pod")
-            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
-            residual_ = jax.tree.map(lambda r: r[None], residual_)
-            return grads, residual_, metrics
+        (_, metrics), grads_pod = jax.value_and_grad(
+            mean_loss, has_aux=True)(params_pod)
+        # d(mean over pods)/d params_pod[i] = grad_i / n_pods; scale back to
+        # each pod's OWN gradient so the EF residual semantics match the
+        # per-pod formulation
+        grads_pod = jax.tree.map(lambda g: g * n_pods, grads_pod)
+        grads, residual = compressed_pod_reduce(grads_pod, residual, n_pods)
+        metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
 
-        rep = jax.tree.map(lambda _: P(), params)
-        pod0 = jax.tree.map(lambda _: P("pod"), residual)
-        mspec = {"loss": P(), "aux_loss": P(), "tokens": P(),
-                 "perplexity": P()}
-        # partial-manual shard_map: only "pod" is manual; data/model stay
-        # under GSPMD inside the body
-        grads, residual, metrics = _shard_map(
-            per_pod, mesh=mesh,
-            in_specs=(rep, pod0, jax.tree.map(lambda _: P("pod"), batch)),
-            out_specs=(rep, pod0, mspec),
-            check_vma=False, axis_names=frozenset({"pod"}),
-        )(params, residual, batch)
         grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
         lr = sched(opt_state["step"])
         params, opt_state = adamw_update(grads, opt_state, params, opt_cfg,

@@ -68,7 +68,7 @@ class TestDecode:
         cache = init_compressed_cache(
             num_layers=1, batch=2, max_seq=32, block_size=8, block_slots=4,
             num_kv_heads=2, head_dim=8, dtype=jnp.float32)
-        lc = {kk: vv[0] for kk, vv in cache.items() if kk != "length"}
+        lc = {kk: vv[0] for kk, vv in cache.items() if kk != "lengths"}
         outs = []
         for t in range(32):
             o, lc = compressed_decode_attention(
@@ -91,7 +91,7 @@ class TestDecode:
         cache = init_compressed_cache(
             num_layers=1, batch=2, max_seq=16, block_size=8, block_slots=4,
             num_kv_heads=2, head_dim=8, dtype=jnp.float32)
-        lc = {kk: vv[0] for kk, vv in cache.items() if kk != "length"}
+        lc = {kk: vv[0] for kk, vv in cache.items() if kk != "lengths"}
         for t in range(7):
             _, lc = compressed_decode_attention(
                 q[:, t:t + 1], k[:, t:t + 1], v[:, t:t + 1], lc, EF, EF,
