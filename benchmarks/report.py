@@ -1,13 +1,19 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
-the dry-run artifacts.
+the dry-run artifacts, plus a summary of the committed BENCH_*.json
+perf-trajectory records (both serving traces, decode throughput, ...).
 
     PYTHONPATH=src python -m benchmarks.report [--mesh 16x16] [--tag TAG]
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
+import sys
 from collections import defaultdict
 
+from benchmarks.common import REPO_ROOT
 from benchmarks.roofline import load_records
 
 
@@ -33,11 +39,52 @@ HEADER = ("| arch | shape | attn | FLOPs/dev | mem GiB/dev | compute s "
           "|---|---|---|---|---|---|---|---|---|---|---|")
 
 
+def bench_json_summary(out=None):
+    """Pretty-print the committed BENCH_*.json records. The serving record
+    carries TWO traces: `mixed` (continuous vs static scheduling) and
+    `long_prompt` (chunked vs monolithic admission prefill). Written to
+    stderr by default so `report > section.md` (the EXPERIMENTS.md
+    workflow) keeps only the tables on stdout."""
+    out = out if out is not None else sys.stderr
+    print_ = lambda *a: print(*a, file=out)
+    paths = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
+    if not paths:
+        return
+    print_("\n### Committed perf trajectory (BENCH_*.json)\n")
+    for path in paths:
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        with open(path) as f:
+            rec = json.load(f)
+        print_(f"* **{name}**")
+        if name == "serving":
+            mixed = rec.get("mixed")
+            if mixed:
+                print_(f"  * mixed trace ({mixed['mode']}): continuous "
+                      f"{mixed['continuous']['tok_per_s']} tok/s vs static "
+                      f"{mixed['static']['tok_per_s']} tok/s "
+                      f"({mixed['speedup']}x, occupancy "
+                      f"{mixed['continuous']['mean_occupancy']})")
+            lp = rec.get("long_prompt")
+            if lp:
+                print_(f"  * long-prompt trace ({lp['mode']}, lens "
+                      f"{lp['long_prompt_lens']}, chunk "
+                      f"{lp['prefill_chunk']}): chunked vs monolithic "
+                      f"admission {lp['speedup_cold']}x cold / "
+                      f"{lp['speedup_warm']}x warm "
+                      f"({lp['chunked']['tok_per_s_cold']} vs "
+                      f"{lp['monolithic']['tok_per_s_cold']} tok/s cold)")
+        else:
+            scalars = {k: v for k, v in rec.items()
+                       if not isinstance(v, (dict, list))}
+            print_(f"  * {json.dumps(scalars, sort_keys=True)}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
+    bench_json_summary()
 
     for mesh in ([args.mesh] if args.mesh else ["16x16", "2x16x16"]):
         recs = load_records(mesh=mesh, tag=args.tag)

@@ -32,11 +32,22 @@ def main() -> None:
         "table3_efficiency": table3_efficiency.run,
         "roofline": roofline.run,
         "decode_throughput": decode_throughput.run,
+        # both serving traces (mixed continuous-vs-static + long-prompt
+        # chunked-vs-monolithic admission); records BENCH_serving.json
         "serving_throughput": serving_throughput.run,
+    }
+    # single-trace serving aliases, --only selectable (CSV only — a partial
+    # run never clobbers the committed two-trace BENCH_serving.json)
+    aliases = {
+        "serving_mixed":
+            lambda quick: serving_throughput.run(quick, trace="mixed"),
+        "serving_long_prompt":
+            lambda quick: serving_throughput.run(quick, trace="long_prompt"),
     }
     if args.only:
         keep = set(args.only.split(","))
-        benches = {k: v for k, v in benches.items() if k in keep}
+        benches = {k: v for k, v in {**benches, **aliases}.items()
+                   if k in keep}
 
     failures = 0
     for name, fn in benches.items():

@@ -1,26 +1,35 @@
-"""End-to-end serving throughput: continuous (slot) batching vs the static
-bucketed baseline on a mixed-length arrival trace.
+"""End-to-end serving throughput, two traces:
 
-The workload is adversarial for static batching in exactly the way real
-traffic is: prompts of several lengths (so the static scheduler fragments
-into per-length buckets) and a long-tailed generation-budget mix (a few long
-requests per bucket, so short rows sit EOS-frozen while the bucket drains).
-Continuous batching retires a slot the moment its request completes and
-admits the next queued request between decode chunks, keeping the pool full.
+**mixed** — continuous (slot) batching vs the static bucketed baseline on a
+mixed-length arrival trace. The workload is adversarial for static batching
+in exactly the way real traffic is: prompts of several lengths (so the
+static scheduler fragments into per-length buckets) and a long-tailed
+generation-budget mix (a few long requests per bucket, so short rows sit
+EOS-frozen while the bucket drains). Continuous batching retires a slot the
+moment its request completes and admits the next queued request between
+decode chunks, keeping the pool full. The slot pool is at most HALF the
+request count, so the continuous scheduler must actually recycle slots to
+win. A second continuous run replays a Poisson-ish arrival trace to record
+occupancy under staggered arrivals rather than an instantaneous backlog.
 
-The slot pool is at most HALF the request count, so the continuous scheduler
-must actually recycle slots to win. Both schedulers see identical requests
-and produce byte-identical greedy outputs (asserted here and in
-tests/test_serving_scheduler.py) — the comparison is pure scheduling.
+**long_prompt** — chunked admission (``prefill_chunk > 0``) vs monolithic
+admission within the continuous scheduler, on a trace where long prompts of
+SEVERAL DISTINCT lengths arrive into a pool of short decoding requests.
+This is adversarial for monolithic admission twice over: (a) every distinct
+prompt length compiles its own B=1 prefill forward — the cold (first-serve)
+wall time grows with the number of novel lengths, while chunked admission
+re-uses one fixed chunk shape for every length (padding the final chunk);
+(b) each long prefill stalls every decoding slot for a full forward
+(head-of-line blocking), while chunked admission interleaves chunk and
+decode rounds and batches co-arriving prompts into shared forwards. Both
+cold (includes jit, the realistic serve-novel-traffic number) and warm
+(steady-state) walls are reported; outputs are asserted byte-identical.
 
-A second continuous run replays a Poisson-ish arrival trace (requests become
-admissible at increasing chunk indices) to record occupancy under staggered
-arrivals rather than an instantaneous backlog.
+Both traces emit ``name,us_per_call,derived`` CSV lines (us_per_call =
+microseconds per generated token) and are recorded together in
+BENCH_serving.json at the repo root.
 
-Emits ``name,us_per_call,derived`` CSV lines (us_per_call = microseconds per
-generated token) and writes BENCH_serving.json at the repo root.
-
-    python -m benchmarks.serving_throughput [--smoke]
+    python -m benchmarks.serving_throughput [--smoke] [--trace mixed|long_prompt|both]
 """
 from __future__ import annotations
 
@@ -38,7 +47,8 @@ from repro.models import model as M
 from repro.serving import ServingEngine
 
 
-def _cfg(max_seq: int) -> ModelConfig:
+def _cfg(max_seq: int, block_size: int = 8, block_slots: int = 4,
+         backend: str = "auto") -> ModelConfig:
     return ModelConfig(
         name="serving-bench",
         num_layers=2,
@@ -47,14 +57,21 @@ def _cfg(max_seq: int) -> ModelConfig:
         max_seq_len=max_seq,
         attention=AttentionConfig(
             kind="linformer_causal",
+            backend=backend,
             num_heads=4,
             num_kv_heads=2,
             head_dim=16,
-            linformer=LinformerConfig(block_size=8, block_slots=4),
+            linformer=LinformerConfig(block_size=block_size,
+                                      block_slots=block_slots),
         ),
         dtype="float32",
         remat="none",
     )
+
+
+# ---------------------------------------------------------------------------
+# Trace 1: mixed-length arrivals, continuous vs static (PR 2's comparison)
+# ---------------------------------------------------------------------------
 
 
 def _trace(n_requests: int, long_budget: int, short_budget: int, seed: int):
@@ -96,7 +113,7 @@ def _eos_free_setup(n_requests, long_budget, short_budget, max_seq,
     raise RuntimeError("no EOS-free serving trace found in 16 seeds")
 
 
-def run(quick: bool = True):
+def run_mixed(quick: bool = True) -> dict:
     if quick:
         n_requests, pool, long_b, short_b, chunk = 8, 4, 24, 6, 6
         iters = 3
@@ -153,7 +170,7 @@ def run(quick: bool = True):
          0.0, f"occupancy={sched_arr.stats.mean_occupancy:.2f},"
               f"idle_ticks={sched_arr.stats.idle_ticks}")
 
-    write_bench_json("serving", {
+    return {
         "mode": "smoke" if quick else "full",
         "n_requests": n_requests,
         "slot_pool": pool,
@@ -171,15 +188,149 @@ def run(quick: bool = True):
             "idle_ticks": sched_arr.stats.idle_ticks},
         "speedup": round(speedup, 2),
         "outputs_match_static": True,
-    })
-    return {"speedup": speedup, "tok_s_cont": tok_s_cont,
-            "tok_s_static": tok_s_static, "occupancy": occ}
+    }
+
+
+# ---------------------------------------------------------------------------
+# Trace 2: long-prompt arrivals, chunked vs monolithic admission
+# ---------------------------------------------------------------------------
+
+
+def _long_prompt_trace(quick: bool, seed: int = 0):
+    """Short decoding traffic + long prompts of several DISTINCT lengths
+    (each novel length costs monolithic admission a fresh B=1 prefill
+    compile; two of the longs co-arrive, so chunked admission also batches
+    them into shared chunk forwards). Lengths are block multiples; the
+    longs are NOT all chunk multiples, so the padded-final-chunk path is
+    exercised too."""
+    rng = np.random.default_rng(seed)
+    if quick:
+        block, pchunk, dchunk, pool = 16, 64, 4, 4
+        short_lens = [16, 32, 48, 64]
+        long_lens = [256, 320, 336]
+        short_b, long_b = 6, 8
+    else:
+        block, pchunk, dchunk, pool = 32, 256, 8, 8
+        short_lens = [32, 64, 96, 128, 160, 192]
+        long_lens = [2048, 2304, 2560, 3104]
+        short_b, long_b = 8, 12
+    prompts, budgets, arrivals = [], [], []
+    for L in short_lens:                      # shorts arrive first, decode
+        prompts.append(list(rng.integers(4, 512, L)))
+        budgets.append(short_b)
+        arrivals.append(0)
+    for i, L in enumerate(long_lens):         # longs arrive into live pool
+        prompts.append(list(rng.integers(4, 512, L)))
+        budgets.append(long_b)
+        arrivals.append(1 if i < 2 else 2)    # first two co-arrive: batching
+    max_seq = max(len(p) + b for p, b in zip(prompts, budgets)) + dchunk
+    max_seq = ((max_seq + pchunk - 1) // pchunk) * pchunk
+    return (prompts, budgets, arrivals,
+            dict(block=block, pchunk=pchunk, dchunk=dchunk, pool=pool,
+                 max_seq=max_seq))
+
+
+def run_long_prompt(quick: bool = True) -> dict:
+    """Cold (first serve, includes jit for every novel shape) and warm
+    (steady state) end-to-end wall, monolithic vs chunked admission.
+
+    Engines use the reference backend: the comparison is pure admission
+    policy, and the interpret-mode kernels' per-grid-step overhead at
+    multi-thousand-token prompts would swamp the scheduling signal on CPU
+    (on TPU the fused path is the default for both variants alike)."""
+    prompts, budgets, arrivals, p = _long_prompt_trace(quick)
+    cfg = _cfg(p["max_seq"], p["block"], 4, backend="reference")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def fresh(prefill_chunk: int) -> ServingEngine:
+        return ServingEngine(params, cfg, max_seq=p["max_seq"],
+                             cache_dtype=jnp.float32,
+                             decode_chunk=p["dchunk"],
+                             prefill_chunk=prefill_chunk)
+
+    def serve(eng):
+        return eng.serve(prompts, budgets, max_batch=p["pool"],
+                         arrival_chunks=arrivals, return_scheduler=True)
+
+    results = {}
+    outs = {}
+    for name, pchunk in (("monolithic", 0), ("chunked", p["pchunk"])):
+        eng = fresh(pchunk)               # fresh jit caches: genuine cold
+        t0 = time.perf_counter()
+        out_cold, _ = serve(eng)
+        t_cold = time.perf_counter() - t0
+        serve(eng)                        # settle stragglers before timing
+        walls = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out_warm, sched_w = serve(eng)
+            walls.append(time.perf_counter() - t0)
+        t_warm = float(np.median(walls))
+        assert out_warm == out_cold
+        outs[name] = out_cold
+        n_tok = sum(len(o) for o in out_cold)
+        results[name] = {
+            "wall_cold_s": round(t_cold, 3),
+            "wall_warm_s": round(t_warm, 3),
+            "tok_per_s_cold": round(n_tok / t_cold, 1),
+            "tok_per_s_warm": round(n_tok / t_warm, 1),
+            "mean_occupancy": round(sched_w.stats.mean_occupancy, 3),
+            "prefill_forwards": sched_w.stats.prefill_forwards,
+            "prefill_tokens": sched_w.stats.prefill_tokens,
+        }
+        emit(f"serving_throughput/long_prompt/{name}",
+             t_cold / n_tok * 1e6,
+             f"tok_per_s_cold={n_tok / t_cold:.1f},"
+             f"tok_per_s_warm={n_tok / t_warm:.1f}")
+
+    assert outs["chunked"] == outs["monolithic"], \
+        "chunked and monolithic admission diverged"
+    speedup_cold = (results["monolithic"]["wall_cold_s"]
+                    / results["chunked"]["wall_cold_s"])
+    speedup_warm = (results["monolithic"]["wall_warm_s"]
+                    / results["chunked"]["wall_warm_s"])
+    emit("serving_throughput/long_prompt/speedup", 0.0,
+         f"cold={speedup_cold:.2f}x,warm={speedup_warm:.2f}x")
+    return {
+        "mode": "smoke" if quick else "full",
+        "n_requests": len(prompts),
+        "long_prompt_lens": sorted({len(pr) for pr in prompts
+                                    if len(pr) > p["pchunk"]}),
+        "slot_pool": p["pool"],
+        "prefill_chunk": p["pchunk"],
+        "decode_chunk": p["dchunk"],
+        "monolithic": results["monolithic"],
+        "chunked": results["chunked"],
+        "speedup_cold": round(speedup_cold, 2),
+        "speedup_warm": round(speedup_warm, 2),
+        "outputs_match": True,
+    }
+
+
+def run(quick: bool = True, trace: str = "both"):
+    payload = {}
+    if trace in ("mixed", "both"):
+        payload["mixed"] = run_mixed(quick)
+    if trace in ("long_prompt", "both"):
+        payload["long_prompt"] = run_long_prompt(quick)
+    if trace == "both":
+        # the committed perf record carries BOTH traces; selective runs
+        # print CSV only so a partial run can't clobber the artifact
+        write_bench_json("serving", payload)
+    return payload
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast mode for the scripts/check.sh smoke gate")
+    ap.add_argument("--trace", default="both",
+                    choices=["mixed", "long_prompt", "both"])
     args = ap.parse_args()
-    res = run(quick=args.smoke)
-    print(f"# speedup continuous/static = {res['speedup']:.2f}x")
+    res = run(quick=args.smoke, trace=args.trace)
+    if "mixed" in res:
+        print(f"# mixed: continuous/static = {res['mixed']['speedup']:.2f}x")
+    if "long_prompt" in res:
+        lp = res["long_prompt"]
+        print(f"# long_prompt: chunked/monolithic cold = "
+              f"{lp['speedup_cold']:.2f}x, warm = {lp['speedup_warm']:.2f}x")

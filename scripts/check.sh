@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
 # One-entry-point smoke gate for builders:
-#   1. tier-1 test suite (ROADMAP.md "Tier-1 verify")
-#   2. the central-complexity-claim benchmark as a quick perf canary
-#   3. the continuous-batching serving benchmark (--smoke) so the scheduler
-#      path is exercised and BENCH_serving.json records the perf trajectory
+#   1. docs link check (every file referenced from README/docs exists)
+#   2. tier-1 test suite (ROADMAP.md "Tier-1 verify")
+#   3. the central-complexity-claim benchmark as a quick perf canary
+#   4. the two-trace serving benchmark (--smoke): the mixed continuous-vs-
+#      static trace AND the long-prompt chunked-admission-prefill trace,
+#      recording both in BENCH_serving.json (the perf trajectory)
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== docs link check =="
+python scripts/check_docs.py
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
@@ -16,7 +21,7 @@ python -m pytest -x -q
 echo "== smoke benchmark: table1_complexity =="
 python -m benchmarks.run --only table1_complexity
 
-echo "== smoke benchmark: serving_throughput =="
+echo "== smoke benchmark: serving_throughput (mixed + long-prompt) =="
 python -m benchmarks.serving_throughput --smoke
 
 echo "== check.sh: all gates passed =="

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Docs link check: every repo file referenced from README.md or docs/*.md
+must exist, so the docs cannot silently rot as the tree moves.
+
+Checked references:
+  * markdown links whose target is a relative path (not http/#anchor)
+  * backtick-quoted tokens that look like repo paths (contain a '/' and a
+    known suffix, e.g. `src/repro/serving/engine.py`, `docs/serving.md`)
+  * `python -m pkg.module` invocations in fenced blocks / backticks
+
+Run from anywhere: paths resolve against the repo root.
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_GLOBS = ["README.md", "docs"]
+PATH_SUFFIXES = (".py", ".sh", ".md", ".json", ".txt", ".ini")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#]+)\)")
+TICK_RE = re.compile(r"`([^`\s]+)`")
+MODULE_RE = re.compile(r"python -m ([A-Za-z0-9_.]+)")
+
+
+def doc_files():
+    for entry in DOC_GLOBS:
+        path = os.path.join(ROOT, entry)
+        if os.path.isfile(path):
+            yield path
+        elif os.path.isdir(path):
+            for name in sorted(os.listdir(path)):
+                if name.endswith(".md"):
+                    yield os.path.join(path, name)
+
+
+def looks_like_repo_path(tok: str) -> bool:
+    if not tok.endswith(PATH_SUFFIXES):
+        return False
+    # needs a directory part OR be a well-known root file
+    return "/" in tok or tok in ("README.md", "ROADMAP.md", "CHANGES.md",
+                                 "PAPER.md", "PAPERS.md", "SNIPPETS.md",
+                                 "pytest.ini")
+
+
+def module_to_path(mod: str) -> str | None:
+    """repro.* modules live under src/; benchmarks.* at the root."""
+    rel = mod.replace(".", "/")
+    for cand in (f"src/{rel}.py", f"{rel}.py",
+                 f"src/{rel}/__init__.py", f"{rel}/__init__.py"):
+        if os.path.exists(os.path.join(ROOT, cand)):
+            return cand
+    return None
+
+
+def main() -> int:
+    missing = []
+    checked = 0
+    for doc in doc_files():
+        rel_doc = os.path.relpath(doc, ROOT)
+        base = os.path.dirname(doc)
+        text = open(doc).read()
+        refs = set()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1).strip()
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            refs.add((target, True))          # links resolve doc-relative
+        for m in TICK_RE.finditer(text):
+            tok = m.group(1).strip().removeprefix("./")
+            if looks_like_repo_path(tok):
+                refs.add((tok, False))        # path tokens are repo-relative
+        for target, doc_relative in sorted(refs):
+            checked += 1
+            # docs shorthand `serving/engine.py` means src/repro/...
+            roots = [ROOT, os.path.join(ROOT, "src"),
+                     os.path.join(ROOT, "src", "repro")]
+            if doc_relative:
+                roots.insert(0, base)
+            if not any(os.path.exists(os.path.join(r, target))
+                       for r in roots):
+                missing.append(f"{rel_doc}: {target}")
+        for m in MODULE_RE.finditer(text):
+            mod = m.group(1)
+            if mod.split(".")[0] not in ("repro", "benchmarks"):
+                continue                       # only this repo's modules
+            checked += 1
+            if module_to_path(mod) is None:
+                missing.append(f"{rel_doc}: python -m {mod}")
+    if missing:
+        print("check_docs: MISSING references:")
+        for item in missing:
+            print(f"  {item}")
+        return 1
+    print(f"check_docs: {checked} doc references OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

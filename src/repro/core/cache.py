@@ -21,6 +21,14 @@ admits/evicts rows between decode chunks, so rows are never aligned); masks,
 ring-buffer writes and the block fold are all per-row. The decode attention
 functions still accept a scalar ``t`` (broadcast to every row), which is the
 legacy shared-position behaviour.
+
+Chunked prefill: :func:`compressed_prefill_chunk` / :func:`full_prefill_chunk`
+are the multi-token siblings of the decode steps — they commit one P-token
+prefill chunk per row at the row's own offset (mid-prefill cache writes at
+arbitrary per-row positions; for the compressed cache every chunk boundary
+is a block-fold boundary, so chunks fold straight into compressed slots).
+The serving scheduler uses them to stream long prompts into pool slots
+between decode chunks.
 """
 from __future__ import annotations
 
@@ -163,6 +171,78 @@ def compressed_decode_attention(
                  "comp_k": comp_k, "comp_v": comp_v}
 
 
+def compressed_prefill_chunk(
+    q: jax.Array,             # (B, P, H, Dh) — one prefill chunk, rope applied
+    k: jax.Array,             # (B, P, Hkv, Dh)
+    v: jax.Array,
+    layer_cache: Dict[str, jax.Array],
+    E: jax.Array,             # (c, r) or (Hkv, c, r)
+    F: jax.Array,
+    t0: jax.Array,            # (B,) int32 — row's current length, multiple of c
+    *,
+    scale: Optional[float] = None,
+    backend: str = "reference",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunked-prefill step of blockwise-causal Linformer attention.
+
+    Mid-prefill cache write at an arbitrary PER-ROW offset: row b's chunk
+    covers absolute positions [t0[b], t0[b] + P); every chunk boundary is a
+    block-fold boundary (t0 and P are multiples of c), so the chunk's P/c
+    blocks fold straight into r compressed slots each, written at slot offset
+    (t0[b] // c)·r — the raw ring buffer is untouched (it only ever holds the
+    current incomplete block, and a chunk never ends mid-block; remainder
+    tokens go through the decode path). Attention then reads the UPDATED slot
+    buffer: [own block, causal | compressed slots of absolute blocks
+    < t0//c + j] — identical math to the monolithic prefill forward when the
+    cache dtype matches the activation dtype. With a lower-precision cache
+    (e.g. bf16 under fp32 compute) earlier chunks' slots are read back
+    cache-rounded, where the monolithic forward attends them at full
+    precision and only rounds when materializing the cache — the standard
+    chunked-prefill tradeoff.
+
+    Rows whose chunk is partially padded (n_valid < P, whole padded blocks at
+    the END) write garbage slots beyond their valid blocks; those slots are
+    never visible (visibility is bounded by the row's committed length) and
+    are overwritten by the next chunk or by the decode-time block fold before
+    visibility reaches them, so no masking of the write is needed.
+
+    Returns (out (B, P, H, Dh), updated per-layer cache).
+    """
+    raw_k, raw_v = layer_cache["raw_k"], layer_cache["raw_v"]
+    comp_k, comp_v = layer_cache["comp_k"], layer_cache["comp_v"]
+    B, P, Hkv, Dh = k.shape
+    c = raw_k.shape[1]
+    r = E.shape[-1]
+    scale_ = scale if scale is not None else q.shape[-1] ** -0.5
+    if P % c != 0:
+        raise ValueError(f"prefill chunk P={P} not a multiple of block {c}")
+    nb = P // c
+
+    from repro.core.causal import compress_blocks
+    kbar = compress_blocks(k.reshape(B, nb, c, Hkv, Dh), E)
+    vbar = compress_blocks(v.reshape(B, nb, c, Hkv, Dh), F)
+    t0 = rowwise_t(t0, B)
+    slot0 = (t0 // c) * r
+    comp_k = _row_update(comp_k, kbar.reshape(B, nb * r, Hkv, Dh)
+                         .astype(comp_k.dtype), slot0)
+    comp_v = _row_update(comp_v, vbar.reshape(B, nb * r, Hkv, Dh)
+                         .astype(comp_v.dtype), slot0)
+
+    start_blocks = t0 // c
+    if backend == "fused":
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.fused_chunk_prefill_attention(
+            q, k, v, comp_k, comp_v, start_blocks,
+            block_size=c, block_slots=r, scale=scale_)
+    else:
+        from repro.core.causal import blockwise_causal_prefix_attention
+        out = blockwise_causal_prefix_attention(
+            q, k, v, comp_k, comp_v, start_blocks,
+            block_size=c, block_slots=r, scale=scale_)
+    return out, {"raw_k": raw_k, "raw_v": raw_v,
+                 "comp_k": comp_k, "comp_v": comp_v}
+
+
 # ---------------------------------------------------------------------------
 # Full KV cache (standard-attention baseline)
 # ---------------------------------------------------------------------------
@@ -210,4 +290,37 @@ def full_decode_attention(
     s = jnp.where(ok[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
     out = jnp.einsum("bhgs,bshd->bhgd", p, cv).reshape(B, 1, H, Dh)
+    return out, {"k": ck, "v": cv}
+
+
+def full_prefill_chunk(
+    q: jax.Array,             # (B, P, H, Dh)
+    k: jax.Array,             # (B, P, Hkv, Dh)
+    v: jax.Array,
+    layer_cache: Dict[str, jax.Array],   # k/v: (B, S, Hkv, Dh)
+    t0: jax.Array,            # (B,) int32 — row's current length
+    *,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunked-prefill step of standard causal attention with a full KV
+    cache: row b's chunk is written at positions [t0[b], t0[b] + P) and each
+    query i attends cache positions ≤ t0[b] + i. Padded tail tokens
+    (n_valid < P) write garbage the decode path overwrites position-by-
+    position before its mask can reach them."""
+    ck, cv = layer_cache["k"], layer_cache["v"]
+    B, S, Hkv, Dh = ck.shape
+    P = q.shape[1]
+    H = q.shape[2]
+    G = H // Hkv
+    scale_ = scale if scale is not None else Dh ** -0.5
+    t0 = rowwise_t(t0, B)
+    ck = _row_update(ck, k.astype(ck.dtype), t0)
+    cv = _row_update(cv, v.astype(cv.dtype), t0)
+    qg = q.reshape(B, P, Hkv, G, Dh)
+    s = jnp.einsum("bphgd,bshd->bhgps", qg, ck).astype(jnp.float32) * scale_
+    qpos = t0[:, None] + jnp.arange(P)[None, :]              # (B, P)
+    ok = jnp.arange(S)[None, None, :] <= qpos[:, :, None]    # (B, P, S)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgps,bshd->bphgd", p, cv).reshape(B, P, H, Dh)
     return out, {"k": ck, "v": cv}

@@ -93,6 +93,76 @@ def blockwise_causal_attention(
     return out.reshape(B, S, H, Dh)
 
 
+def blockwise_causal_prefix_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    comp_k: jax.Array,
+    comp_v: jax.Array,
+    start_blocks: jax.Array,
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Chunked-prefill form: a chunk of queries at a NONZERO per-row block
+    offset attends [own block, causal | slot-resident compressed prefix].
+
+    q: (B, P, H, Dh) — one prefill chunk, P % block_size == 0, whose row b
+    starts at absolute position start_blocks[b]·c; k, v: (B, P, Hkv, Dh) the
+    chunk's own keys/values (local, exact attention); comp_k, comp_v:
+    (B, M, Hkv, Dh) the cache's compressed slot buffers with the chunk's own
+    blocks ALREADY folded in at slot offset start_blocks·r (write first,
+    attend after — chunk-internal global visibility then needs no separate
+    operand). A query in chunk block j sees compressed slots of absolute
+    blocks < start_blocks[b] + j, i.e. slots m with m // r < start + j.
+
+    Identical math to :func:`blockwise_causal_attention` restricted to the
+    chunk's rows — the basis of the serving engine's chunked-admission
+    byte-parity with monolithic prefill. Memory-bounded like the chunked
+    form: query blocks are processed under ``lax.map`` so the (P × M) global
+    score tensor is materialized one block at a time.
+    """
+    B, P, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    c = block_size
+    if P % c != 0:
+        raise ValueError(f"chunk P={P} must be a multiple of block_size={c}")
+    nb = P // c
+    r = block_slots
+    M = comp_k.shape[1]
+    scale_ = scale if scale is not None else Dh ** -0.5
+    start = jnp.asarray(start_blocks, jnp.int32)
+
+    qb = q.reshape(B, nb, c, Hkv, G, Dh)
+    kb = k.reshape(B, nb, c, Hkv, Dh)
+    vb = v.reshape(B, nb, c, Hkv, Dh)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    slot_blk = jnp.arange(M) // r                        # owning block of slot
+
+    def one_block(args):
+        j, qi, ki, vi = args                             # qi: (B,c,Hkv,G,Dh)
+        s_loc = jnp.einsum("bchgd,bkhd->bhgck", qi, ki).astype(jnp.float32)
+        s_loc = jnp.where(causal[None, None, None], s_loc * scale_, NEG_INF)
+        s_glob = jnp.einsum("bchgd,bmhd->bhgcm", qi,
+                            comp_k).astype(jnp.float32)
+        vis = slot_blk[None, :] < (start + j)[:, None]   # (B, M)
+        s_glob = jnp.where(vis[:, None, None, None, :], s_glob * scale_,
+                           NEG_INF)
+        s = jnp.concatenate([s_loc, s_glob], axis=-1)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgck,bkhd->bchgd", p[..., :c], vi)
+        out = out + jnp.einsum("bhgcm,bmhd->bchgd", p[..., c:], comp_v)
+        return out                                       # (B,c,Hkv,G,Dh)
+
+    outs = jax.lax.map(
+        one_block,
+        (jnp.arange(nb), jnp.moveaxis(qb, 1, 0), jnp.moveaxis(kb, 1, 0),
+         jnp.moveaxis(vb, 1, 0)))                        # (nb,B,c,Hkv,G,Dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, P, H, Dh)
+
+
 def blockwise_causal_attention_chunked(
     q: jax.Array,
     k: jax.Array,

@@ -69,6 +69,110 @@ def _kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, out_ref, *,
     out_ref[0] = out.astype(out_ref.dtype)
 
 
+def _prefix_kernel(q_ref, kl_ref, vl_ref, ck_ref, cv_ref, nb0_ref, out_ref, *,
+                   scale: float, r: int):
+    """Chunk-prefill variant of `_kernel`: the compressed operand is the
+    SLOT-RESIDENT cache buffer (full M_total = (max_seq/c)·r slots, pinned)
+    and the visibility cut shifts by the row's start block nb0 — grid block
+    n of the chunk is absolute block nb0 + n, so it sees slots of blocks
+    < nb0 + n. nb0 arrives as a per-row (1, 1) int32 block (SMEM-friendly
+    scalar layout; interpret mode reads it directly)."""
+    n = pl.program_id(1)
+    nb0 = nb0_ref[0, 0]
+    q = q_ref[0]                                    # (c, Dh)
+    kl = kl_ref[0]
+    vl = vl_ref[0]
+    ck = ck_ref[0]                                  # (M, Dh)
+    cv = cv_ref[0]
+    c = q.shape[0]
+    M = ck.shape[0]
+
+    s_loc = jax.lax.dot_general(
+        q, kl, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (c, c)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    s_loc = jnp.where(ti >= si, s_loc, NEG_INF)
+
+    s_glob = jax.lax.dot_general(
+        q, ck, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (c, M)
+    slot_blk = jax.lax.broadcasted_iota(jnp.int32, (c, M), 1) // r
+    s_glob = jnp.where(slot_blk < n + nb0, s_glob, NEG_INF)
+
+    m = jnp.maximum(jnp.max(s_loc, -1, keepdims=True),
+                    jnp.max(s_glob, -1, keepdims=True))
+    p_loc = jnp.exp(s_loc - m)
+    p_glob = jnp.exp(s_glob - m)
+    denom = jnp.sum(p_loc, -1, keepdims=True) + jnp.sum(p_glob, -1,
+                                                        keepdims=True)
+    out = jax.lax.dot_general(
+        (p_loc / denom).astype(vl.dtype), vl, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out += jax.lax.dot_general(
+        (p_glob / denom).astype(cv.dtype), cv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def blockwise_causal_prefix_attn(
+    q: jax.Array,        # (B, H, P, Dh) — one prefill chunk of queries
+    k: jax.Array,        # (B, Hkv, P, Dh) — chunk keys (local, exact)
+    v: jax.Array,
+    comp_k: jax.Array,   # (B, Hkv, M, Dh) — slot-resident compressed cache
+    comp_v: jax.Array,   #                   (chunk's own blocks already folded)
+    start_blocks: jax.Array,   # (B,) int32 — per-row absolute start block
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blockwise-causal attention for a prefill chunk at a nonzero per-row
+    start offset, against the slot-resident compressed cache.
+
+    Same grid/GQA routing as :func:`blockwise_causal_attn`, but the pinned
+    compressed operand is the cache's FULL (M_total, Dh) slot buffer and the
+    causality cut is shifted per row by `start_blocks` (passed as a (B, 1)
+    int32 scalar block). M_total = (max_seq/c)·r must fit in VMEM — the same
+    compression budget the decode kernel already pins.
+    """
+    B, H, P, Dh = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    c = block_size
+    assert P % c == 0, (P, c)
+    nb = P // c
+    M = comp_k.shape[2]
+    q3 = q.reshape(B * H, P, Dh)
+    k3 = k.reshape(B * Hkv, P, Dh)
+    v3 = v.reshape(B * Hkv, P, Dh)
+    ck3 = comp_k.reshape(B * Hkv, M, Dh)
+    cv3 = comp_v.reshape(B * Hkv, M, Dh)
+    nb0 = jnp.asarray(start_blocks, jnp.int32).reshape(B, 1)
+
+    def kv_row(bh):
+        return (bh // H) * Hkv + (bh % H) // G
+
+    out = pl.pallas_call(
+        functools.partial(_prefix_kernel, scale=scale, r=block_slots),
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, n: (bh // H, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, P, Dh), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3, ck3, cv3, nb0)
+    return out.reshape(B, H, P, Dh)
+
+
 def blockwise_causal_attn(
     q: jax.Array,       # (B, H, S, Dh)
     k: jax.Array,       # (B, Hkv, S, Dh) — native kv heads, H % Hkv == 0

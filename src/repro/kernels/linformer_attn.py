@@ -22,6 +22,12 @@ concatenate — the cache-residency contract), each with a per-row (B, ·)
 additive validity bias (0 for attendable slots, NEG_INF otherwise — every
 row sits at its own position); the softmax normalizes over their
 concatenated scores inside the kernel.
+
+The multi-token sibling — a prefill CHUNK at a nonzero per-row start
+offset against the same slot-resident compressed cache (the serving
+scheduler's chunked-admission path) — is
+blockwise_causal_attn.blockwise_causal_prefix_attn, wrapped by
+ops.fused_chunk_prefill_attention.
 """
 from __future__ import annotations
 

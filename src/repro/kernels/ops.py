@@ -26,7 +26,16 @@ Layout note: kernels use (B, H, S, Dh); the model uses (B, S, H, Dh). These
 wrappers accept model layout and handle GQA head repetition for the
 compressed operands (cheap: K is small). The single-token decode wrapper
 `fused_decode_attention` instead folds the GQA group axis into the kernel's
-query-sequence axis, so K/V are never repeated.
+query-sequence axis, so K/V are never repeated; the blockwise-causal
+wrappers route grouped query heads to their kv row via the grid index maps.
+
+Known limits (docs/kernels.md has the full list): the fused path is
+single-device (under a mesh, GSPMD partitions the reference einsums; the
+kernels run whole inside a shard); `fused_chunk_prefill_attention` and
+`fused_decode_attention` are inference-only (no VJP); pinned compressed
+operands must fit VMEM (K ≤ 512 exact form, M = (max_seq/c)·r causal
+forms); blockwise-causal forms need S % block_size == 0 (serving routes
+the remainder through the decode path).
 """
 from __future__ import annotations
 
@@ -146,6 +155,14 @@ def fused_linformer_attention(
     block_q: int = 256,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
+    """Exact (bidirectional) Linformer attention through the Pallas kernel:
+    softmax(q·k̄ᵀ·scale)·v̄ over the K compressed slots.
+
+    Shapes/dtypes: model layout — q (B, S, H, Dh); kbar/vbar (B, K, Hkv,
+    Dh) with K ≤ 512 so the whole compressed operand pins in VMEM (scores
+    fp32, output in q's dtype). GQA kv heads are repeated to H for the
+    compressed operands (cheap: K is small). Trainable — analytic custom
+    VJP (`_lin_bwd`); `block_q` shrinks to the largest divisor of S."""
     qk = _to_kernel_layout(q)
     kb = _to_kernel_layout(kbar)
     vb = _to_kernel_layout(vbar)
@@ -185,6 +202,11 @@ def fused_seq_projection(
     block_s: int = 512,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
+    """Fused sequence-axis projection out = Eᵀ·x: (B, S, H, Dh) × (S, K)
+    → (B, K, H, Dh) — the paper's shared linear compression of K/V.
+    Handles ONLY the shared 2-D E (per-head / conv / pool projections go
+    through the reference ops; models/attention.py applies this rule).
+    Linear, so trainable with an analytic VJP."""
     out = _seq_projection_diff(_to_kernel_layout(x), E,
                                _divisor_block(x.shape[1], block_s),
                                _auto_interpret(interpret))
@@ -264,6 +286,48 @@ def fused_blockwise_causal_attention(
             f"S={q.shape[1]} must be a multiple of block_size={block_size}")
     return _blockwise_causal_diff(q, k, v, E, F, block_size, block_slots,
                                   scale, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "block_slots", "scale", "interpret"))
+def fused_chunk_prefill_attention(
+    q: jax.Array,        # (B, P, H, Dh) — one prefill chunk, model layout
+    k: jax.Array,        # (B, P, Hkv, Dh) — the chunk's own keys
+    v: jax.Array,
+    comp_k: jax.Array,   # (B, M, Hkv, Dh) — slot-resident compressed cache
+    comp_v: jax.Array,   #   with the chunk's own blocks already folded in
+    start_blocks: jax.Array,   # (B,) int32 — per-row absolute start block
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Blockwise-causal attention for a prefill chunk starting at a nonzero
+    per-row offset (the chunked-admission prefill path).
+
+    Shapes/dtypes: model layout in and out — q (B, P, H, Dh) with
+    P % block_size == 0; k/v carry native Hkv GQA heads (index-map routing,
+    no HBM repeat); comp_k/comp_v are the cache's FULL slot buffers
+    (M = (max_seq/block_size)·block_slots rows, cache dtype), pinned per grid
+    step like the decode kernel's compressed operand. Row b's query block j
+    attends [its own block, causally | compressed slots of absolute blocks
+    < start_blocks[b] + j] — `start_blocks` is traced (one compile serves
+    every offset), which is what makes fixed-size chunk compiles reusable
+    across a prompt and across rows of a batched admission round.
+
+    Inference-only: no custom VJP (the training path prefers
+    `fused_blockwise_causal_attention`, which starts at offset zero).
+    """
+    if q.shape[1] % block_size != 0:
+        raise ValueError(
+            f"P={q.shape[1]} must be a multiple of block_size={block_size}")
+    out = bca.blockwise_causal_prefix_attn(
+        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
+        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v), start_blocks,
+        block_size=block_size, block_slots=block_slots, scale=scale,
+        interpret=_auto_interpret(interpret))
+    return _from_kernel_layout(out)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))

@@ -30,6 +30,13 @@ def main():
                          "'auto' -> fused Pallas kernels)")
     ap.add_argument("--decode-chunk", type=int, default=32,
                     help="tokens per device-resident decode scan chunk")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked admission prefill: stream each prompt "
+                         "into its slot in fixed chunks of this many tokens "
+                         "(multiple of the attention block size), "
+                         "interleaved with decode and batched across "
+                         "co-prefilling requests; 0 = monolithic B=1 "
+                         "admission prefill")
     ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "static"],
                     help="continuous: slot-based admission/eviction between "
@@ -62,7 +69,8 @@ def main():
                         cache_dtype=jnp.float32 if args.smoke else jnp.bfloat16,
                         temperature=args.temperature,
                         decode_chunk=args.decode_chunk,
-                        attention_backend=args.backend)
+                        attention_backend=args.backend,
+                        prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(4, cfg.vocab_size,
                                  int(rng.choice([8, 16, 16, 32]))))
@@ -85,6 +93,9 @@ def main():
     n_tok = sum(len(o) for o in outs)
     occ = (f", occupancy {sched.stats.mean_occupancy:.2f} over "
            f"{sched.stats.chunks} chunks" if sched is not None else "")
+    if sched is not None and args.prefill_chunk:
+        occ += (f", {sched.stats.prefill_forwards} chunked-prefill launches "
+                f"({sched.stats.prefill_tokens} prompt tokens)")
     print(f"[serve] {mode}: {len(prompts)} requests, {n_tok} "
           f"tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s){occ}; "
           f"cache/request ≈ "

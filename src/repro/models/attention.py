@@ -239,6 +239,40 @@ def apply_attention_decode(
     return out.reshape(B, 1, -1) @ params["wo"], new_cache
 
 
+def apply_attention_prefill_chunk(
+    params: Dict,
+    x: jax.Array,                   # (B, P, D) — one prefill chunk
+    layer_cache: Dict[str, jax.Array],
+    t0: jax.Array,                  # (B,) int32 — row's committed length
+    cfg: AttentionConfig,
+    *,
+    shared_lin: Optional[Dict] = None,
+    positions: Optional[jax.Array] = None,   # (B, P) absolute positions
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill attention at a per-row offset, against the layer's
+    slot-resident cache: row b's chunk covers absolute positions
+    [t0[b], t0[b] + P). For linformer_causal t0 and P must be multiples of
+    the block size (chunk boundaries are block-fold boundaries); standard
+    attention takes any offset. Returns (out (B, P, D'), updated cache)."""
+    if positions is None:
+        positions = t0[:, None] + jnp.arange(x.shape[1])[None, :]
+    q, k, v = _qkv(params, x, cfg, positions=positions)
+    if cfg.kind == "linformer_causal":
+        E, F = _resolve_ef(params, shared_lin, cfg)
+        out, new_cache = cache_lib.compressed_prefill_chunk(
+            q, k, v, layer_cache, E, F, t0,
+            backend=kernel_ops.resolve_backend(cfg.backend))
+    elif cfg.kind == "standard":
+        out, new_cache = cache_lib.full_prefill_chunk(
+            q, k, v, layer_cache, t0)
+    else:
+        raise ValueError(
+            f"attention kind {cfg.kind!r} has no chunked-prefill path "
+            "(exact linformer is bidirectional/encoder-only)")
+    B, P = x.shape[:2]
+    return out.reshape(B, P, -1) @ params["wo"], new_cache
+
+
 def prefill_cache_entries(
     params: Dict,
     x: jax.Array,                   # (B, S, D) — normed block input

@@ -45,6 +45,18 @@ def decode_step(params, cfg: ModelConfig, batch_t: Dict, cache: Dict, *,
     return _impl(cfg).decode_step(params, cfg, batch_t, cache, ctx=ctx)
 
 
+def prefill_chunk(params, cfg: ModelConfig, batch_c: Dict, cache: Dict,
+                  n_valid, *, ctx: Optional[ParallelCtx] = None):
+    """Prefill-at-offset forward of one fixed-size chunk per row (serving's
+    chunked-admission path). Transformer families only: ssm/hybrid caches
+    have no per-row positions to chunk against."""
+    impl = _impl(cfg)
+    if not hasattr(impl, "prefill_chunk"):
+        raise ValueError(
+            f"family {cfg.family!r} has no chunked-prefill path")
+    return impl.prefill_chunk(params, cfg, batch_c, cache, n_valid, ctx=ctx)
+
+
 def decode_scan(
     params,
     cfg: ModelConfig,

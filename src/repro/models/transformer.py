@@ -135,6 +135,97 @@ def apply_block_decode(
     return x_t + h, new_cache, aux
 
 
+def apply_block_prefill_chunk(
+    params: Dict,
+    x: jax.Array,                   # (B, P, D) — one prefill chunk
+    layer_cache: Dict,
+    t0: jax.Array,                  # (B,) int32 committed per-row lengths
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,           # (B, P) absolute positions
+    shared_lin: Optional[Dict],
+    ctx: Optional[ParallelCtx],
+) -> Tuple[jax.Array, Dict]:
+    """One transformer block over a prefill chunk at a per-row offset
+    (decode-path twin of `apply_block`, cache-writing like
+    `apply_block_decode` but P tokens at once)."""
+    h, new_cache = attn_lib.apply_attention_prefill_chunk(
+        params["attn"], L.rms_norm(params["ln1"], x), layer_cache, t0,
+        cfg.attention, shared_lin=shared_lin, positions=positions)
+    x = x + h
+    hin = L.rms_norm(params["ln2"], x)
+    if cfg.moe.num_experts > 0:
+        h, _ = moe_lib.apply_moe(params["moe"], hin, cfg.moe, cfg.mlp, ctx)
+    else:
+        h = L.apply_mlp(params["mlp"], hin, cfg.mlp)
+    return x + h, new_cache
+
+
+def prefill_chunk(
+    params: Dict,
+    cfg: ModelConfig,
+    batch_c: Dict,
+    cache: Dict,
+    n_valid: jax.Array,
+    *,
+    ctx: Optional[ParallelCtx] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Prefill-at-offset forward for one fixed-size chunk of every row.
+
+    batch_c: {"tokens": (B, P)} — row b's next prefill chunk, padded at the
+    END to the fixed chunk width P; n_valid (B,) int32 counts the real
+    tokens (for linformer_causal a multiple of the block size, so padding
+    occupies whole blocks and needs no masking — see core/cache.py).
+
+    Row b's chunk starts at its committed length cache["lengths"][b]: rope
+    and learned positions are taken at the absolute offsets, the causal
+    structure continues from the row's cache (compressed slots / full-cache
+    prefix), and each layer's K/V state is written back at the row's offset.
+    Returns (last-valid-token logits (B, V), cache advanced by n_valid) —
+    the logits row is only meaningful for rows whose prompt ends inside
+    this chunk (the serving scheduler samples the first generated token
+    from it)."""
+    if cfg.embedding_inputs or cfg.frontend_embed_len > 0:
+        raise ValueError("chunked prefill supports token inputs only")
+    t0 = cache["lengths"]                   # (B,) committed lengths
+    tokens = batch_c["tokens"]
+    B, P = tokens.shape
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    x = L.embed_tokens(params["embed"]["tok"], tokens)
+    positions = t0[:, None] + jnp.arange(P)[None, :]         # (B, P)
+    if "pos" in params.get("embed", {}):
+        tab = params["embed"]["pos"]
+        x = x + tab[jnp.clip(positions, 0, tab.shape[0] - 1)]
+    x = shard_activation(x, ctx)
+    shared_lin = params.get("shared", {}).get("lin")
+
+    layer_caches = {k: v for k, v in cache.items() if k != "lengths"}
+
+    def body(h, inp):
+        lp, lc = inp
+        h2, new_lc = apply_block_prefill_chunk(
+            lp, h, lc, t0, cfg, positions=positions, shared_lin=shared_lin,
+            ctx=ctx)
+        return h2, new_lc
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches))
+    else:
+        outs = []
+        for i, lp in enumerate(params["layers_list"]):
+            lc = jax.tree.map(lambda a: a[i], layer_caches)
+            x, nc = body(x, (lp, lc))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    # logits only at each row's last REAL token (padded rows' tail is junk)
+    h_last = jnp.take_along_axis(
+        x, (n_valid - 1)[:, None, None].astype(jnp.int32), axis=1)  # (B,1,D)
+    logits = logits_from_hidden(params, cfg, h_last, ctx)
+    new_caches["lengths"] = t0 + n_valid
+    return logits[:, 0], new_caches
+
+
 # ---------------------------------------------------------------------------
 # Whole-model init
 # ---------------------------------------------------------------------------

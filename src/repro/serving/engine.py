@@ -5,9 +5,16 @@ pool of `max_batch` cache slots — one batch row of a single pool cache —
 and a `Scheduler` (serving/scheduler.py) admits/evicts requests *between*
 device-resident decode chunks:
 
-* admission: a queued request is prefilled alone (B=1), its cache rows are
-  `dynamic_update_slice`d into a free pool slot, and its per-row position
-  counter (`cache["lengths"][slot]`) starts at the prompt length;
+* admission: with `prefill_chunk=0` (monolithic) a queued request is
+  prefilled alone (B=1), its cache rows are `dynamic_update_slice`d into a
+  free pool slot, and its per-row position counter
+  (`cache["lengths"][slot]`) starts at the prompt length; with
+  `prefill_chunk=P` (chunked) the slot is claimed at t=0 and the prompt
+  streams into the pool cache P tokens per scheduler round — interleaved
+  with decode chunks so a long prompt cannot stall the pool — with every
+  co-prefilling request's next chunk batched into ONE padded (g, P)
+  forward (`pool_prefill_chunk`): per-row offsets and valid-token counts
+  are traced, so one compile serves every prompt length and progress mix;
 * decode: the whole pool scans `decode_chunk` tokens on device
   (model.decode_scan — one host sync per chunk), idle slots riding along
   finished-masked;
@@ -20,10 +27,17 @@ per-row (core/cache.py), a slot decodes identically whatever its
 neighbours are doing — continuous scheduling is byte-identical to the
 static bucketed baseline, kept as `serve_static`.
 
-Prefill strategy (linformer_causal): the full-block prefix (⌊S/c⌋·c tokens)
-is prefilled in ONE parallel forward that also materializes the compressed
-cache; the ≤c-1 remainder tokens run through the decode path. Standard
-attention prefills the full prompt in one pass.
+Prefill strategy (linformer_causal): monolithically, the full-block prefix
+(⌊S/c⌋·c tokens) is prefilled in ONE parallel forward that also
+materializes the compressed cache; the ≤c-1 remainder tokens run through
+the decode path. Chunked admission splits the full-block prefix into
+fixed P-token chunks (P a multiple of c, so chunk boundaries are
+block-fold boundaries) computed by a prefill-at-offset forward
+(model.prefill_chunk → kernels' blockwise-causal-prefix path) against the
+slot-resident compressed cache; the remainder runs through the decode
+path exactly as before, batched per remainder-length group. Standard
+attention prefills the full prompt in one pass (monolithic) or in P-token
+chunks at any offset (chunked).
 
 Chunked decode contract: generation runs as jitted `lax.scan` chunks of
 `decode_chunk` tokens (model.decode_scan) — sampling, EOS masking, and the
@@ -93,6 +107,7 @@ class ServingEngine:
         temperature: float = 0.0,
         decode_chunk: int = 32,
         attention_backend: Optional[str] = None,
+        prefill_chunk: int = 0,
     ):
         if attention_backend is not None:
             cfg = cfg.with_attention_backend(attention_backend)
@@ -103,6 +118,7 @@ class ServingEngine:
         self.cache_dtype = cache_dtype
         self.temperature = temperature
         self.decode_chunk = max(1, decode_chunk)
+        self.prefill_chunk = int(prefill_chunk)
 
         self._decode = jax.jit(
             lambda p, b, c: model_lib.decode_step(p, cfg, b, c, ctx=ctx))
@@ -114,6 +130,19 @@ class ServingEngine:
         self._chunk_fns: Dict[int, Callable] = {}
         self._write_slot = jax.jit(self._write_slot_impl,
                                    donate_argnums=(0,))
+        if self.prefill_chunk:
+            blk = self._block()
+            if self.prefill_chunk < blk or self.prefill_chunk % blk != 0:
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must be a positive "
+                    f"multiple of the attention block size ({blk}) so chunk "
+                    "boundaries land on block-fold boundaries")
+            self._pool_prefill_chunk = jax.jit(
+                self._pool_prefill_chunk_impl, donate_argnums=(1,))
+            self._pool_prefill_remainder = jax.jit(
+                self._pool_prefill_remainder_impl, donate_argnums=(1,))
+            self._reset_row = jax.jit(self._reset_row_impl,
+                                      donate_argnums=(0,))
 
     # -- internals ------------------------------------------------------
 
@@ -162,12 +191,77 @@ class ServingEngine:
             self._chunk_fns[n] = fn
         return fn
 
+    # -- chunked-prefill internals ---------------------------------------
+
+    @staticmethod
+    def _gather_rows(pool: Dict, idx: jax.Array) -> Dict:
+        """Stack pool rows `idx` into a B=len(idx) sub-cache. Cache leaves
+        are (L, B, ...) except the per-row `lengths` (B,)."""
+        return {k: jnp.take(v, idx, axis=0 if k == "lengths" else 1)
+                for k, v in pool.items()}
+
+    @staticmethod
+    def _scatter_rows(pool: Dict, sub: Dict, idx: jax.Array) -> Dict:
+        """Write a sub-cache back into pool rows `idx` (inverse of
+        `_gather_rows`). Duplicate indices are benign ONLY when they carry
+        identical rows (the batch-padding trick below relies on this:
+        `.set` scatter semantics make the duplicate a no-op rewrite)."""
+        out = {}
+        for k, v in pool.items():
+            upd = sub[k].astype(v.dtype)
+            out[k] = (v.at[idx].set(upd) if k == "lengths"
+                      else v.at[:, idx].set(upd))
+        return out
+
+    def _pool_prefill_chunk_impl(self, params, pool: Dict, tokens: jax.Array,
+                                 n_valid: jax.Array, idx: jax.Array):
+        """Gather rows `idx`, run one prefill-at-offset chunk forward over
+        them, scatter the advanced cache state back. Donates `pool`."""
+        sub = self._gather_rows(pool, idx)
+        logits, sub = model_lib.prefill_chunk(
+            params, self.cfg, {"tokens": tokens}, sub, n_valid, ctx=self.ctx)
+        return self._scatter_rows(pool, sub, idx), logits
+
+    def _pool_prefill_remainder_impl(self, params, pool: Dict,
+                                     tokens: jax.Array, idx: jax.Array):
+        """Feed the sub-block remainder of a prompt (rem = tokens.shape[1]
+        < block size) through the decode path against the gathered rows —
+        exactly what the monolithic prefill does for its remainder, but
+        batched over every request in the same remainder group."""
+        sub = self._gather_rows(pool, idx)
+        logits = None
+        for t in range(tokens.shape[1]):
+            lg, sub = model_lib.decode_step(
+                params, self.cfg, {"tokens": tokens[:, t:t + 1]}, sub,
+                ctx=self.ctx)
+            logits = lg[:, 0]
+        return self._scatter_rows(pool, sub, idx), logits
+
+    @staticmethod
+    def _reset_row_impl(pool: Dict, row: jax.Array) -> Dict:
+        """Zero a row's position counter for incremental (chunked) prefill.
+        Only `lengths` needs resetting: stale K/V from the slot's previous
+        occupant is never visible — every mask is bounded by the row's
+        committed length, and both the chunk fold and the decode-time ring
+        write land before visibility reaches them."""
+        out = dict(pool)
+        out["lengths"] = pool["lengths"].at[row].set(0)
+        return out
+
     # -- slot-pool surface (consumed by serving/scheduler.py) -------------
 
     def init_pool_cache(self, max_batch: int) -> Dict:
-        """A fresh (max_batch)-row pool cache, every slot idle at t=0."""
+        """A fresh (max_batch)-row pool cache, every slot idle at t=0.
+
+        Chunked prefill allocates `prefill_chunk` tokens of SLACK beyond
+        max_seq: a padded final chunk writes its full P-token window at the
+        row's offset, and without slack a window crossing max_seq would be
+        CLAMPED by dynamic_update_slice — shifting the write down over
+        earlier, still-valid slots. The slack region only ever holds padding
+        junk (budget checks cap real content at max_seq)."""
+        slack = self.prefill_chunk  # 0 in monolithic mode
         return model_lib.init_cache(self.cfg, batch=max_batch,
-                                    max_seq=self.max_seq,
+                                    max_seq=self.max_seq + slack,
                                     dtype=self.cache_dtype)
 
     @staticmethod
@@ -199,6 +293,58 @@ class ServingEngine:
         cache, logits = self.prefill(arr)
         first = int(np.asarray(self._sample(logits, rng))[0])
         return cache, first
+
+    def reset_pool_row(self, pool: Dict, row: int) -> Dict:
+        """Mark pool row `row` empty at t=0 for incremental prefill
+        (donates `pool`; route through the SlotPool owner)."""
+        return self._reset_row(pool, jnp.asarray(row, jnp.int32))
+
+    @staticmethod
+    def _pad_rows(rows: Sequence[int], *arrays: np.ndarray, pad_to: int):
+        """Pad a row batch to exactly `pad_to` BY DUPLICATING the last row
+        (and the matching rows of every per-row array) — `.set` scatter
+        writes the identical state twice, so the duplicate is harmless.
+        The scheduler passes its pool size, so ONE compile serves every
+        admission round of a pool, whatever the occupancy."""
+        g = len(rows)
+        if g == 0:
+            raise ValueError("empty prefill row batch")
+        if pad_to < g:
+            raise ValueError(f"pad_to={pad_to} smaller than batch {g}")
+        rows = list(rows) + [rows[-1]] * (pad_to - g)
+        padded = [np.concatenate([a] + [a[-1:]] * (pad_to - g), axis=0)
+                  for a in arrays]
+        return rows, padded
+
+    def pool_prefill_chunk(self, pool: Dict, rows: Sequence[int],
+                           tokens: np.ndarray, n_valid: np.ndarray,
+                           pad_to: int) -> Tuple[Dict, jax.Array]:
+        """Advance rows' prefill by one padded chunk forward (donates
+        `pool`). tokens: (g, prefill_chunk) int32, padded at the end;
+        n_valid: (g,) real token counts. Rows are padded to `pad_to` (the
+        pool size) by duplication (`_pad_rows`). Returns (pool, last-valid
+        logits (g, V))."""
+        g = len(rows)
+        rows, (tokens, n_valid) = self._pad_rows(rows, tokens, n_valid,
+                                                 pad_to=pad_to)
+        pool, logits = self._pool_prefill_chunk(
+            self.params, pool, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(n_valid, jnp.int32), jnp.asarray(rows, jnp.int32))
+        return pool, logits[:g]
+
+    def pool_prefill_remainder(self, pool: Dict, rows: Sequence[int],
+                               tokens: np.ndarray,
+                               pad_to: int) -> Tuple[Dict, jax.Array]:
+        """Feed rows' final sub-block remainder tokens ((g, rem), rem <
+        block size) through batched decode steps (donates `pool`). Same
+        row padding as `pool_prefill_chunk`. Returns (pool, final-token
+        logits (g, V))."""
+        g = len(rows)
+        rows, (tokens,) = self._pad_rows(rows, tokens, pad_to=pad_to)
+        pool, logits = self._pool_prefill_remainder(
+            self.params, pool, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(rows, jnp.int32))
+        return pool, logits[:g]
 
     # -- public API -------------------------------------------------------
 
@@ -280,6 +426,11 @@ class ServingEngine:
 
     def _check_budgets(self, prompts, budgets) -> None:
         for i, p in enumerate(prompts):
+            if len(p) == 0:
+                # fail fast: there are no logits to sample a first token
+                # from (and a zero-token PREFILLING slot would never
+                # activate, deadlocking the chunked scheduler)
+                raise ValueError(f"request {i}: empty prompt")
             if len(p) + budgets[i] > self.max_seq:
                 raise ValueError(
                     f"request {i}: prompt {len(p)} + budget {budgets[i]} "

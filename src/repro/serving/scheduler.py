@@ -7,24 +7,36 @@ Admission/eviction contract
 The unit of work is a *slot*: one row of a fixed (max_batch)-row pool cache.
 The scheduler mutates the pool ONLY between decode chunks:
 
-* **Admission** — a queued request whose arrival time has passed is prefilled
+* **Admission** — a queued request whose arrival time has passed claims a
+  free slot. With `engine.prefill_chunk == 0` (monolithic) it is prefilled
   alone (B=1, its own forward), its cache rows are `dynamic_update_slice`d
-  into the pool at a free slot, its first sampled token becomes the slot's
-  `cur`, and its per-row position counter (`cache["lengths"][slot]`) is set
-  to the prompt length. Admission never perturbs live rows: every cache
-  write, rope position, attention mask and block fold is per-row
-  (core/cache.py), so a slot's math is identical whether its neighbours are
-  mid-request, freshly admitted, or idle.
+  into the pool, its first sampled token becomes the slot's `cur`, and its
+  per-row position counter (`cache["lengths"][slot]`) is set to the prompt
+  length. With `engine.prefill_chunk > 0` (chunked) the slot is claimed in
+  the PREFILLING state at t=0 and the prompt streams into the pool cache
+  one fixed-size chunk per scheduler round, interleaved with everyone
+  else's decode chunks — a 32k-token prompt can no longer stall the pool
+  for a full forward — and every PREFILLING row's next chunk rides ONE
+  padded, batched forward (batched admission prefill; per-row offsets and
+  valid-token counts are traced, so one compile covers any mix of lengths
+  and progress). Admission never perturbs live rows: every cache write,
+  rope position, attention mask and block fold is per-row (core/cache.py),
+  so a slot's math is identical whether its neighbours are mid-request,
+  mid-prefill, freshly admitted, or idle.
 * **Decode** — the pool decodes `decode_chunk` tokens as one jitted
-  `lax.scan` (model.decode_scan): ONE host sync per chunk. Idle slots ride
-  along `finished`-masked (their outputs are frozen to EOS and their
-  position counters do not advance).
+  `lax.scan` (model.decode_scan): ONE host sync per chunk. Idle and
+  PREFILLING slots ride along `finished`-masked (their outputs are frozen
+  to EOS and their position counters do not advance; a PREFILLING row's
+  masked ring-buffer writes land at pos 0 of a block the remainder/decode
+  path rewrites before any mask can see it).
 * **Eviction / retirement** — after the chunk's host sync, each live slot's
   tokens are scanned: an EOS or an exhausted per-request `max_new_tokens`
   budget retires the slot (completion callback fires; the slot is free for
   the next admission round). Tokens a row produced past its retirement point
-  are discarded — they never reach the request's output, and the slot's
-  cache rows are fully overwritten by the next admission.
+  are discarded — they never reach the request's output, and the next
+  admission makes the slot's stale cache contents unreachable (monolithic:
+  a full row overwrite; chunked: a lengths reset — every mask is bounded
+  by the row's committed length, and writes land before visibility).
 
 The pool cache has a single owner (`SlotPool`): the chunk scan donates the
 cache buffers, so `SlotPool` swaps in the returned cache each chunk and no
@@ -66,18 +78,37 @@ class Request:
     arrival_chunk: int = 0
 
 
+# Slot states. A monolithically-admitted slot is born DECODING; under
+# chunked admission (engine.prefill_chunk > 0) a slot is born PREFILLING —
+# its prompt enters the pool cache one fixed-size chunk per scheduler round,
+# interleaved with everyone else's decode chunks — and flips to DECODING
+# when its first token is sampled. PREFILLING survives across rounds: the
+# partial-prefill state is the row's cache contents + `_Slot.filled`.
+PREFILLING = "prefilling"
+DECODING = "decoding"
+
+
 @dataclasses.dataclass
 class _Slot:
     request: Request
     emitted: List[int]
+    state: str = DECODING
+    filled: int = 0                    # prompt tokens committed to the cache
 
 
 @dataclasses.dataclass
 class ScheduleStats:
     chunks: int = 0                    # decode chunks actually executed
-    idle_ticks: int = 0                # empty-pool ticks (no decode ran)
-    row_steps: int = 0                 # occupied-slot decode steps
+    idle_ticks: int = 0                # no-decode ticks (pool empty or
+    #                                    every occupied slot still prefilling)
+    row_steps: int = 0                 # DECODING-slot decode steps
     occupancy_sum: float = 0.0         # Σ per-executed-chunk occupied frac
+    #                                    (DECODING + PREFILLING slots — a
+    #                                    prefilling row holds its slot)
+    prefill_forwards: int = 0          # prefill launches (chunked: batched
+    #                                    chunk/remainder; monolithic: one
+    #                                    B=1 forward per admission)
+    prefill_tokens: int = 0            # real (unpadded) prompt tokens filled
 
     @property
     def ticks(self) -> int:
@@ -121,17 +152,58 @@ class SlotPool:
     def occupancy(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    @property
+    def decoding_count(self) -> int:
+        return sum(s is not None and s.state == DECODING for s in self.slots)
+
     # -- mutations (between chunks only) ---------------------------------
 
     def admit(self, row: int, request: Request, slot_cache: Dict,
               first_token: int) -> None:
-        """Write a prefilled request into `row`. `slot_cache` is a B=1 cache
-        positioned at the prompt length; `first_token` the token sampled
-        from the prefill logits (the row's first emitted token)."""
+        """Monolithic admission: write a fully-prefilled request into `row`.
+        `slot_cache` is a B=1 cache positioned at the prompt length;
+        `first_token` the token sampled from the prefill logits (the row's
+        first emitted token)."""
         self.cache = self.engine.write_pool_slot(self.cache, slot_cache, row)
         self.cur[row] = first_token
         self.finished[row] = False
-        self.slots[row] = _Slot(request=request, emitted=[])
+        self.slots[row] = _Slot(request=request, emitted=[], state=DECODING,
+                                filled=len(request.tokens))
+
+    def begin_prefill(self, row: int, request: Request) -> None:
+        """Chunked admission: claim `row` in the PREFILLING state at t=0.
+        The row rides subsequent decode chunks finished-masked (its position
+        counter frozen, its outputs discarded) while `prefill_chunk_rows` /
+        `prefill_remainder_rows` stream the prompt into its cache."""
+        self.cache = self.engine.reset_pool_row(self.cache, row)
+        self.cur[row] = EOS
+        self.finished[row] = True
+        self.slots[row] = _Slot(request=request, emitted=[],
+                                state=PREFILLING, filled=0)
+
+    def prefill_chunk_rows(self, rows: List[int], tokens: np.ndarray,
+                           n_valid: np.ndarray) -> np.ndarray:
+        """One padded, batched chunk forward over PREFILLING rows (the
+        engine donates the pool cache; the owner swaps in the result).
+        The batch is padded to the pool size, so EVERY admission round of
+        this pool shares one chunk-forward compile."""
+        self.cache, logits = self.engine.pool_prefill_chunk(
+            self.cache, rows, tokens, n_valid, pad_to=self.max_batch)
+        return np.asarray(logits)
+
+    def prefill_remainder_rows(self, rows: List[int],
+                               tokens: np.ndarray) -> np.ndarray:
+        """Batched decode-path prefill of the final sub-block remainder
+        (pool-size padded like `prefill_chunk_rows`)."""
+        self.cache, logits = self.engine.pool_prefill_remainder(
+            self.cache, rows, tokens, pad_to=self.max_batch)
+        return np.asarray(logits)
+
+    def activate(self, row: int, first_token: int) -> None:
+        """Prefill complete: the row joins the decoding pool next chunk."""
+        self.cur[row] = first_token
+        self.finished[row] = False
+        self.slots[row].state = DECODING
 
     def retire(self, row: int) -> None:
         self.slots[row] = None
@@ -172,14 +244,93 @@ class Scheduler:
 
     def _admit_ready(self) -> None:
         """Fill free slots with arrived requests (FCFS; later-arriving
-        requests never jump the queue)."""
+        requests never jump the queue). Monolithic mode prefills the whole
+        prompt here (one B=1 forward per request); chunked mode only claims
+        the slot — `_advance_prefill` streams the prompt in afterwards."""
         free = self.pool.free_rows()
+        chunked = self.engine.prefill_chunk > 0
         while free and self.queue \
                 and self.queue[0].arrival_chunk <= self.stats.ticks:
             req = self.queue.popleft()
+            if chunked:
+                self.pool.begin_prefill(free.pop(0), req)
+                continue
             self.rng, sub = jax.random.split(self.rng)
             slot_cache, first = self.engine.prefill_request(req.tokens, sub)
+            self.stats.prefill_forwards += 1      # one B=1 forward each
+            self.stats.prefill_tokens += len(req.tokens)
             self.pool.admit(free.pop(0), req, slot_cache, first)
+
+    def _advance_prefill(self) -> None:
+        """Advance every PREFILLING slot by ONE chunk (the interleave
+        quantum), batching rows into shared forwards.
+
+        Phase 1 — full-block chunks: every row with ≥ block_size full-block
+        prompt tokens left joins ONE padded (g, prefill_chunk) forward —
+        per-row `n_valid` + traced per-row offsets mean arbitrary mixes of
+        prompt lengths and progress share the compile, which is the whole
+        batched-admission win over B=1-per-request monolithic prefill.
+
+        Phase 2 — remainder: rows whose full-block prefix is done feed their
+        < block_size leftover tokens through batched decode steps, grouped
+        by remainder length (same math as the monolithic path's remainder
+        loop, batched).
+
+        Phase 3 — activation: completed rows sample their first token from
+        the final logits and flip to DECODING for the next decode chunk."""
+        P = self.engine.prefill_chunk
+        c = self.engine._block()
+        pf = [(row, s) for row, s in enumerate(self.pool.slots)
+              if s is not None and s.state == PREFILLING]
+        if not pf:
+            return
+        final_logits: Dict[int, np.ndarray] = {}
+
+        chunk_rows = []
+        for row, s in pf:
+            nfull = (len(s.request.tokens) // c) * c
+            if s.filled < nfull:
+                chunk_rows.append((row, s, nfull))
+        if chunk_rows:
+            g = len(chunk_rows)
+            toks = np.zeros((g, P), np.int32)
+            n_valid = np.zeros((g,), np.int32)
+            for j, (row, s, nfull) in enumerate(chunk_rows):
+                n = min(P, nfull - s.filled)
+                toks[j, :n] = s.request.tokens[s.filled:s.filled + n]
+                n_valid[j] = n
+            logits = self.pool.prefill_chunk_rows(
+                [row for row, _, _ in chunk_rows], toks, n_valid)
+            self.stats.prefill_forwards += 1
+            self.stats.prefill_tokens += int(n_valid.sum())
+            for j, (row, s, nfull) in enumerate(chunk_rows):
+                s.filled += int(n_valid[j])
+                if s.filled == len(s.request.tokens):
+                    final_logits[row] = logits[j]
+
+        rem_groups: Dict[int, List[Tuple[int, _Slot]]] = {}
+        for row, s in pf:
+            rem = len(s.request.tokens) - s.filled
+            if 0 < rem < c:
+                rem_groups.setdefault(rem, []).append((row, s))
+        for rem, group in sorted(rem_groups.items()):
+            toks = np.asarray(
+                [s.request.tokens[s.filled:s.filled + rem]
+                 for _, s in group], np.int32)
+            logits = self.pool.prefill_remainder_rows(
+                [row for row, _ in group], toks)
+            self.stats.prefill_forwards += 1
+            self.stats.prefill_tokens += rem * len(group)
+            for j, (row, s) in enumerate(group):
+                s.filled += rem
+                final_logits[row] = logits[j]
+
+        for row in sorted(final_logits):
+            self.rng, sub = jax.random.split(self.rng)
+            first = int(np.asarray(
+                self.engine._sample(jnp.asarray(final_logits[row])[None],
+                                    sub))[0])
+            self.pool.activate(row, first)
 
     def _drain_chunk(self, toks: np.ndarray,
                      on_token: Optional[Callable[[int, int], None]],
@@ -189,8 +340,8 @@ class Scheduler:
         budget-exhausted slots."""
         for row in range(self.pool.max_batch):
             slot = self.pool.slots[row]
-            if slot is None:
-                continue
+            if slot is None or slot.state != DECODING:
+                continue                 # PREFILLING rows rode along masked
             done = False
             budget = slot.request.max_new_tokens
             for tok in toks[row].tolist():
@@ -222,14 +373,18 @@ class Scheduler:
         chunk = self.engine.decode_chunk
         while self.queue or self.pool.occupancy:
             self._admit_ready()
-            if not self.pool.occupancy:
-                # nothing live yet: let virtual time pass so future
+            if self.engine.prefill_chunk:
+                self._advance_prefill()
+            decoding = self.pool.decoding_count
+            if not decoding:
+                # nothing decodable yet (pool empty, or every occupied slot
+                # still prefilling): let virtual time pass so future
                 # arrival_chunk requests become admissible
                 self.stats.idle_ticks += 1
                 continue
             toks, self.rng = self.pool.decode_chunk(chunk, self.rng)
             self.stats.chunks += 1
-            self.stats.row_steps += self.pool.occupancy * chunk
+            self.stats.row_steps += decoding * chunk
             self.stats.occupancy_sum += self.pool.occupancy \
                 / self.pool.max_batch
             self._drain_chunk(toks, on_token, on_complete, results)

@@ -1,0 +1,349 @@
+"""Chunked + batched admission prefill: chunk-attention parity with the
+monolithic blockwise-causal form (both backends), chunked-engine vs
+monolithic-engine byte parity on sampled outputs, prefill/decode
+interleaving, and batched-admission mechanics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionConfig, LinformerConfig, ModelConfig
+from repro.core.causal import (blockwise_causal_attention,
+                               blockwise_causal_prefix_attention,
+                               compress_blocks)
+from repro.kernels import ops as kernel_ops
+from repro.models import model as M
+from repro.serving import ServingEngine
+
+
+def _cfg(kind="linformer_causal", backend="auto", max_seq=160):
+    attn = AttentionConfig(
+        kind=kind,
+        backend=backend,
+        num_heads=4,
+        num_kv_heads=2,              # GQA
+        head_dim=8,
+        linformer=LinformerConfig(block_size=8, block_slots=4),
+    )
+    return ModelConfig(name="chunked-prefill-test", num_layers=2, d_model=32,
+                       vocab_size=256, max_seq_len=max_seq, attention=attn,
+                       dtype="float32", remat="none")
+
+
+def _engines(cfg, prefill_chunk, max_seq=160, decode_chunk=4):
+    """(monolithic, chunked) engine pair sharing one set of params."""
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    mk = lambda pc: ServingEngine(params, cfg, max_seq=max_seq,
+                                  cache_dtype=jnp.float32,
+                                  decode_chunk=decode_chunk,
+                                  prefill_chunk=pc)
+    return mk(0), mk(prefill_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Attention-level parity: prefix-chunk form vs monolithic blockwise-causal
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixAttentionParity:
+    """A chunk of queries at a nonzero start offset, attending the
+    slot-resident compressed cache, must reproduce the corresponding rows
+    of the monolithic blockwise-causal attention."""
+
+    def _setup(self, backend="reference", B=2, S=32, H=4, Hkv=2, Dh=8, c=8,
+               r=4, M_total=40):
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        q = jax.random.normal(ks[0], (B, S, H, Dh))
+        k = jax.random.normal(ks[1], (B, S, Hkv, Dh))
+        v = jax.random.normal(ks[2], (B, S, Hkv, Dh))
+        E = jax.random.normal(ks[3], (c, r)) * 0.3
+        F = jax.random.normal(ks[4], (c, r)) * 0.3
+        # compare each backend's chunk form against ITS OWN monolithic form
+        # (cross-backend differences are ~1e-7; within-backend is bitwise)
+        if backend == "fused":
+            full = kernel_ops.fused_blockwise_causal_attention(
+                q, k, v, E, F, block_size=c, block_slots=r,
+                scale=Dh ** -0.5)
+        else:
+            full = blockwise_causal_attention(q, k, v, E, F, block_size=c)
+        nb = S // c
+        kbar = compress_blocks(k.reshape(B, nb, c, Hkv, Dh), E)
+        vbar = compress_blocks(v.reshape(B, nb, c, Hkv, Dh), F)
+        pad = ((0, 0), (0, M_total - nb * r), (0, 0), (0, 0))
+        comp_k = jnp.pad(kbar.reshape(B, nb * r, Hkv, Dh), pad)
+        comp_v = jnp.pad(vbar.reshape(B, nb * r, Hkv, Dh), pad)
+        return q, k, v, comp_k, comp_v, full
+
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_shared_offset(self, backend):
+        q, k, v, ck, cv, full = self._setup(backend)
+        start = jnp.full((2,), 2, jnp.int32)     # chunk = blocks [2, 4)
+        args = (q[:, 16:], k[:, 16:], v[:, 16:], ck, cv, start)
+        if backend == "fused":
+            out = kernel_ops.fused_chunk_prefill_attention(
+                *args, block_size=8, block_slots=4, scale=8 ** -0.5)
+        else:
+            out = blockwise_causal_prefix_attention(
+                *args, block_size=8, block_slots=4)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(full[:, 16:]))
+
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_per_row_offsets(self, backend):
+        """Rows of one batched chunk forward at DIFFERENT absolute offsets
+        (the batched-admission case) each match their monolithic rows."""
+        q, k, v, ck, cv, full = self._setup(backend)
+        start = jnp.asarray([2, 1], jnp.int32)
+        qc = jnp.stack([q[0, 16:32], q[1, 8:24]])
+        kc = jnp.stack([k[0, 16:32], k[1, 8:24]])
+        vc = jnp.stack([v[0, 16:32], v[1, 8:24]])
+        if backend == "fused":
+            out = kernel_ops.fused_chunk_prefill_attention(
+                qc, kc, vc, ck, cv, start, block_size=8, block_slots=4,
+                scale=8 ** -0.5)
+        else:
+            out = blockwise_causal_prefix_attention(
+                qc, kc, vc, ck, cv, start, block_size=8, block_slots=4)
+        want = jnp.stack([full[0, 16:32], full[1, 8:24]])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_zero_offset_is_monolithic(self):
+        """start_blocks = 0 over the whole sequence IS the monolithic form."""
+        q, k, v, ck, cv, full = self._setup()
+        out = blockwise_causal_prefix_attention(
+            q, k, v, ck, cv, jnp.zeros((2,), jnp.int32),
+            block_size=8, block_slots=4)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(full))
+
+
+# ---------------------------------------------------------------------------
+# Model-level: chunked prefill_chunk calls == one monolithic prefill forward
+# ---------------------------------------------------------------------------
+
+
+class TestModelChunkParity:
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_two_chunks_match_monolithic_cache(self, backend):
+        """Aligned chunk shapes: prefilling 32 tokens as 2×16 must give
+        bitwise the SAME compressed cache and last-token logits as the
+        16-token monolithic forward extended by a 16-token chunk — and the
+        full-block cache contents must match the 32-token monolithic
+        forward to fp tolerance (XLA re-tiles gemms across shapes, so
+        cross-shape comparisons are ~1e-7, not bitwise)."""
+        cfg = _cfg(backend=backend, max_seq=64)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.asarray(
+            np.random.default_rng(0).integers(4, 256, (1, 32)), jnp.int32)
+        _, _, mono = M.forward(params, cfg, {"tokens": toks},
+                               return_cache=True, cache_max_seq=64,
+                               cache_dtype=jnp.float32)
+        cache = M.init_cache(cfg, batch=1, max_seq=64, dtype=jnp.float32)
+        _, cache = M.prefill_chunk(params, cfg, {"tokens": toks[:, :16]},
+                                   cache, jnp.asarray([16]))
+        lg, cache = M.prefill_chunk(params, cfg, {"tokens": toks[:, 16:]},
+                                    cache, jnp.asarray([16]))
+        assert int(cache["lengths"][0]) == 32
+        np.testing.assert_allclose(np.asarray(cache["comp_k"]),
+                                   np.asarray(mono["comp_k"]), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cache["comp_v"]),
+                                   np.asarray(mono["comp_v"]), atol=1e-5)
+
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_padded_final_chunk(self, backend):
+        """A final chunk with n_valid < P (prompt not a chunk multiple,
+        padding fills whole blocks at the end) advances lengths by n_valid
+        and leaves the VALID slot range identical to an unpadded run."""
+        cfg = _cfg(backend=backend, max_seq=64)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.asarray(
+            np.random.default_rng(1).integers(4, 256, (1, 24)), jnp.int32)
+        cache_a = M.init_cache(cfg, batch=1, max_seq=64, dtype=jnp.float32)
+        _, cache_a = M.prefill_chunk(params, cfg, {"tokens": toks[:, :16]},
+                                     cache_a, jnp.asarray([16]))
+        padded = jnp.zeros((1, 16), jnp.int32).at[:, :8].set(toks[:, 16:24])
+        lg_a, cache_a = M.prefill_chunk(params, cfg, {"tokens": padded},
+                                        cache_a, jnp.asarray([8]))
+        assert int(cache_a["lengths"][0]) == 24
+        # unpadded reference: same trailing 8 tokens as one exact chunk
+        cache_b = M.init_cache(cfg, batch=1, max_seq=64, dtype=jnp.float32)
+        _, cache_b = M.prefill_chunk(params, cfg, {"tokens": toks[:, :16]},
+                                     cache_b, jnp.asarray([16]))
+        lg_b, cache_b = M.prefill_chunk(params, cfg,
+                                        {"tokens": toks[:, 16:24]},
+                                        cache_b, jnp.asarray([8]))
+        np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+        # 24 tokens = 3 blocks = 12 valid slots; padded junk beyond is
+        # invisible (visibility is bounded by lengths) and may differ
+        np.testing.assert_array_equal(
+            np.asarray(cache_a["comp_k"][:, :, :12]),
+            np.asarray(cache_b["comp_k"][:, :, :12]))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: chunked admission vs monolithic admission, byte parity
+# ---------------------------------------------------------------------------
+
+
+class TestChunkedEngineParity:
+    # prompt lengths covering: shorter than one block (5), shorter than one
+    # chunk (12), exact chunk multiple (16, 32), chunk boundary == fold
+    # boundary with remainder (19, 40), long multi-chunk (61, 80)
+    LENS = [5, 8, 12, 16, 19, 32, 40, 61, 80, 24]
+
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_outputs_byte_identical(self, backend):
+        cfg = _cfg(backend=backend)
+        mono, chun = _engines(cfg, prefill_chunk=16)
+        rng = np.random.default_rng(0)
+        prompts = [list(rng.integers(4, 256, L)) for L in self.LENS]
+        budgets = [int(rng.choice([3, 6, 10])) for _ in self.LENS]
+        assert mono.serve(prompts, budgets, max_batch=4) == \
+            chun.serve(prompts, budgets, max_batch=4)
+
+    def test_standard_attention_kind(self):
+        cfg = _cfg(kind="standard")
+        mono, chun = _engines(cfg, prefill_chunk=16)
+        rng = np.random.default_rng(1)
+        prompts = [list(rng.integers(4, 256, L))
+                   for L in [5, 16, 23, 48, 64, 33]]
+        budgets = [int(rng.choice([3, 6])) for _ in prompts]
+        assert mono.serve(prompts, budgets, max_batch=3) == \
+            chun.serve(prompts, budgets, max_batch=3)
+
+    def test_one_slot_pool_and_arrival_trace(self):
+        cfg = _cfg()
+        mono, chun = _engines(cfg, prefill_chunk=16)
+        rng = np.random.default_rng(2)
+        prompts = [list(rng.integers(4, 256, L)) for L in [40, 8, 19, 32]]
+        budgets = [4, 6, 3, 5]
+        want = mono.serve(prompts, budgets, max_batch=2)
+        assert chun.serve(prompts, budgets, max_batch=1) == want
+        assert chun.serve(prompts, budgets, max_batch=2,
+                          arrival_chunks=[0, 1, 3, 6]) == want
+
+    def test_matches_static_baseline(self):
+        cfg = _cfg()
+        _, chun = _engines(cfg, prefill_chunk=16)
+        rng = np.random.default_rng(3)
+        prompts = [list(rng.integers(4, 256, L)) for L in self.LENS]
+        budgets = [int(rng.choice([2, 5, 8])) for _ in self.LENS]
+        assert chun.serve(prompts, budgets, max_batch=4) == \
+            chun.serve_static(prompts, budgets, max_batch=4)
+
+    def test_streaming_and_repeat_serve(self):
+        """Callbacks stream chunk-admitted requests too, and the pool owner
+        survives donation across repeated serves."""
+        cfg = _cfg()
+        _, chun = _engines(cfg, prefill_chunk=16)
+        rng = np.random.default_rng(4)
+        prompts = [list(rng.integers(4, 256, L)) for L in [33, 12, 48]]
+        budgets = [4, 3, 5]
+        streamed = {i: [] for i in range(3)}
+        done = {}
+        outs = chun.serve(prompts, budgets, max_batch=2,
+                          on_token=lambda r, t: streamed[r].append(t),
+                          on_complete=lambda r, ts: done.setdefault(
+                              r, list(ts)))
+        for i, o in enumerate(outs):
+            assert streamed[i] == o and done[i] == o
+        assert chun.serve(prompts, budgets, max_batch=2) == outs
+
+    def test_padded_chunk_window_crossing_max_seq(self):
+        """A prompt near max_seq whose padded final chunk window crosses
+        max_seq must not corrupt earlier slots: without allocation slack,
+        dynamic_update_slice would CLAMP the out-of-bounds write window
+        down over still-valid compressed slots (regression test)."""
+        cfg = _cfg(max_seq=96)
+        mono, chun = _engines(cfg, prefill_chunk=64, max_seq=96)
+        rng = np.random.default_rng(9)
+        prompts = [list(rng.integers(4, 256, L)) for L in (90, 92, 45)]
+        assert mono.serve(prompts, [4, 3, 4], max_batch=2) == \
+            chun.serve(prompts, [4, 3, 4], max_batch=2)
+
+    def test_invalid_prefill_chunk_rejected(self):
+        cfg = _cfg()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        for bad in (12, 4, -8):
+            with pytest.raises(ValueError, match="prefill_chunk"):
+                ServingEngine(params, cfg, max_seq=160, prefill_chunk=bad)
+
+    def test_empty_prompt_rejected(self):
+        """An empty prompt must fail fast on every path — under chunked
+        admission a zero-token PREFILLING slot would never activate and
+        the scheduler would spin forever (regression test)."""
+        cfg = _cfg()
+        mono, chun = _engines(cfg, prefill_chunk=16)
+        for eng in (mono, chun):
+            with pytest.raises(ValueError, match="empty prompt"):
+                eng.serve([[1, 2, 3], []], [4, 4], max_batch=2)
+        with pytest.raises(ValueError, match="empty prompt"):
+            mono.serve_static([[]], [4], max_batch=2)
+
+
+# ---------------------------------------------------------------------------
+# Scheduling behaviour: interleaving + batched admission
+# ---------------------------------------------------------------------------
+
+
+class TestChunkedScheduling:
+    def test_long_prompt_does_not_stall_decode(self):
+        """A long prompt prefills across many rounds while a short request
+        admitted alongside it KEEPS DECODING: the short request must
+        complete before the long one emits its first token — exactly the
+        head-of-line blocking monolithic admission exhibits."""
+        cfg = _cfg()
+        _, chun = _engines(cfg, prefill_chunk=16, decode_chunk=2)
+        rng = np.random.default_rng(5)
+        long_p = list(rng.integers(4, 256, 80))     # 5 chunk rounds
+        short_p = list(rng.integers(4, 256, 8))
+        events = []
+        chun.serve([long_p, short_p], [4, 4], max_batch=2,
+                   on_token=lambda r, t: events.append(("tok", r)),
+                   on_complete=lambda r, ts: events.append(("done", r)))
+        first_long_tok = events.index(("tok", 0))
+        short_done = events.index(("done", 1))
+        assert short_done < first_long_tok, \
+            "short request should finish while the long prompt prefills"
+
+    def test_batched_admission_shares_forwards(self):
+        """Several arrivals prefilling together must ride shared batched
+        forwards: far fewer prefill launches than monolithic's one-per-
+        request, with identical outputs."""
+        cfg = _cfg()
+        mono, chun = _engines(cfg, prefill_chunk=16)
+        rng = np.random.default_rng(6)
+        prompts = [list(rng.integers(4, 256, 48)) for _ in range(4)]
+        budgets = [3, 4, 5, 6]
+        want = mono.serve(prompts, budgets, max_batch=4)
+        outs, sched = chun.serve(prompts, budgets, max_batch=4,
+                                 return_scheduler=True)
+        assert outs == want
+        # 4 requests × 48 tokens = 3 chunk rounds, each ONE batched forward
+        assert sched.stats.prefill_forwards == 3
+        assert sched.stats.prefill_tokens == 4 * 48
+
+    def test_remainder_groups_batch(self):
+        """Same-remainder requests share one batched remainder launch."""
+        cfg = _cfg()
+        mono, chun = _engines(cfg, prefill_chunk=16)
+        rng = np.random.default_rng(7)
+        prompts = [list(rng.integers(4, 256, 19)) for _ in range(3)]
+        want = mono.serve(prompts, [3, 4, 5], max_batch=4)
+        outs, sched = chun.serve(prompts, [3, 4, 5], max_batch=4,
+                                 return_scheduler=True)
+        assert outs == want
+        # one 16-token chunk forward + one shared 3-token remainder launch
+        assert sched.stats.prefill_forwards == 2
+
+    def test_prefilling_rows_ride_decode_masked(self):
+        """While a row prefills, concurrent decode chunks must not corrupt
+        it: interleave short decodes with a long prefill and check the long
+        request's output equals its solo (empty-pool) run."""
+        cfg = _cfg()
+        _, chun = _engines(cfg, prefill_chunk=16, decode_chunk=2)
+        rng = np.random.default_rng(8)
+        long_p = list(rng.integers(4, 256, 77))     # remainder 5 at the end
+        shorts = [list(rng.integers(4, 256, 8)) for _ in range(3)]
+        solo = chun.serve([long_p], [6], max_batch=2)
+        mixed = chun.serve([long_p] + shorts, [6, 3, 3, 3], max_batch=2)
+        assert mixed[0] == solo[0]
