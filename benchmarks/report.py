@@ -73,6 +73,13 @@ def bench_json_summary(out=None):
                       f"{lp['speedup_warm']}x warm "
                       f"({lp['chunked']['tok_per_s_cold']} vs "
                       f"{lp['monolithic']['tok_per_s_cold']} tok/s cold)")
+        elif name == "train_step":
+            sh = rec.get("shape", {})
+            print_(f"  * train step ({rec['mode']}, S={sh.get('seq')}, "
+                   f"{sh.get('slots_total')} compressed slots): fused "
+                   f"backward {rec['step_ms_fused']}ms vs "
+                   f"reference-recompute {rec['step_ms_reference']}ms "
+                   f"({rec['speedup_fused_over_reference']}x)")
         else:
             scalars = {k: v for k, v in rec.items()
                        if not isinstance(v, (dict, list))}

@@ -23,7 +23,7 @@ def main() -> None:
     from benchmarks import (decode_throughput, figure1_spectrum,
                             figure3_pretrain, roofline, serving_throughput,
                             table1_complexity, table2_downstream,
-                            table3_efficiency)
+                            table3_efficiency, train_step)
     benches = {
         "table1_complexity": table1_complexity.run,
         "figure1_spectrum": figure1_spectrum.run,
@@ -32,6 +32,9 @@ def main() -> None:
         "table3_efficiency": table3_efficiency.run,
         "roofline": roofline.run,
         "decode_throughput": decode_throughput.run,
+        # fused Pallas backward vs reference-recompute training step;
+        # records BENCH_train_step.json
+        "train_step": train_step.run,
         # both serving traces (mixed continuous-vs-static + long-prompt
         # chunked-vs-monolithic admission); records BENCH_serving.json
         "serving_throughput": serving_throughput.run,

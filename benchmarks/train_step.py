@@ -1,0 +1,114 @@
+"""Training-step latency: fused Pallas backward vs reference-recompute.
+
+The training-side half of the paper's O(n) claim: with the fused backward
+(`kernels/blockwise_causal_attn.blockwise_causal_attn_bwd`) a train step
+runs fwd + bwd without a second, unfused attention pass — the
+`backward_impl="reference"` oracle instead re-runs the pure-jnp reference
+under jax.vjp, materializing the (S × nb·r) global score tensor the fused
+path exists to avoid. This benchmark times the COMPLETE jit'd train step
+(fwd + bwd + clip + AdamW, `train/trainer.make_train_step` — the exact
+production step) for both backward implementations on a linformer_causal
+config whose compressed width nb·r is large enough that the recompute
+matters.
+
+Emits the standard ``name,us_per_call,derived`` CSV lines (us_per_call =
+microseconds per train step) and records BENCH_train_step.json via
+`common.write_bench_json`.
+
+    PYTHONPATH=src python -m benchmarks.train_step [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.configs.base import (AttentionConfig, LinformerConfig, ModelConfig,
+                                OptimizerConfig)
+from repro.models import model as M
+from repro.optim import adamw_init
+from repro.train.trainer import make_train_step
+
+
+def _cfg(backward_impl: str, *, seq: int, block_size: int,
+         block_slots: int) -> ModelConfig:
+    return ModelConfig(
+        name="train-step-bench",
+        num_layers=2,
+        d_model=64,
+        vocab_size=512,
+        max_seq_len=seq,
+        attention=AttentionConfig(
+            kind="linformer_causal",
+            num_heads=4,
+            num_kv_heads=2,
+            head_dim=16,
+            backward_impl=backward_impl,
+            linformer=LinformerConfig(block_size=block_size,
+                                      block_slots=block_slots),
+        ),
+        dtype="float32",
+        remat="none",
+    )
+
+
+def _time_step(backward_impl: str, *, seq: int, block_size: int,
+               block_slots: int, batch_size: int, iters: int) -> float:
+    """Median seconds of the jit'd train step (first call = compile+warmup,
+    excluded). No donation so the same buffers are re-fed every iteration."""
+    cfg = _cfg(backward_impl, seq=seq, block_size=block_size,
+               block_slots=block_slots)
+    opt_cfg = OptimizerConfig()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw_init(params, opt_cfg)
+    toks = np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (batch_size, seq)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks),
+             "loss_mask": jnp.ones((batch_size, seq), jnp.int32)}
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    jax.block_until_ready(step(params, opt_state, batch))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(params, opt_state, batch))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(quick: bool = True):
+    # quick: nb·r = 1024 compressed slots at S=2048 — small enough for the
+    # smoke gate, big enough that the reference recompute's global score
+    # tensor dominates its backward. full: the 4k training shape.
+    if quick:
+        seq, block_size, block_slots, batch_size, iters = 2048, 64, 32, 1, 3
+    else:
+        seq, block_size, block_slots, batch_size, iters = 4096, 128, 32, 1, 5
+    results = {}
+    for impl in ("fused", "reference"):
+        t = _time_step(impl, seq=seq, block_size=block_size,
+                       block_slots=block_slots, batch_size=batch_size,
+                       iters=iters)
+        results[impl] = t
+        emit(f"train_step/{impl}/s{seq}", t * 1e6,
+             f"steps_per_s={1.0 / t:.3f}")
+    speedup = results["reference"] / results["fused"]
+    emit(f"train_step/speedup/s{seq}", results["fused"] * 1e6,
+         f"fused_over_reference={speedup:.2f}x")
+    write_bench_json("train_step", {
+        "mode": "quick" if quick else "full",
+        "shape": {"seq": seq, "block_size": block_size,
+                  "block_slots": block_slots, "batch": batch_size,
+                  "slots_total": seq // block_size * block_slots},
+        "step_ms_fused": round(results["fused"] * 1e3, 1),
+        "step_ms_reference": round(results["reference"] * 1e3, 1),
+        "speedup_fused_over_reference": round(speedup, 2),
+    })
+    return results
+
+
+if __name__ == "__main__":
+    run(quick="--smoke" in sys.argv[1:])

@@ -6,6 +6,8 @@
 #   4. the two-trace serving benchmark (--smoke): the mixed continuous-vs-
 #      static trace AND the long-prompt chunked-admission-prefill trace,
 #      recording both in BENCH_serving.json (the perf trajectory)
+#   5. the train-step benchmark (--smoke): fused Pallas backward vs
+#      reference-recompute, recording BENCH_train_step.json
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -23,5 +25,8 @@ python -m benchmarks.run --only table1_complexity
 
 echo "== smoke benchmark: serving_throughput (mixed + long-prompt) =="
 python -m benchmarks.serving_throughput --smoke
+
+echo "== smoke benchmark: train_step (fused vs reference backward) =="
+python -m benchmarks.train_step --smoke
 
 echo "== check.sh: all gates passed =="

@@ -51,6 +51,12 @@ class AttentionConfig:
     #   "fused"     — force the Pallas kernel path
     #   "reference" — force the pure-jnp einsum implementations
     backend: str = "auto"
+    # backward implementation of the fused blockwise-causal attention
+    # (linformer_causal training through the Pallas kernels):
+    #   "fused"     — Pallas backward from saved (m, denom) softmax residuals
+    #   "reference" — recompute through the pure-jnp reference VJP (parity
+    #                 oracle; a second unfused attention pass per step)
+    backward_impl: str = "fused"
     num_heads: int = 8
     num_kv_heads: int = 8           # GQA: kv heads (== num_heads -> MHA)
     head_dim: int = 64
@@ -185,6 +191,12 @@ class ModelConfig:
     def with_attention_backend(self, backend: str) -> "ModelConfig":
         return dataclasses.replace(
             self, attention=dataclasses.replace(self.attention, backend=backend)
+        )
+
+    def with_backward_impl(self, backward_impl: str) -> "ModelConfig":
+        return dataclasses.replace(
+            self, attention=dataclasses.replace(self.attention,
+                                                backward_impl=backward_impl)
         )
 
     @property

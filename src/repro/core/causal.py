@@ -21,6 +21,14 @@ import jax.numpy as jnp
 
 NEG_INF = -1e30
 
+# Sequences at or above this length route reference/recompute attention
+# through the memory-bounded chunked form (`blockwise_causal_attention_chunked`)
+# instead of the plain form, whose (S × nb·r) global score tensor would be
+# materialized whole. Single source of truth for models/transformer.py's
+# forward rule and kernels/ops.py's reference-recompute backward — previously
+# duplicated as bare literals that could drift.
+CHUNKED_ATTENTION_MIN_SEQ = 8192
+
 
 def _split_heads_gqa(q: jax.Array, num_kv: int) -> jax.Array:
     """(B,S,H,Dh) -> (B,S,Hkv,G,Dh)"""
@@ -45,11 +53,15 @@ def blockwise_causal_attention(
     *,
     block_size: int,
     scale: Optional[float] = None,
-) -> jax.Array:
+    return_residuals: bool = False,
+):
     """Training-parallel form.
 
     q: (B,S,H,Dh); k,v: (B,S,Hkv,Dh); E,F: (c,r) or (Hkv,c,r); S % c == 0.
-    Returns (B,S,H,Dh).
+    Returns (B,S,H,Dh) — or, with ``return_residuals=True``, the tuple
+    ``(out, m, denom)`` where m/denom are the joint softmax's per-row max and
+    denominator, each (B, H, S) fp32: the parity oracle for the residuals the
+    fused forward saves for its Pallas backward (kernels/ops.py).
     """
     B, S, H, Dh = q.shape
     Hkv = k.shape[2]
@@ -90,7 +102,13 @@ def blockwise_causal_attention(
     out = jnp.einsum("bhgnck,bnkhd->bnchgd", p_loc, vb)
     vbar_flat = vbar.reshape(B, nb * r, Hkv, Dh)
     out = out + jnp.einsum("bhgncm,bmhd->bnchgd", p_glob, vbar_flat)
-    return out.reshape(B, S, H, Dh)
+    out = out.reshape(B, S, H, Dh)
+    if return_residuals:
+        m = jnp.max(s, axis=-1)                         # (B,Hkv,G,nb,c)
+        denom = jnp.sum(jnp.exp(s - m[..., None]), axis=-1)
+        return (out, m.reshape(B, H, S).astype(jnp.float32),
+                denom.reshape(B, H, S).astype(jnp.float32))
+    return out
 
 
 def blockwise_causal_prefix_attention(

@@ -1,10 +1,11 @@
-"""Fused blockwise-causal Linformer attention Pallas kernel (TPU target).
+"""Fused blockwise-causal Linformer attention Pallas kernels (TPU target).
 
-One grid step computes one query block (c tokens of one (batch, head)):
-joint softmax over [own block, causal | compressed slots of previous blocks].
-The compressed K̄/V̄ (M = (S/c)·r slots) are pinned in VMEM — at r/c = 16/256
-compression, a 32k-token context compresses to 2048 slots × Dh (512 KiB bf16),
-far under VMEM; raw K/V of the own block are streamed per grid step.
+Forward — one grid step computes one query block (c tokens of one
+(batch, head)): joint softmax over [own block, causal | compressed slots of
+previous blocks]. The compressed K̄/V̄ (M = (S/c)·r slots) are pinned in
+VMEM — at r/c = 16/256 compression, a 32k-token context compresses to 2048
+slots × Dh (512 KiB bf16), far under VMEM; raw K/V of the own block are
+streamed per grid step.
 
 Grid: (B·H, nb). Blocks:
   q, k_loc, v_loc : (1, c, Dh)   — block `n` of the sequence
@@ -18,6 +19,18 @@ one kv stream without any jnp.repeat materialization in HBM.
 Causality: local scores use a (c, c) lower-triangular mask; global scores
 mask slots whose owning block ≥ the current grid block (slot i belongs to
 block i // r).
+
+Backward (`blockwise_causal_attn_bwd`) — same per-query-block decomposition,
+on the grid (B·Hkv, nb, G) with the GQA group axis innermost: the joint
+softmax is RECOMPUTED from the forward's saved per-row residuals (row max
+`m` and denominator — the flash-attention trick, no stored probabilities),
+then the five blockwise matmuls produce dq, dk_loc/dv_loc and dk̄/dv̄.
+dk_loc/dv_loc (shared by the G query heads of a group) and dk̄/dv̄ (shared
+additionally across the nb query blocks) accumulate in fp32 VMEM scratch
+across consecutive grid steps and are emitted on each accumulator's last
+contributing step — the inner axes sweep every contributor of a kv row
+consecutively, so no output block is ever revisited after a flush, and GQA
+still never repeats K/V in HBM.
 """
 from __future__ import annotations
 
@@ -26,21 +39,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, out_ref, *,
-            scale: float, r: int):
-    n = pl.program_id(1)
-    q = q_ref[0]                                    # (c, Dh)
-    kl = kl_ref[0]
-    vl = vl_ref[0]
-    kbar = kbar_ref[0]                              # (M, Dh)
-    vbar = vbar_ref[0]
+def _joint_scores(q, kl, kbar, blk_cut, scale, r):
+    """Masked fp32 scores of one query block: local (c, c) causal scores and
+    global (c, M) scores over compressed slots of blocks < blk_cut."""
     c = q.shape[0]
     M = kbar.shape[0]
-
     s_loc = jax.lax.dot_general(
         q, kl, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale          # (c, c)
@@ -52,8 +60,16 @@ def _kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, out_ref, *,
         q, kbar, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale          # (c, M)
     slot_blk = jax.lax.broadcasted_iota(jnp.int32, (c, M), 1) // r
-    s_glob = jnp.where(slot_blk < n, s_glob, NEG_INF)
+    s_glob = jnp.where(slot_blk < blk_cut, s_glob, NEG_INF)
+    return s_loc, s_glob
 
+
+def _attend_block(q, kl, vl, kbar, vbar, n, scale, r):
+    """One query block's joint-softmax attention: returns (out fp32, m,
+    denom) — the single forward body shared by the plain and
+    residual-emitting kernels, so grad-time primal and inference forward can
+    never diverge."""
+    s_loc, s_glob = _joint_scores(q, kl, kbar, n, scale, r)
     m = jnp.maximum(jnp.max(s_loc, -1, keepdims=True),
                     jnp.max(s_glob, -1, keepdims=True))
     p_loc = jnp.exp(s_loc - m)
@@ -66,7 +82,27 @@ def _kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, out_ref, *,
     out += jax.lax.dot_general(
         (p_glob / denom).astype(vbar.dtype), vbar, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+    return out, m, denom
+
+
+def _kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, out_ref, *,
+            scale: float, r: int):
+    n = pl.program_id(1)
+    out, _, _ = _attend_block(q_ref[0], kl_ref[0], vl_ref[0], kbar_ref[0],
+                              vbar_ref[0], n, scale, r)
     out_ref[0] = out.astype(out_ref.dtype)
+
+
+def _kernel_res(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref,
+                out_ref, m_ref, denom_ref, *, scale: float, r: int):
+    """Forward variant that also emits the softmax residuals (per-row max and
+    denominator, fp32) the fused backward recomputes the probabilities from."""
+    n = pl.program_id(1)
+    out, m, denom = _attend_block(q_ref[0], kl_ref[0], vl_ref[0],
+                                  kbar_ref[0], vbar_ref[0], n, scale, r)
+    out_ref[0] = out.astype(out_ref.dtype)
+    m_ref[0] = m[:, 0]
+    denom_ref[0] = denom[:, 0]
 
 
 def _prefix_kernel(q_ref, kl_ref, vl_ref, ck_ref, cv_ref, nb0_ref, out_ref, *,
@@ -184,7 +220,14 @@ def blockwise_causal_attn(
     block_slots: int,
     scale: float,
     interpret: bool = False,
-) -> jax.Array:
+    return_residuals: bool = False,
+):
+    """Fused blockwise-causal attention forward.
+
+    With ``return_residuals=True`` also returns the joint softmax's per-row
+    max `m` and denominator (each (B, H, S) fp32) — the residuals
+    :func:`blockwise_causal_attn_bwd` recomputes the probabilities from.
+    """
     B, H, S, Dh = q.shape
     Hkv = k.shape[1]
     assert H % Hkv == 0, (H, Hkv)
@@ -205,18 +248,216 @@ def blockwise_causal_attn(
     def kv_row(bh):
         return (bh // H) * Hkv + (bh % H) // G
 
+    in_specs = [
+        pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+        pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+        pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+        pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+        pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+    ]
+    if return_residuals:
+        out, m, denom = pl.pallas_call(
+            functools.partial(_kernel_res, scale=scale, r=block_slots),
+            grid=(B * H, nb),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+                pl.BlockSpec((1, c), lambda bh, n: (bh, n)),
+                pl.BlockSpec((1, c), lambda bh, n: (bh, n)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
+                jax.ShapeDtypeStruct((B * H, S), jnp.float32),
+                jax.ShapeDtypeStruct((B * H, S), jnp.float32),
+            ],
+            interpret=interpret,
+        )(q3, k3, v3, kb3, vb3)
+        return (out.reshape(B, H, S, Dh), m.reshape(B, H, S),
+                denom.reshape(B, H, S))
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, r=block_slots),
         grid=(B * H, nb),
-        in_specs=[
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
-            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
-            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
         interpret=interpret,
     )(q3, k3, v3, kb3, vb3)
     return out.reshape(B, H, S, Dh)
+
+
+def _bwd_kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, m_ref, d_ref,
+                do_ref, dq_ref, dkl_ref, dvl_ref, dkb_ref, dvb_ref,
+                dkl_acc, dvl_acc, dkb_acc, dvb_acc, *,
+                scale: float, r: int, nb: int, G: int):
+    """One grid step = one (kv head, query block, group member): recompute the
+    joint probabilities from the saved (m, denom) residuals, then the five
+    blockwise matmuls. Grid is (B·Hkv, nb, G) with the group axis INNERMOST,
+    so every contributor to a kv-row accumulator runs on consecutive steps:
+    dk_loc/dv_loc accumulate over the G group members of query block n, and
+    dk̄/dv̄ over all nb·G steps of the kv row — fp32 scratch, emitted on each
+    accumulator's last contributing step."""
+    n = pl.program_id(1)
+    g = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(n == 0, g == 0))
+    def _init_glob():
+        dkb_acc[...] = jnp.zeros_like(dkb_acc)
+        dvb_acc[...] = jnp.zeros_like(dvb_acc)
+
+    @pl.when(g == 0)
+    def _init_loc():
+        dkl_acc[...] = jnp.zeros_like(dkl_acc)
+        dvl_acc[...] = jnp.zeros_like(dvl_acc)
+
+    q = q_ref[0]                                     # (c, Dh)
+    kl = kl_ref[0]
+    kbar = kbar_ref[0]                               # (M, Dh)
+    vl32 = vl_ref[0].astype(jnp.float32)
+    vbar32 = vbar_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)               # (c, Dh)
+    m = m_ref[...].reshape(-1, 1)                    # (c, 1) fp32
+    denom = d_ref[...].reshape(-1, 1)
+
+    # native-dtype score recompute — bit-identical to the forward's scores,
+    # so p = exp(s − m)/denom reproduces the forward's exact probabilities
+    s_loc, s_glob = _joint_scores(q, kl, kbar, n, scale, r)
+    q32 = q.astype(jnp.float32)
+    kl32 = kl.astype(jnp.float32)
+    kbar32 = kbar.astype(jnp.float32)
+    p_loc = jnp.exp(s_loc - m) / denom               # (c, c) joint probs
+    p_glob = jnp.exp(s_glob - m) / denom             # (c, M)
+
+    # dv = Pᵀ·do (masked entries have P = 0, so they contribute nothing)
+    dvl_acc[...] += jax.lax.dot_general(
+        p_loc, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (c, Dh)
+    dvb_acc[...] += jax.lax.dot_general(
+        p_glob, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (M, Dh)
+
+    # dS = P ∘ (dP − rowsum(dP ∘ P)) over the JOINT row
+    dp_loc = jax.lax.dot_general(
+        do, vl32, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (c, c)
+    dp_glob = jax.lax.dot_general(
+        do, vbar32, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (c, M)
+    delta = (jnp.sum(dp_loc * p_loc, -1, keepdims=True)
+             + jnp.sum(dp_glob * p_glob, -1, keepdims=True))
+    ds_loc = p_loc * (dp_loc - delta)
+    ds_glob = p_glob * (dp_glob - delta)
+
+    dq = jax.lax.dot_general(
+        ds_loc, kl32, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dq += jax.lax.dot_general(
+        ds_glob, kbar32, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dq_ref[0] = (dq * scale).astype(dq_ref.dtype)
+
+    dkl_acc[...] += jax.lax.dot_general(
+        ds_loc, q32, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (c, Dh)
+    dkb_acc[...] += jax.lax.dot_general(
+        ds_glob, q32, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (M, Dh)
+
+    @pl.when(g == G - 1)
+    def _emit_loc():
+        dkl_ref[0] = dkl_acc[...]
+        dvl_ref[0] = dvl_acc[...]
+
+    @pl.when(jnp.logical_and(n == nb - 1, g == G - 1))
+    def _emit_glob():
+        dkb_ref[0] = dkb_acc[...]
+        dvb_ref[0] = dvb_acc[...]
+
+
+def blockwise_causal_attn_bwd(
+    q: jax.Array,       # (B, H, S, Dh)
+    k: jax.Array,       # (B, Hkv, S, Dh) — native kv heads
+    v: jax.Array,
+    kbar: jax.Array,    # (B, Hkv, M, Dh)  compressed slots, M = (S/c)*r
+    vbar: jax.Array,
+    m: jax.Array,       # (B, H, S) fp32 — forward's joint-softmax row max
+    denom: jax.Array,   # (B, H, S) fp32 — forward's joint-softmax denominator
+    do: jax.Array,      # (B, H, S, Dh) — output cotangent
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: float,
+    interpret: bool = False,
+):
+    """Fused Pallas backward of :func:`blockwise_causal_attn`.
+
+    Returns ``(dq, dk_loc, dv_loc, dkbar, dvbar)`` — dq in q's dtype,
+    everything else fp32 (the accumulation dtype): dk_loc/dv_loc are the
+    gradients through the LOCAL (own-block, exact) attention; dk̄/dv̄ are the
+    compressed-slot gradients the caller chains through the linear
+    `compress_blocks` VJP to reach dk/dv/dE/dF. No (S × nb·r) global score
+    tensor ever hits HBM — scores live one query block at a time, exactly
+    like the forward.
+    """
+    B, H, S, Dh = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    c = block_size
+    assert S % c == 0
+    nb = S // c
+    M = kbar.shape[2]
+    assert M == nb * block_slots, (M, nb, block_slots)
+    q3 = q.reshape(B * H, S, Dh)
+    k3 = k.reshape(B * Hkv, S, Dh)
+    v3 = v.reshape(B * Hkv, S, Dh)
+    kb3 = kbar.reshape(B * Hkv, M, Dh)
+    vb3 = vbar.reshape(B * Hkv, M, Dh)
+    m3 = m.reshape(B * H, S)
+    d3 = denom.reshape(B * H, S)
+    do3 = do.reshape(B * H, S, Dh)
+
+    # kv row bkv, group member g ↔ query row (bkv//Hkv)·H + (bkv%Hkv)·G + g —
+    # the forward's kv_row routing inverted (per-step index math, no HBM
+    # repeat of K/V or the compressed slots).
+    def q_row(bkv, g):
+        return (bkv // Hkv) * H + (bkv % Hkv) * G + g
+
+    dq, dkl, dvl, dkb, dvb = pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale, r=block_slots, nb=nb,
+                          G=G),
+        grid=(B * Hkv, nb, G),
+        in_specs=[
+            pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (q_row(bkv, g), n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (bkv, n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (bkv, n, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bkv, n, g: (bkv, 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bkv, n, g: (bkv, 0, 0)),
+            pl.BlockSpec((1, c), lambda bkv, n, g: (q_row(bkv, g), n)),
+            pl.BlockSpec((1, c), lambda bkv, n, g: (q_row(bkv, g), n)),
+            pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (q_row(bkv, g), n, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (q_row(bkv, g), n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (bkv, n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (bkv, n, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bkv, n, g: (bkv, 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bkv, n, g: (bkv, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B * Hkv, S, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, S, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, M, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, M, Dh), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c, Dh), jnp.float32),
+            pltpu.VMEM((c, Dh), jnp.float32),
+            pltpu.VMEM((M, Dh), jnp.float32),
+            pltpu.VMEM((M, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3, kb3, vb3, m3, d3, do3)
+    return (dq.reshape(B, H, S, Dh), dkl.reshape(B, Hkv, S, Dh),
+            dvl.reshape(B, Hkv, S, Dh), dkb.reshape(B, Hkv, M, Dh),
+            dvb.reshape(B, Hkv, M, Dh))

@@ -17,10 +17,18 @@ Backend dispatch rules (`resolve_backend`, consumed by models/attention.py):
   fall back to the reference projection while the attention itself stays
   fused (models/attention.py applies this rule).
 
-All fused ops are trainable: `fused_linformer_attention` carries an analytic
-custom VJP; `fused_seq_projection` is linear (analytic VJP below);
-`fused_blockwise_causal_attention` recomputes its backward through the
-pure-jnp reference (same math, so gradients match the reference path).
+All fused ops are trainable END TO END in the fused path:
+`fused_linformer_attention` carries an analytic custom VJP;
+`fused_seq_projection` is linear (analytic VJP below);
+`fused_blockwise_causal_attention` has a fused Pallas backward
+(`bca.blockwise_causal_attn_bwd`): the forward saves the joint softmax's
+per-row (m, denom) residuals, the backward recomputes the probabilities from
+them and runs the five blockwise matmuls on the forward's grid, and dE/dF
+chain through the linear `compress_blocks` VJP in plain jnp. The pre-existing
+reference-recompute backward is kept behind ``backward_impl="reference"`` as
+the parity/testing oracle (it re-runs the pure-jnp reference under jax.vjp —
+same math, 2× the attention work and, below CHUNKED_ATTENTION_MIN_SEQ, a full
+(B, H, S, nb·r) global score tensor in HBM).
 
 Layout note: kernels use (B, H, S, Dh); the model uses (B, S, H, Dh). These
 wrappers accept model layout and handle GQA head repetition for the
@@ -33,9 +41,10 @@ Known limits (docs/kernels.md has the full list): the fused path is
 single-device (under a mesh, GSPMD partitions the reference einsums; the
 kernels run whole inside a shard); `fused_chunk_prefill_attention` and
 `fused_decode_attention` are inference-only (no VJP); pinned compressed
-operands must fit VMEM (K ≤ 512 exact form, M = (max_seq/c)·r causal
-forms); blockwise-causal forms need S % block_size == 0 (serving routes
-the remainder through the decode path).
+operands must fit VMEM — fail-fast enforced here: K ≤ MAX_EXACT_K for the
+exact form, M = (max_seq/c)·r ≤ MAX_PINNED_SLOTS for the causal/decode/chunk
+forms; blockwise-causal forms need S % block_size == 0 (serving routes the
+remainder through the decode path).
 """
 from __future__ import annotations
 
@@ -49,11 +58,25 @@ from repro.kernels import blockwise_causal_attn as bca
 from repro.kernels import linformer_attn as la
 from repro.kernels import ref
 from repro.kernels import seq_projection as sp
-from repro.core.causal import (blockwise_causal_attention,
+from repro.core.causal import (CHUNKED_ATTENTION_MIN_SEQ,
+                               blockwise_causal_attention,
                                blockwise_causal_attention_chunked,
                                compress_blocks)
 
 BACKENDS = ("reference", "fused")
+BACKWARD_IMPLS = ("fused", "reference")
+
+# VMEM budgets for operands the kernels pin whole per grid step
+# (docs/kernels.md "Known limits"). Exceeding them used to compile anyway and
+# blow VMEM (or silently thrash) at runtime — now the wrappers fail fast.
+MAX_EXACT_K = 512          # exact form: compressed length of k̄/v̄
+MAX_PINNED_SLOTS = 4096    # causal/decode/chunk forms: M = (max_seq/c)·r
+
+# Grids tile the sequence into blocks that must divide it evenly; blocks
+# below this floor degrade the grid to near-per-row steps (S=509 prime would
+# mean a 509-step grid per (batch, head) — pathological in interpret mode and
+# a compile-size bomb on TPU), so `_divisor_block` refuses them.
+MIN_DIVISOR_BLOCK = 8
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -80,10 +103,24 @@ def resolve_backend(backend: str = "auto") -> str:
 
 
 def _divisor_block(size: int, preferred: int) -> int:
-    """Largest block ≤ preferred that divides `size` (kernels tile evenly)."""
+    """Largest block ≤ preferred that divides `size` (kernels tile evenly).
+
+    Fails fast instead of silently degrading: a sequence length whose largest
+    usable divisor is tiny (prime/odd S) would otherwise quietly emit a
+    degenerate near-per-row grid. A sub-floor block is only refused when it
+    also means a blown-up grid (> MIN_DIVISOR_BLOCK steps) — tiny sequences
+    that fit in a handful of blocks are fine."""
     b = max(1, min(preferred, size))
     while size % b:
         b -= 1
+    if b < MIN_DIVISOR_BLOCK and size // b > MIN_DIVISOR_BLOCK:
+        raise ValueError(
+            f"sequence length {size} has no block divisor in "
+            f"[{MIN_DIVISOR_BLOCK}, {preferred}] — the kernel grid would "
+            f"degrade to {b}-row blocks ({size // b} grid steps per "
+            f"(batch, head)). Pad or trim the sequence so it has a divisor "
+            f"≥ {MIN_DIVISOR_BLOCK} (any multiple of {MIN_DIVISOR_BLOCK} "
+            f"works), or use backend='reference' for this shape.")
     return b
 
 
@@ -159,10 +196,17 @@ def fused_linformer_attention(
     softmax(q·k̄ᵀ·scale)·v̄ over the K compressed slots.
 
     Shapes/dtypes: model layout — q (B, S, H, Dh); kbar/vbar (B, K, Hkv,
-    Dh) with K ≤ 512 so the whole compressed operand pins in VMEM (scores
-    fp32, output in q's dtype). GQA kv heads are repeated to H for the
-    compressed operands (cheap: K is small). Trainable — analytic custom
+    Dh) with K ≤ MAX_EXACT_K so the whole compressed operand pins in VMEM
+    (scores fp32, output in q's dtype). GQA kv heads are repeated to H for
+    the compressed operands (cheap: K is small). Trainable — analytic custom
     VJP (`_lin_bwd`); `block_q` shrinks to the largest divisor of S."""
+    K = kbar.shape[1]
+    if K > MAX_EXACT_K:
+        raise ValueError(
+            f"fused_linformer_attention pins the whole compressed k̄/v̄ in "
+            f"VMEM, which requires K ≤ {MAX_EXACT_K}; got K={K}. Lower the "
+            f"Linformer projected dimension (the paper uses 128–256) or "
+            f"use backend='reference' for this shape.")
     qk = _to_kernel_layout(q)
     kb = _to_kernel_layout(kbar)
     vb = _to_kernel_layout(vbar)
@@ -213,49 +257,65 @@ def fused_seq_projection(
     return _from_kernel_layout(out)        # (B, K, H, Dh)
 
 
-def _blockwise_causal_fused(q, k, v, E, F, block_size, block_slots, scale,
-                            interpret):
-    B, S, H, Dh = q.shape
-    Hkv = k.shape[2]
+def _compress_kv(x, W, block_size, block_slots):
+    """(B, S, Hkv, Dh) × E/F → (B, nb·r, Hkv, Dh) compressed slots."""
+    B, S, Hkv, Dh = x.shape
     nb = S // block_size
-    kbar = compress_blocks(k.reshape(B, nb, block_size, Hkv, Dh), E)
-    vbar = compress_blocks(v.reshape(B, nb, block_size, Hkv, Dh), F)
-    kbar = kbar.reshape(B, nb * block_slots, Hkv, Dh)
-    vbar = vbar.reshape(B, nb * block_slots, Hkv, Dh)
+    xbar = compress_blocks(x.reshape(B, nb, block_size, Hkv, Dh), W)
+    return xbar.reshape(B, nb * block_slots, Hkv, Dh)
+
+
+def _blockwise_causal_fused(q, k, v, E, F, block_size, block_slots, scale,
+                            interpret, return_residuals=False):
+    kbar = _compress_kv(k, E, block_size, block_slots)
+    vbar = _compress_kv(v, F, block_size, block_slots)
     # K/V keep their native Hkv heads: the kernel's index maps route each
     # grouped query head to its kv row (no G-fold jnp.repeat in HBM).
     out = bca.blockwise_causal_attn(
         _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
         _to_kernel_layout(kbar), _to_kernel_layout(vbar),
         block_size=block_size, block_slots=block_slots, scale=scale,
-        interpret=interpret)
+        interpret=interpret, return_residuals=return_residuals)
+    if return_residuals:
+        out, m, denom = out
+        return _from_kernel_layout(out), kbar, vbar, m, denom
     return _from_kernel_layout(out)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
 def _blockwise_causal_diff(q, k, v, E, F, block_size, block_slots, scale,
-                           interpret):
-    """Differentiable fused blockwise-causal attention: Pallas forward,
-    backward recomputed through the pure-jnp reference (identical math, so
-    gradients match the reference path; the recompute is the standard
-    no-stored-probabilities tradeoff)."""
+                           interpret, backward_impl):
+    """Differentiable fused blockwise-causal attention: Pallas forward AND
+    (by default) Pallas backward. The forward saves the joint softmax's
+    per-row (m, denom) residuals; `_bca_bwd` recomputes the probabilities
+    from them inside `bca.blockwise_causal_attn_bwd` and chains dE/dF
+    through the linear `compress_blocks` VJP. ``backward_impl="reference"``
+    keeps the old reference-recompute backward as the parity oracle."""
     return _blockwise_causal_fused(q, k, v, E, F, block_size, block_slots,
                                    scale, interpret)
 
 
-def _bca_fwd(q, k, v, E, F, block_size, block_slots, scale, interpret):
-    out = _blockwise_causal_diff(q, k, v, E, F, block_size, block_slots,
-                                 scale, interpret)
-    return out, (q, k, v, E, F)
+def _bca_fwd(q, k, v, E, F, block_size, block_slots, scale, interpret,
+             backward_impl):
+    if backward_impl == "reference":
+        out = _blockwise_causal_fused(q, k, v, E, F, block_size, block_slots,
+                                      scale, interpret)
+        return out, (q, k, v, E, F)
+    out, kbar, vbar, m, denom = _blockwise_causal_fused(
+        q, k, v, E, F, block_size, block_slots, scale, interpret,
+        return_residuals=True)
+    return out, (q, k, v, E, F, kbar, vbar, m, denom)
 
 
-def _bca_bwd(block_size, block_slots, scale, interpret, res, do):
+def _bca_bwd_reference(block_size, block_slots, scale, res, do):
+    """Reference-recompute backward (parity oracle): jax.vjp over the
+    pure-jnp reference — identical math, but a second unfused attention
+    pass, switching to the memory-bounded chunked form at long S (the plain
+    form materializes the full (…, S, nb·r) global score tensor, which the
+    fused path exists to avoid)."""
     q, k, v, E, F = res
-    # Long sequences recompute through the memory-bounded chunked reference
-    # (same math): the plain form materializes the full (…, S, nb·r) global
-    # score tensor, which the fused forward exists to avoid. Threshold
-    # mirrors the forward's `chunked = S >= 8192` rule (models/transformer).
-    ref_fn = (blockwise_causal_attention_chunked if q.shape[1] >= 8192
+    ref_fn = (blockwise_causal_attention_chunked
+              if q.shape[1] >= CHUNKED_ATTENTION_MIN_SEQ
               else blockwise_causal_attention)
     _, vjp = jax.vjp(
         lambda q_, k_, v_, E_, F_: ref_fn(
@@ -264,11 +324,39 @@ def _bca_bwd(block_size, block_slots, scale, interpret, res, do):
     return vjp(do)
 
 
+def _bca_bwd(block_size, block_slots, scale, interpret, backward_impl, res,
+             do):
+    if backward_impl == "reference":
+        return _bca_bwd_reference(block_size, block_slots, scale, res, do)
+    q, k, v, E, F, kbar, vbar, m, denom = res
+    dq_k, dkl_k, dvl_k, dkb_k, dvb_k = bca.blockwise_causal_attn_bwd(
+        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
+        _to_kernel_layout(kbar), _to_kernel_layout(vbar), m, denom,
+        _to_kernel_layout(do), block_size=block_size,
+        block_slots=block_slots, scale=scale, interpret=interpret)
+    dq = _from_kernel_layout(dq_k)
+    dk_loc = _from_kernel_layout(dkl_k)          # (B, S, Hkv, Dh) fp32
+    dv_loc = _from_kernel_layout(dvl_k)
+    dkbar = _from_kernel_layout(dkb_k)           # (B, nb·r, Hkv, Dh) fp32
+    dvbar = _from_kernel_layout(dvb_k)
+    # dk̄/dv̄ → (dk, dE) / (dv, dF) through the linear compress_blocks VJP
+    # (plain jnp — the compression is a small per-block matmul).
+    _, vjp_k = jax.vjp(
+        lambda k_, E_: _compress_kv(k_, E_, block_size, block_slots), k, E)
+    dk_comp, dE = vjp_k(dkbar.astype(kbar.dtype))
+    _, vjp_v = jax.vjp(
+        lambda v_, F_: _compress_kv(v_, F_, block_size, block_slots), v, F)
+    dv_comp, dF = vjp_v(dvbar.astype(vbar.dtype))
+    dk = (dk_loc + dk_comp.astype(jnp.float32)).astype(k.dtype)
+    dv = (dv_loc + dv_comp.astype(jnp.float32)).astype(v.dtype)
+    return dq, dk, dv, dE, dF
+
+
 _blockwise_causal_diff.defvjp(_bca_fwd, _bca_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "block_size", "block_slots", "scale", "interpret"))
+    "block_size", "block_slots", "scale", "interpret", "backward_impl"))
 def fused_blockwise_causal_attention(
     q: jax.Array,        # (B, S, H, Dh)
     k: jax.Array,        # (B, S, Hkv, Dh)
@@ -280,12 +368,32 @@ def fused_blockwise_causal_attention(
     block_slots: int,
     scale: float,
     interpret: Optional[bool] = None,
+    backward_impl: str = "fused",
 ) -> jax.Array:
-    if q.shape[1] % block_size != 0:
+    """Causal training/prefill attention through the Pallas kernels.
+
+    Trainable end to end: `backward_impl="fused"` (default) runs the Pallas
+    backward from saved (m, denom) residuals; `"reference"` recomputes
+    through the pure-jnp reference VJP (the parity/testing oracle)."""
+    if backward_impl not in BACKWARD_IMPLS:
         raise ValueError(
-            f"S={q.shape[1]} must be a multiple of block_size={block_size}")
+            f"unknown backward_impl {backward_impl!r}; "
+            f"expected one of {BACKWARD_IMPLS}")
+    S = q.shape[1]
+    if S % block_size != 0:
+        raise ValueError(
+            f"S={S} must be a multiple of block_size={block_size}")
+    M = (S // block_size) * block_slots
+    if M > MAX_PINNED_SLOTS:
+        raise ValueError(
+            f"fused_blockwise_causal_attention pins all M = (S/c)·r "
+            f"= ({S}/{block_size})·{block_slots} = {M} compressed slots in "
+            f"VMEM per grid step, which requires M ≤ {MAX_PINNED_SLOTS}. "
+            f"Raise block_size, lower block_slots, or use "
+            f"backend='reference' for this shape.")
     return _blockwise_causal_diff(q, k, v, E, F, block_size, block_slots,
-                                  scale, _auto_interpret(interpret))
+                                  scale, _auto_interpret(interpret),
+                                  backward_impl)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -322,6 +430,14 @@ def fused_chunk_prefill_attention(
     if q.shape[1] % block_size != 0:
         raise ValueError(
             f"P={q.shape[1]} must be a multiple of block_size={block_size}")
+    M = comp_k.shape[1]
+    if M > MAX_PINNED_SLOTS:
+        raise ValueError(
+            f"fused_chunk_prefill_attention pins the full M = "
+            f"(max_seq/c)·r = {M}-slot compressed cache buffer in VMEM per "
+            f"grid step, which requires M ≤ {MAX_PINNED_SLOTS}. Raise "
+            f"block_size, lower block_slots or max_seq, or use "
+            f"backend='reference' for this cache shape.")
     out = bca.blockwise_causal_prefix_attn(
         _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
         _to_kernel_layout(comp_k), _to_kernel_layout(comp_v), start_blocks,
@@ -358,6 +474,13 @@ def fused_decode_attention(
     B, _, H, Dh = q_t.shape
     Hkv = raw_k.shape[2]
     G = H // Hkv
+    M = comp_k.shape[1]
+    if M > MAX_PINNED_SLOTS:
+        raise ValueError(
+            f"fused_decode_attention pins the full M = (max_seq/c)·r = "
+            f"{M}-slot compressed cache buffer in VMEM, which requires "
+            f"M ≤ {MAX_PINNED_SLOTS}. Raise block_size, lower block_slots "
+            f"or max_seq, or use backend='reference' for this cache shape.")
     qk = q_t.reshape(B, Hkv, G, Dh)             # kernel layout: S-axis = G
     out = la.decode_attn(
         qk, _to_kernel_layout(raw_k), _to_kernel_layout(raw_v),

@@ -157,13 +157,16 @@ def apply_attention(
     elif cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
         if backend == "fused":
-            # the kernel streams query blocks itself (forward); the backward
-            # recompute switches to the chunked reference at long S inside
-            # ops._bca_bwd, so `chunked` needs no handling here
+            # the kernel streams query blocks itself in BOTH directions: the
+            # default fused backward never materializes global scores, and
+            # the backward_impl="reference" oracle switches to the chunked
+            # reference at long S inside ops._bca_bwd_reference — so
+            # `chunked` needs no handling here
             out = kernel_ops.fused_blockwise_causal_attention(
                 q, k, v, E, F, block_size=cfg.linformer.block_size,
                 block_slots=cfg.linformer.block_slots,
-                scale=cfg.head_dim ** -0.5)
+                scale=cfg.head_dim ** -0.5,
+                backward_impl=cfg.backward_impl)
         else:
             fn = (causal_lib.blockwise_causal_attention_chunked if chunked
                   else causal_lib.blockwise_causal_attention)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import linformer as lin_lib
+from repro.core.causal import CHUNKED_ATTENTION_MIN_SEQ
 from repro.core.projections import effective_k
 from repro.models import attention as attn_lib
 from repro.models import layers as L
@@ -329,7 +330,7 @@ def forward(
     """
     x = embed_inputs(params, cfg, batch, ctx)
     B, S, _ = x.shape
-    chunked = S >= 8192
+    chunked = S >= CHUNKED_ATTENTION_MIN_SEQ
     shared_lin = params.get("shared", {}).get("lin")
     single_pass = return_cache and cfg.single_pass_cache
     entry_spec = ({"max_seq": cache_max_seq or cfg.max_seq_len,
@@ -389,7 +390,7 @@ def build_cache_from_sequence(params, cfg, batch, *, max_seq, dtype, ctx):
     B, S, _ = x.shape
     shared_lin = params.get("shared", {}).get("lin")
     acfg = cfg.attention
-    chunked = S >= 8192
+    chunked = S >= CHUNKED_ATTENTION_MIN_SEQ
 
     def body(carry, lp):
         h, _ = carry

@@ -97,12 +97,18 @@ class Trainer:
         preempt_check: Optional[Callable[[], bool]] = None,
         log_fn: Callable[[str], None] = print,
         attention_backend: Optional[str] = None,
+        backward_impl: Optional[str] = None,
     ):
         # attention_backend overrides cfg.attention.backend for this run
         # ("reference" | "fused"; None keeps the config's knob, whose "auto"
         # default resolves to the fused Pallas kernels — kernels/ops.py).
+        # backward_impl overrides cfg.attention.backward_impl the same way
+        # ("fused" Pallas backward | "reference" recompute oracle) for the
+        # blockwise-causal training path.
         if attention_backend is not None:
             cfg = cfg.with_attention_backend(attention_backend)
+        if backward_impl is not None:
+            cfg = cfg.with_backward_impl(backward_impl)
         self.cfg = cfg
         self.tcfg = tcfg
         self.ctx = ctx

@@ -74,8 +74,8 @@ def test_forward_parity(cfg_fn):
 ])
 def test_gradient_parity(cfg_fn):
     """Training path: grads through the fused kernels' custom VJPs
-    (fused_linformer_attention analytic; blockwise-causal reference
-    recompute; seq-projection linear) match reference autodiff — including
+    (fused_linformer_attention analytic; blockwise-causal fused Pallas
+    backward; seq-projection linear) match reference autodiff — including
     grads into the learned E/F projections."""
     cfg_ref, cfg_fused = _both(cfg_fn())
     params = M.init_params(jax.random.PRNGKey(0), cfg_ref)
@@ -87,6 +87,41 @@ def test_gradient_parity(cfg_fn):
     assert tree_ref == tree_fused
     for a, b in zip(flat_ref, flat_fused):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a), **TOL)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_backward_impl_parity_model_level(dtype):
+    """Whole-model grads (loss_fn → scanned layers → fused blockwise-causal
+    attention, GQA) through the fused Pallas backward match the
+    backward_impl="reference" recompute oracle, in fp32 and bf16."""
+    cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), dtype=dtype)
+    cfg = cfg.with_attention_backend("fused")
+    assert cfg.attention.backward_impl == "fused"   # the default
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    g_fused = jax.grad(lambda p: M.loss_fn(p, cfg, batch)[0])(params)
+    cfg_ref = cfg.with_backward_impl("reference")
+    g_ref = jax.grad(lambda p: M.loss_fn(p, cfg_ref, batch)[0])(params)
+    flat_f, tree_f = jax.tree.flatten(g_fused)
+    flat_r, tree_r = jax.tree.flatten(g_ref)
+    assert tree_f == tree_r
+    tol = TOL if dtype == "float32" else dict(atol=5e-2, rtol=5e-2)
+    for a, b in zip(flat_f, flat_r):
+        b32 = np.asarray(b, np.float32)
+        atol = tol["atol"] * max(1.0, float(np.max(np.abs(b32))))
+        np.testing.assert_allclose(np.asarray(a, np.float32), b32,
+                                   atol=atol, rtol=tol["rtol"])
+
+
+def test_trainer_threads_backward_impl():
+    """Trainer(backward_impl=...) overrides the config knob like
+    attention_backend does."""
+    from repro.configs.base import TrainConfig
+    from repro.train.trainer import Trainer
+    cfg = f32(get_smoke_config("qwen3-8b"))
+    tr = Trainer(cfg, TrainConfig(steps=1, seq_len=32, global_batch=2),
+                 log_fn=lambda s: None, backward_impl="reference")
+    assert tr.cfg.attention.backward_impl == "reference"
 
 
 def test_decode_parity_linformer_causal_gqa():

@@ -117,3 +117,241 @@ def test_linformer_attn_rows_sum_to_one_property():
     out = ops.fused_linformer_attention(q, kbar, vbar, scale=0.25,
                                         block_q=32)
     np.testing.assert_allclose(out, jnp.full_like(out, 0.731), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast wrapper validation (silent-degradation bugfixes)
+# ---------------------------------------------------------------------------
+
+
+def test_divisor_block_floor():
+    """`_divisor_block` must refuse degenerate grids instead of silently
+    shrinking to near-per-row blocks (S=509 prime used to mean a 509-step
+    grid per (batch, head))."""
+    assert ops._divisor_block(512, 256) == 256
+    assert ops._divisor_block(96, 64) == 48
+    # sizes below the floor are a single block, not degradation
+    assert ops._divisor_block(4, 8) == 4
+    # sub-floor blocks are fine while the grid stays small
+    assert ops._divisor_block(12, 8) == 6
+    for bad in (509, 523, 514):      # prime / prime / largest divisor 2
+        with pytest.raises(ValueError, match=str(bad)):
+            ops._divisor_block(bad, 256)
+
+
+def test_exact_form_k_budget_fail_fast():
+    """K > MAX_EXACT_K cannot pin in VMEM — must raise, not compile."""
+    K = ops.MAX_EXACT_K + 8
+    q = jnp.zeros((1, 16, 2, 4))
+    kbar = jnp.zeros((1, K, 2, 4))
+    with pytest.raises(ValueError, match=str(ops.MAX_EXACT_K)):
+        ops.fused_linformer_attention(q, kbar, kbar, scale=0.5)
+    # the documented budget itself is still accepted (shape check only)
+    assert ops.MAX_EXACT_K == 512
+
+
+def test_causal_form_slot_budget_fail_fast():
+    """M = (S/c)·r > MAX_PINNED_SLOTS must raise in every causal-family
+    wrapper (training, chunk prefill, decode)."""
+    c, r = 8, 8
+    S = ((ops.MAX_PINNED_SLOTS // r) + 1) * c          # M = MAX + r
+    q = jnp.zeros((1, S, 2, 4))
+    kv = jnp.zeros((1, S, 1, 4))
+    E = jnp.zeros((c, r))
+    with pytest.raises(ValueError, match=str(ops.MAX_PINNED_SLOTS)):
+        ops.fused_blockwise_causal_attention(
+            q, kv, kv, E, E, block_size=c, block_slots=r, scale=0.5)
+    M = ops.MAX_PINNED_SLOTS + 8
+    comp = jnp.zeros((1, M, 1, 4))
+    with pytest.raises(ValueError, match=str(ops.MAX_PINNED_SLOTS)):
+        ops.fused_chunk_prefill_attention(
+            jnp.zeros((1, c, 2, 4)), jnp.zeros((1, c, 1, 4)),
+            jnp.zeros((1, c, 1, 4)), comp, comp,
+            jnp.zeros((1,), jnp.int32), block_size=c, block_slots=r,
+            scale=0.5)
+    with pytest.raises(ValueError, match=str(ops.MAX_PINNED_SLOTS)):
+        ops.fused_decode_attention(
+            jnp.zeros((1, 1, 2, 4)), jnp.zeros((1, c, 1, 4)),
+            jnp.zeros((1, c, 1, 4)), comp, comp,
+            jnp.zeros((1, c)), jnp.zeros((1, M)), scale=0.5)
+
+
+def test_backward_impl_knob_validated():
+    q = jnp.zeros((1, 16, 2, 4))
+    kv = jnp.zeros((1, 16, 1, 4))
+    E = jnp.zeros((8, 2))
+    with pytest.raises(ValueError, match="backward_impl"):
+        ops.fused_blockwise_causal_attention(
+            q, kv, kv, E, E, block_size=8, block_slots=2, scale=0.5,
+            backward_impl="autodiff")
+
+
+# ---------------------------------------------------------------------------
+# Fused blockwise-causal backward: gradient parity vs the reference VJP
+# ---------------------------------------------------------------------------
+
+
+def _bca_grad_case(B, H, Hkv, S, Dh, c, r, dtype, ef_shape, seed=7):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), dtype)
+    E = jax.random.normal(ks[3], ef_shape) * 0.3
+    F = jax.random.normal(ks[4], ef_shape) * 0.3
+    do = jax.random.normal(ks[5], (B, S, H, Dh))
+    return q, k, v, E, F, do
+
+
+def _bca_grads(q, k, v, E, F, do, c, r, backward_impl):
+    def loss(q_, k_, v_, E_, F_):
+        out = ops.fused_blockwise_causal_attention(
+            q_, k_, v_, E_, F_, block_size=c, block_slots=r,
+            scale=q.shape[-1] ** -0.5, backward_impl=backward_impl)
+        return jnp.sum(out.astype(jnp.float32) * do)
+    return jax.grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, E, F)
+
+
+def _assert_grads_close(got, want, dtype):
+    for name, a, b in zip("qkvEF", got, want):
+        b32 = np.asarray(b, np.float32)
+        # atol scales with the gradient's magnitude: rtol alone trips on
+        # near-zero entries, and long-S reductions accumulate rounding
+        # proportional to the result's scale
+        scale_ = max(1.0, float(np.max(np.abs(b32))))
+        if dtype == jnp.bfloat16:
+            tol = dict(atol=5e-2 * scale_, rtol=5e-2)
+        else:
+            tol = dict(atol=2e-5 * scale_, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(a, np.float32), b32,
+                                   err_msg=f"d{name}", **tol)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("gqa", [False, True])
+def test_blockwise_causal_bwd_kernel_parity(dtype, gqa):
+    """Pallas backward == reference VJP for dq/dk/dv/dE/dF, MHA + GQA,
+    fp32 + bf16 inputs."""
+    H, Hkv = (4, 2) if gqa else (2, 2)
+    c, r = 16, 4
+    case = _bca_grad_case(2, H, Hkv, 64, 16, c, r, dtype, (c, r))
+    g_fused = _bca_grads(*case, c, r, "fused")
+    g_ref = _bca_grads(*case, c, r, "reference")
+    _assert_grads_close(g_fused, g_ref, dtype)
+
+
+def test_blockwise_causal_bwd_per_head_projection():
+    """Per-head (Hkv, c, r) E/F chain through the same compress_blocks VJP."""
+    c, r = 16, 2
+    case = _bca_grad_case(1, 4, 2, 48, 8, c, r, jnp.float32, (2, c, r))
+    g_fused = _bca_grads(*case, c, r, "fused")
+    g_ref = _bca_grads(*case, c, r, "reference")
+    _assert_grads_close(g_fused, g_ref, jnp.float32)
+
+
+def test_blockwise_causal_bwd_fold_boundary():
+    """S exactly one block (no visible compressed slots anywhere) and
+    S = 2 blocks (first fold boundary) — the global-branch edge cases."""
+    for S in (16, 32):
+        case = _bca_grad_case(1, 2, 1, S, 8, 16, 4, jnp.float32, (16, 4))
+        g_fused = _bca_grads(*case, 16, 4, "fused")
+        g_ref = _bca_grads(*case, 16, 4, "reference")
+        _assert_grads_close(g_fused, g_ref, jnp.float32)
+
+
+def test_blockwise_causal_bwd_residual_parity():
+    """The (m, denom) residuals the fused forward saves equal the reference
+    joint softmax's row max and denominator (core/causal.py export)."""
+    from repro.core.causal import compress_blocks
+    B, H, Hkv, S, Dh, c, r = 2, 4, 2, 64, 16, 16, 4
+    q, k, v, E, F, _ = _bca_grad_case(B, H, Hkv, S, Dh, c, r, jnp.float32,
+                                      (c, r))
+    nb = S // c
+    kbar = compress_blocks(k.reshape(B, nb, c, Hkv, Dh), E).reshape(
+        B, nb * r, Hkv, Dh)
+    vbar = compress_blocks(v.reshape(B, nb, c, Hkv, Dh), F).reshape(
+        B, nb * r, Hkv, Dh)
+    tk = lambda x: jnp.moveaxis(x, 2, 1)
+    from repro.kernels import blockwise_causal_attn as bca
+    out_k, m_k, d_k = bca.blockwise_causal_attn(
+        tk(q), tk(k), tk(v), tk(kbar), tk(vbar), block_size=c, block_slots=r,
+        scale=Dh ** -0.5, interpret=True, return_residuals=True)
+    out_r, m_r, d_r = blockwise_causal_attention(
+        q, k, v, E, F, block_size=c, scale=Dh ** -0.5, return_residuals=True)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(out_k, 1, 2)),
+                               np.asarray(out_r), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_bca_chunked_threshold_single_source():
+    """The S ≥ 8192 chunked-reference threshold lives in ONE place."""
+    from repro.core.causal import CHUNKED_ATTENTION_MIN_SEQ
+    from repro.models import transformer
+    assert ops.CHUNKED_ATTENTION_MIN_SEQ is CHUNKED_ATTENTION_MIN_SEQ
+    assert transformer.CHUNKED_ATTENTION_MIN_SEQ is CHUNKED_ATTENTION_MIN_SEQ
+
+
+@pytest.mark.slow
+def test_blockwise_causal_bwd_parity_across_chunked_threshold():
+    """Gradients match the reference VJP on BOTH sides of
+    CHUNKED_ATTENTION_MIN_SEQ — above it the reference oracle recomputes
+    through the memory-bounded chunked form, and the fused backward must
+    agree with that too."""
+    from repro.core.causal import CHUNKED_ATTENTION_MIN_SEQ as MIN_SEQ
+    c, r = 512, 2
+    for S in (MIN_SEQ - c, MIN_SEQ):
+        case = _bca_grad_case(1, 2, 1, S, 8, c, r, jnp.float32, (c, r))
+        g_fused = _bca_grads(*case, c, r, "fused")
+        g_ref = _bca_grads(*case, c, r, "reference")
+        _assert_grads_close(g_fused, g_ref, jnp.float32)
+
+
+def test_bca_fused_backward_no_reference_recompute(monkeypatch):
+    """Acceptance criterion: jax.grad through the DEFAULT fused backward
+    never calls the jnp reference (the recompute is gone); the
+    backward_impl="reference" oracle still does."""
+    calls = []
+
+    def spy(fn):
+        def wrapped(*a, **kw):
+            calls.append(fn.__name__)
+            return fn(*a, **kw)
+        return wrapped
+
+    monkeypatch.setattr(ops, "blockwise_causal_attention",
+                        spy(ops.blockwise_causal_attention))
+    monkeypatch.setattr(ops, "blockwise_causal_attention_chunked",
+                        spy(ops.blockwise_causal_attention_chunked))
+    # unique S so the jit cache can't serve a pre-spy trace
+    c, r = 16, 4
+    case = _bca_grad_case(1, 2, 1, 80, 8, c, r, jnp.float32, (c, r))
+    _bca_grads(*case, c, r, "fused")
+    assert calls == []
+    _bca_grads(*case, c, r, "reference")
+    assert calls != []
+
+
+def test_blockwise_causal_bwd_check_grads():
+    """check_grads smoke: first-order numerical validation of the fused
+    backward, and second-order of the pure-jnp oracle it is tested against.
+    (Second-order THROUGH the Pallas kernels is unavailable in this
+    toolchain — pallas_call's jvp rule cannot re-trace `pl.program_id`
+    outside a grid context — a pre-existing limit of the fused forward,
+    unchanged by the fused backward.)"""
+    from jax.test_util import check_grads
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (1, 16, 2, 4))
+    k = jax.random.normal(ks[1], (1, 16, 1, 4))
+    v = jax.random.normal(ks[2], (1, 16, 1, 4))
+    E = jax.random.normal(ks[3], (8, 2)) * 0.3
+    F = jax.random.normal(ks[4], (8, 2)) * 0.3
+    fused = lambda *a: ops.fused_blockwise_causal_attention(
+        *a, block_size=8, block_slots=2, scale=0.5)
+    check_grads(fused, (q, k, v, E, F), order=1, modes=["rev"],
+                atol=1e-2, rtol=1e-2)
+    oracle = lambda *a: blockwise_causal_attention(*a, block_size=8,
+                                                   scale=0.5)
+    check_grads(oracle, (q, k, v, E, F), order=2, modes=["rev"],
+                atol=1e-2, rtol=1e-2)
