@@ -80,6 +80,15 @@ def bench_json_summary(out=None):
                    f"backward {rec['step_ms_fused']}ms vs "
                    f"reference-recompute {rec['step_ms_reference']}ms "
                    f"({rec['speedup_fused_over_reference']}x)")
+            mrec = rec.get("mesh")
+            if mrec:
+                print_(f"  * sharded plan ({mrec['spec']}, "
+                       f"{mrec['devices']} forced host devices, "
+                       f"S={mrec['shape'].get('seq')}): "
+                       f"{mrec['step_ms_sharded']}ms sharded vs "
+                       f"{mrec['step_ms_single_shard']}ms single-shard "
+                       f"({mrec['sharded_over_single']}x on this CPU "
+                       f"container; meaningful scaling needs real chips)")
         else:
             scalars = {k: v for k, v in rec.items()
                        if not isinstance(v, (dict, list))}

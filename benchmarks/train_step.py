@@ -11,27 +11,85 @@ production step) for both backward implementations on a linformer_causal
 config whose compressed width nb·r is large enough that the recompute
 matters.
 
+With ``--mesh tp=2`` (or ``tp=2,sp=2``) the same fused step additionally
+runs SHARDED through the attention execution plan (parallel/plan.py:
+head-parallel fused kernels inside shard_map, per-shard E/F) on a forced
+8-host-device mesh, recording sharded-vs-single-shard step time under the
+``mesh`` key of BENCH_train_step.json. On this CPU container the forced
+host devices share 2 cores, so the sharded wall time measures plan/dispatch
+overhead, not speedup — the number that matters on real chips is the
+per-device memory and step-time scaling the plan unlocks.
+
 Emits the standard ``name,us_per_call,derived`` CSV lines (us_per_call =
 microseconds per train step) and records BENCH_train_step.json via
-`common.write_bench_json`.
+`common.write_bench_json` (merging, so single-device and mesh legs can be
+recorded by separate runs).
 
-    PYTHONPATH=src python -m benchmarks.train_step [--smoke]
+    PYTHONPATH=src python -m benchmarks.train_step [--smoke] [--mesh tp=2]
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+
+
+def _parse_mesh_arg(argv):
+    if "--mesh" in argv:
+        i = argv.index("--mesh")
+        if i + 1 < len(argv):
+            return argv[i + 1]
+        raise SystemExit("--mesh needs a spec, e.g. --mesh tp=2")
+    return None
+
+
+# The device count is locked at first jax import, so the forced-host-device
+# flag must be set before anything below pulls jax in.
+_MESH_SPEC = _parse_mesh_arg(sys.argv[1:]) if __name__ == "__main__" else None
+if _MESH_SPEC and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import REPO_ROOT, emit, write_bench_json
 from repro.configs.base import (AttentionConfig, LinformerConfig, ModelConfig,
                                 OptimizerConfig)
 from repro.models import model as M
 from repro.optim import adamw_init
 from repro.train.trainer import make_train_step
+
+
+def _mesh_shards(spec: str):
+    """'tp=2' / 'tp=2,sp=2' -> (model_shards, seq_shards)."""
+    tp, sp = 1, 1
+    for part in spec.split(","):
+        key, _, val = part.partition("=")
+        if key == "tp":
+            tp = int(val)
+        elif key == "sp":
+            sp = int(val)
+        else:
+            raise SystemExit(f"unknown mesh axis {key!r} (use tp=/sp=)")
+    return tp, sp
+
+
+def _merge_bench_json(payload: dict) -> None:
+    """Merge into BENCH_train_step.json so the --mesh leg and the default
+    fused-vs-reference leg don't clobber each other's records."""
+    path = os.path.join(REPO_ROOT, "BENCH_train_step.json")
+    rec = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+    rec.update(payload)
+    write_bench_json("train_step", rec)
 
 
 def _cfg(backward_impl: str, *, seq: int, block_size: int,
@@ -57,9 +115,13 @@ def _cfg(backward_impl: str, *, seq: int, block_size: int,
 
 
 def _time_step(backward_impl: str, *, seq: int, block_size: int,
-               block_slots: int, batch_size: int, iters: int) -> float:
+               block_slots: int, batch_size: int, iters: int,
+               ctx=None) -> float:
     """Median seconds of the jit'd train step (first call = compile+warmup,
-    excluded). No donation so the same buffers are re-fed every iteration."""
+    excluded). No donation so the same buffers are re-fed every iteration.
+    With `ctx` the step runs on the mesh, params laid out per the sharding
+    rules and attention through the plan's shard_map."""
+    import contextlib
     cfg = _cfg(backward_impl, seq=seq, block_size=block_size,
                block_slots=block_slots)
     opt_cfg = OptimizerConfig()
@@ -69,13 +131,22 @@ def _time_step(backward_impl: str, *, seq: int, block_size: int,
         0, cfg.vocab_size, (batch_size, seq)).astype(np.int32)
     batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks),
              "loss_mask": jnp.ones((batch_size, seq), jnp.int32)}
-    step = jax.jit(make_train_step(cfg, opt_cfg))
-    jax.block_until_ready(step(params, opt_state, batch))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
+    if ctx is None:
+        step = jax.jit(make_train_step(cfg, opt_cfg))
+        scope = contextlib.nullcontext()
+    else:
+        from repro.parallel.sharding import param_shardings
+        step = jax.jit(make_train_step(cfg, opt_cfg, ctx=ctx),
+                       in_shardings=(param_shardings(params, ctx),
+                                     None, None))
+        scope = ctx.mesh
+    with scope:
         jax.block_until_ready(step(params, opt_state, batch))
-        times.append(time.perf_counter() - t0)
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(params, opt_state, batch))
+            times.append(time.perf_counter() - t0)
     return float(np.median(times))
 
 
@@ -98,7 +169,7 @@ def run(quick: bool = True):
     speedup = results["reference"] / results["fused"]
     emit(f"train_step/speedup/s{seq}", results["fused"] * 1e6,
          f"fused_over_reference={speedup:.2f}x")
-    write_bench_json("train_step", {
+    _merge_bench_json({
         "mode": "quick" if quick else "full",
         "shape": {"seq": seq, "block_size": block_size,
                   "block_slots": block_slots, "batch": batch_size,
@@ -110,5 +181,44 @@ def run(quick: bool = True):
     return results
 
 
+def run_mesh(spec: str, quick: bool = True):
+    """Fused train step sharded through the attention plan vs the same step
+    single-shard, on a forced-8-host-device mesh. The manual region shards
+    whatever the spec names (tp=2 → heads only; the leftover data axis is
+    wider than the batch, which then rides replicated inside the region)."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.parallel.sharding import ParallelCtx
+    tp, sp = _mesh_shards(spec)
+    if quick:
+        seq, block_size, block_slots, batch_size, iters = 512, 64, 16, 2, 3
+    else:
+        seq, block_size, block_slots, batch_size, iters = 2048, 64, 32, 2, 3
+    single = _time_step("fused", seq=seq, block_size=block_size,
+                        block_slots=block_slots, batch_size=batch_size,
+                        iters=iters)
+    mesh = make_local_mesh(model_shards=tp, seq_shards=sp)
+    ctx = ParallelCtx(mesh=mesh, fsdp="none")
+    sharded = _time_step("fused", seq=seq, block_size=block_size,
+                         block_slots=block_slots, batch_size=batch_size,
+                         iters=iters, ctx=ctx)
+    emit(f"train_step/mesh_{spec}/s{seq}", sharded * 1e6,
+         f"single_shard_ms={single * 1e3:.1f}")
+    _merge_bench_json({
+        "mesh": {
+            "spec": spec, "devices": len(jax.devices()),
+            "mode": "quick" if quick else "full",
+            "shape": {"seq": seq, "block_size": block_size,
+                      "block_slots": block_slots, "batch": batch_size},
+            "step_ms_sharded": round(sharded * 1e3, 1),
+            "step_ms_single_shard": round(single * 1e3, 1),
+            "sharded_over_single": round(single / sharded, 2),
+        },
+    })
+    return {"single": single, "sharded": sharded}
+
+
 if __name__ == "__main__":
-    run(quick="--smoke" in sys.argv[1:])
+    if _MESH_SPEC:
+        run_mesh(_MESH_SPEC, quick="--smoke" in sys.argv[1:])
+    else:
+        run(quick="--smoke" in sys.argv[1:])

@@ -8,6 +8,10 @@
 #      recording both in BENCH_serving.json (the perf trajectory)
 #   5. the train-step benchmark (--smoke): fused Pallas backward vs
 #      reference-recompute, recording BENCH_train_step.json
+#   6. the forced-8-device leg: the attention-plan parity suite (fused
+#      kernels under shard_map on tp/sp/tp×sp meshes == single-device ==
+#      reference) and the sharded train-step benchmark (--mesh tp=2,
+#      recorded under the "mesh" key of BENCH_train_step.json)
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -28,5 +32,11 @@ python -m benchmarks.serving_throughput --smoke
 
 echo "== smoke benchmark: train_step (fused vs reference backward) =="
 python -m benchmarks.train_step --smoke
+
+echo "== forced-8-device smoke: attention-plan parity suite =="
+python -m pytest -q tests/test_attention_plan.py
+
+echo "== forced-8-device smoke benchmark: train_step --mesh tp=2 =="
+python -m benchmarks.train_step --smoke --mesh tp=2
 
 echo "== check.sh: all gates passed =="

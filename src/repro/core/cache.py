@@ -92,7 +92,7 @@ def compressed_decode_attention(
     t: jax.Array,             # () or (B,) int32 — tokens already cached per row
     *,
     scale: Optional[float] = None,
-    backend: str = "reference",
+    plan=None,                # AttentionPlan | backend string | None
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode step of blockwise-causal Linformer attention.
 
@@ -103,20 +103,21 @@ def compressed_decode_attention(
     A scalar t broadcasts to all rows (the legacy shared-position form).
     Returns (out (B,1,H,Dh), updated per-layer cache).
 
-    backend="fused" routes the attention math through the Pallas decode
-    kernel (kernels/ops.fused_decode_attention): the GQA group axis is folded
-    into the kernel's query axis — K/V are never repeated — the raw and
-    compressed caches stay two pinned operands (no per-step HBM concatenate)
-    and slot validity is a per-row additive score bias. Cache bookkeeping is
-    identical either way.
+    The attention math itself dispatches through `plan`
+    (parallel/plan.py AttentionPlan; a bare backend string resolves to a
+    single-device plan): the fused plan routes through the Pallas decode
+    kernel — GQA group axis folded into the kernel's query axis, raw +
+    compressed caches as two pinned operands (per-shard slots under tensor
+    parallelism), slot validity as per-row additive score biases. Cache
+    bookkeeping here is identical for every plan.
     """
+    from repro.parallel.plan import as_plan
+    plan = as_plan(plan)
     raw_k, raw_v = layer_cache["raw_k"], layer_cache["raw_v"]
     comp_k, comp_v = layer_cache["comp_k"], layer_cache["comp_v"]
     B, c, Hkv, Dh = raw_k.shape
     M = comp_k.shape[1]
     r = E.shape[-1]
-    H = q_t.shape[2]
-    G = H // Hkv
     scale_ = scale if scale is not None else Dh ** -0.5
 
     t = rowwise_t(t, B)
@@ -128,29 +129,8 @@ def compressed_decode_attention(
 
     loc_ok = jnp.arange(c)[None, :] <= pos[:, None]         # (B, c)
     glob_ok = jnp.arange(M)[None, :] < (blk * r)[:, None]   # (B, M)
-    if backend == "fused":
-        from repro.kernels import ops as kernel_ops
-        bias_loc = jnp.where(loc_ok, 0.0, NEG_INF).astype(jnp.float32)
-        bias_glob = jnp.where(glob_ok, 0.0, NEG_INF).astype(jnp.float32)
-        out = kernel_ops.fused_decode_attention(
-            q_t, raw_k, raw_v, comp_k, comp_v, bias_loc, bias_glob,
-            scale=scale_)
-    else:
-        qg = q_t.reshape(B, Hkv, G, Dh)
-        # local scores over the raw ring buffer
-        s_loc = jnp.einsum("bhgd,bkhd->bhgk", qg,
-                           raw_k).astype(jnp.float32) * scale_
-        s_loc = jnp.where(loc_ok[:, None, None, :], s_loc, NEG_INF)
-        # global scores over compressed slots of completed previous blocks
-        s_glob = jnp.einsum("bhgd,bmhd->bhgm", qg,
-                            comp_k).astype(jnp.float32) * scale_
-        s_glob = jnp.where(glob_ok[:, None, None, :], s_glob, NEG_INF)
-
-        s = jnp.concatenate([s_loc, s_glob], axis=-1)
-        p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
-        out = jnp.einsum("bhgk,bkhd->bhgd", p[..., :c], raw_v)
-        out = out + jnp.einsum("bhgm,bmhd->bhgd", p[..., c:], comp_v)
-        out = out.reshape(B, 1, H, Dh)
+    out = plan.decode_attention(q_t, raw_k, raw_v, comp_k, comp_v,
+                                loc_ok, glob_ok, scale=scale_)
 
     # fold a row's block into its compressed slots when it completes
     # (pos[b] == c-1). Compute unconditionally (O(c·r·Dh·Hkv), tiny) and
@@ -181,7 +161,7 @@ def compressed_prefill_chunk(
     t0: jax.Array,            # (B,) int32 — row's current length, multiple of c
     *,
     scale: Optional[float] = None,
-    backend: str = "reference",
+    plan=None,                # AttentionPlan | backend string | None
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One chunked-prefill step of blockwise-causal Linformer attention.
 
@@ -208,6 +188,8 @@ def compressed_prefill_chunk(
 
     Returns (out (B, P, H, Dh), updated per-layer cache).
     """
+    from repro.parallel.plan import as_plan
+    plan = as_plan(plan)
     raw_k, raw_v = layer_cache["raw_k"], layer_cache["raw_v"]
     comp_k, comp_v = layer_cache["comp_k"], layer_cache["comp_v"]
     B, P, Hkv, Dh = k.shape
@@ -229,16 +211,9 @@ def compressed_prefill_chunk(
                          .astype(comp_v.dtype), slot0)
 
     start_blocks = t0 // c
-    if backend == "fused":
-        from repro.kernels import ops as kernel_ops
-        out = kernel_ops.fused_chunk_prefill_attention(
-            q, k, v, comp_k, comp_v, start_blocks,
-            block_size=c, block_slots=r, scale=scale_)
-    else:
-        from repro.core.causal import blockwise_causal_prefix_attention
-        out = blockwise_causal_prefix_attention(
-            q, k, v, comp_k, comp_v, start_blocks,
-            block_size=c, block_slots=r, scale=scale_)
+    out = plan.chunk_prefill_attention(
+        q, k, v, comp_k, comp_v, start_blocks,
+        block_size=c, block_slots=r, scale=scale_)
     return out, {"raw_k": raw_k, "raw_v": raw_v,
                  "comp_k": comp_k, "comp_v": comp_v}
 

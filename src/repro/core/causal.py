@@ -181,6 +181,43 @@ def blockwise_causal_prefix_attention(
     return jnp.moveaxis(outs, 0, 1).reshape(B, P, H, Dh)
 
 
+def masked_decode_attention(
+    q_t: jax.Array,           # (B, 1, H, Dh)
+    raw_k: jax.Array,         # (B, c, Hkv, Dh) — raw ring buffer
+    raw_v: jax.Array,
+    comp_k: jax.Array,        # (B, M, Hkv, Dh) — compressed slots
+    comp_v: jax.Array,
+    loc_ok: jax.Array,        # (B, c) bool — attendable ring positions
+    glob_ok: jax.Array,       # (B, M) bool — attendable compressed slots
+    *,
+    scale: float,
+) -> jax.Array:
+    """Reference single-token decode attention over [raw ring | compressed
+    slots] with per-row validity masks — the pure-jnp einsum twin of the
+    fused decode kernel (which receives the same masks as additive biases).
+    Pure attention math: cache bookkeeping (ring writes, block folds) lives
+    in core/cache.py; backend dispatch lives in parallel/plan.py."""
+    B, c, Hkv, Dh = raw_k.shape
+    M = comp_k.shape[1]
+    H = q_t.shape[2]
+    G = H // Hkv
+    qg = q_t.reshape(B, Hkv, G, Dh)
+    # local scores over the raw ring buffer
+    s_loc = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                       raw_k).astype(jnp.float32) * scale
+    s_loc = jnp.where(loc_ok[:, None, None, :], s_loc, NEG_INF)
+    # global scores over compressed slots of completed previous blocks
+    s_glob = jnp.einsum("bhgd,bmhd->bhgm", qg,
+                        comp_k).astype(jnp.float32) * scale
+    s_glob = jnp.where(glob_ok[:, None, None, :], s_glob, NEG_INF)
+
+    s = jnp.concatenate([s_loc, s_glob], axis=-1)
+    p = jax.nn.softmax(s, axis=-1).astype(q_t.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p[..., :c], raw_v)
+    out = out + jnp.einsum("bhgm,bmhd->bhgd", p[..., c:], comp_v)
+    return out.reshape(B, 1, H, Dh)
+
+
 def blockwise_causal_attention_chunked(
     q: jax.Array,
     k: jax.Array,

@@ -107,48 +107,33 @@ def _kernel_res(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref,
 
 def _prefix_kernel(q_ref, kl_ref, vl_ref, ck_ref, cv_ref, nb0_ref, out_ref, *,
                    scale: float, r: int):
-    """Chunk-prefill variant of `_kernel`: the compressed operand is the
-    SLOT-RESIDENT cache buffer (full M_total = (max_seq/c)·r slots, pinned)
-    and the visibility cut shifts by the row's start block nb0 — grid block
-    n of the chunk is absolute block nb0 + n, so it sees slots of blocks
-    < nb0 + n. nb0 arrives as a per-row (1, 1) int32 block (SMEM-friendly
-    scalar layout; interpret mode reads it directly)."""
+    """Chunk-prefill/sequence-parallel variant of `_kernel`: the compressed
+    operand is a FULL slot buffer (the slot-resident cache, or the gathered
+    sequence-parallel prefix — pinned either way) and the visibility cut
+    shifts by the row's start block nb0 — grid block n of the chunk is
+    absolute block nb0 + n, so it sees slots of blocks < nb0 + n. nb0
+    arrives as a per-row (1, 1) int32 block (SMEM-friendly scalar layout;
+    interpret mode reads it directly). Shares `_attend_block` with the
+    offset-zero training kernel so the two forms can never diverge."""
     n = pl.program_id(1)
     nb0 = nb0_ref[0, 0]
-    q = q_ref[0]                                    # (c, Dh)
-    kl = kl_ref[0]
-    vl = vl_ref[0]
-    ck = ck_ref[0]                                  # (M, Dh)
-    cv = cv_ref[0]
-    c = q.shape[0]
-    M = ck.shape[0]
-
-    s_loc = jax.lax.dot_general(
-        q, kl, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale          # (c, c)
-    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
-    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
-    s_loc = jnp.where(ti >= si, s_loc, NEG_INF)
-
-    s_glob = jax.lax.dot_general(
-        q, ck, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale          # (c, M)
-    slot_blk = jax.lax.broadcasted_iota(jnp.int32, (c, M), 1) // r
-    s_glob = jnp.where(slot_blk < n + nb0, s_glob, NEG_INF)
-
-    m = jnp.maximum(jnp.max(s_loc, -1, keepdims=True),
-                    jnp.max(s_glob, -1, keepdims=True))
-    p_loc = jnp.exp(s_loc - m)
-    p_glob = jnp.exp(s_glob - m)
-    denom = jnp.sum(p_loc, -1, keepdims=True) + jnp.sum(p_glob, -1,
-                                                        keepdims=True)
-    out = jax.lax.dot_general(
-        (p_loc / denom).astype(vl.dtype), vl, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    out += jax.lax.dot_general(
-        (p_glob / denom).astype(cv.dtype), cv, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    out, _, _ = _attend_block(q_ref[0], kl_ref[0], vl_ref[0], ck_ref[0],
+                              cv_ref[0], n + nb0, scale, r)
     out_ref[0] = out.astype(out_ref.dtype)
+
+
+def _prefix_kernel_res(q_ref, kl_ref, vl_ref, ck_ref, cv_ref, nb0_ref,
+                       out_ref, m_ref, denom_ref, *, scale: float, r: int):
+    """`_prefix_kernel` that also emits the softmax residuals (per-row max
+    and denominator, fp32) — what makes the prefix form trainable: the fused
+    backward recomputes the joint probabilities from them."""
+    n = pl.program_id(1)
+    nb0 = nb0_ref[0, 0]
+    out, m, denom = _attend_block(q_ref[0], kl_ref[0], vl_ref[0], ck_ref[0],
+                                  cv_ref[0], n + nb0, scale, r)
+    out_ref[0] = out.astype(out_ref.dtype)
+    m_ref[0] = m[:, 0]
+    denom_ref[0] = denom[:, 0]
 
 
 def blockwise_causal_prefix_attn(
@@ -163,15 +148,22 @@ def blockwise_causal_prefix_attn(
     block_slots: int,
     scale: float,
     interpret: bool = False,
-) -> jax.Array:
-    """Blockwise-causal attention for a prefill chunk at a nonzero per-row
-    start offset, against the slot-resident compressed cache.
+    return_residuals: bool = False,
+):
+    """Blockwise-causal attention for a query chunk at a nonzero per-row
+    start offset, against a full compressed slot buffer (the slot-resident
+    cache during chunked prefill, or the all-gathered prefix under sequence
+    parallelism).
 
     Same grid/GQA routing as :func:`blockwise_causal_attn`, but the pinned
-    compressed operand is the cache's FULL (M_total, Dh) slot buffer and the
+    compressed operand is the FULL (M_total, Dh) slot buffer and the
     causality cut is shifted per row by `start_blocks` (passed as a (B, 1)
     int32 scalar block). M_total = (max_seq/c)·r must fit in VMEM — the same
-    compression budget the decode kernel already pins.
+    compression budget the decode kernel already pins. With
+    ``return_residuals=True`` also emits the joint softmax's per-row
+    (m, denom), each (B, H, P) fp32 — the residuals
+    :func:`blockwise_causal_attn_bwd` consumes (with the same
+    `start_blocks`) to run the fused backward of this offset form.
     """
     B, H, P, Dh = q.shape
     Hkv = k.shape[1]
@@ -191,17 +183,37 @@ def blockwise_causal_prefix_attn(
     def kv_row(bh):
         return (bh // H) * Hkv + (bh % H) // G
 
+    in_specs = [
+        pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+        pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+        pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+        pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+        pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+        pl.BlockSpec((1, 1), lambda bh, n: (bh // H, 0)),
+    ]
+    if return_residuals:
+        out, m, denom = pl.pallas_call(
+            functools.partial(_prefix_kernel_res, scale=scale, r=block_slots),
+            grid=(B * H, nb),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+                pl.BlockSpec((1, c), lambda bh, n: (bh, n)),
+                pl.BlockSpec((1, c), lambda bh, n: (bh, n)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((B * H, P, Dh), q.dtype),
+                jax.ShapeDtypeStruct((B * H, P), jnp.float32),
+                jax.ShapeDtypeStruct((B * H, P), jnp.float32),
+            ],
+            interpret=interpret,
+        )(q3, k3, v3, ck3, cv3, nb0)
+        return (out.reshape(B, H, P, Dh), m.reshape(B, H, P),
+                denom.reshape(B, H, P))
     out = pl.pallas_call(
         functools.partial(_prefix_kernel, scale=scale, r=block_slots),
         grid=(B * H, nb),
-        in_specs=[
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
-            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
-            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
-            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
-            pl.BlockSpec((1, 1), lambda bh, n: (bh // H, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, P, Dh), q.dtype),
         interpret=interpret,
@@ -286,7 +298,7 @@ def blockwise_causal_attn(
 
 
 def _bwd_kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, m_ref, d_ref,
-                do_ref, dq_ref, dkl_ref, dvl_ref, dkb_ref, dvb_ref,
+                do_ref, nb0_ref, dq_ref, dkl_ref, dvl_ref, dkb_ref, dvb_ref,
                 dkl_acc, dvl_acc, dkb_acc, dvb_acc, *,
                 scale: float, r: int, nb: int, G: int):
     """One grid step = one (kv head, query block, group member): recompute the
@@ -295,9 +307,13 @@ def _bwd_kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, m_ref, d_ref,
     so every contributor to a kv-row accumulator runs on consecutive steps:
     dk_loc/dv_loc accumulate over the G group members of query block n, and
     dk̄/dv̄ over all nb·G steps of the kv row — fp32 scratch, emitted on each
-    accumulator's last contributing step."""
+    accumulator's last contributing step. nb0 shifts the visibility cut for
+    the offset (prefix / sequence-parallel) form — zero in the offset-free
+    training form; slots at or beyond the shifted cut recompute to P = 0 and
+    contribute nothing, so the full-buffer accumulators stay exact."""
     n = pl.program_id(1)
     g = pl.program_id(2)
+    nb0 = nb0_ref[0, 0]
 
     @pl.when(jnp.logical_and(n == 0, g == 0))
     def _init_glob():
@@ -320,7 +336,7 @@ def _bwd_kernel(q_ref, kl_ref, vl_ref, kbar_ref, vbar_ref, m_ref, d_ref,
 
     # native-dtype score recompute — bit-identical to the forward's scores,
     # so p = exp(s − m)/denom reproduces the forward's exact probabilities
-    s_loc, s_glob = _joint_scores(q, kl, kbar, n, scale, r)
+    s_loc, s_glob = _joint_scores(q, kl, kbar, n + nb0, scale, r)
     q32 = q.astype(jnp.float32)
     kl32 = kl.astype(jnp.float32)
     kbar32 = kbar.astype(jnp.float32)
@@ -387,8 +403,10 @@ def blockwise_causal_attn_bwd(
     block_slots: int,
     scale: float,
     interpret: bool = False,
+    start_blocks: jax.Array = None,   # (B,) int32 — offset (prefix) form
 ):
-    """Fused Pallas backward of :func:`blockwise_causal_attn`.
+    """Fused Pallas backward of :func:`blockwise_causal_attn` — and, with
+    `start_blocks`, of :func:`blockwise_causal_prefix_attn`.
 
     Returns ``(dq, dk_loc, dv_loc, dkbar, dvbar)`` — dq in q's dtype,
     everything else fp32 (the accumulation dtype): dk_loc/dv_loc are the
@@ -397,6 +415,13 @@ def blockwise_causal_attn_bwd(
     `compress_blocks` VJP to reach dk/dv/dE/dF. No (S × nb·r) global score
     tensor ever hits HBM — scores live one query block at a time, exactly
     like the forward.
+
+    With ``start_blocks`` (the offset form) the query chunk starts at
+    per-row absolute block nb0[b] and kbar/vbar are a FULL slot buffer
+    (M ≥ (nb0 + S/c)·r): dk̄/dv̄ cover the whole buffer, with exact zeros on
+    slots this chunk's queries never see — under sequence parallelism those
+    partial buffers are what the all-gather transpose psum-reduces across
+    shards.
     """
     B, H, S, Dh = q.shape
     Hkv = k.shape[1]
@@ -406,7 +431,10 @@ def blockwise_causal_attn_bwd(
     assert S % c == 0
     nb = S // c
     M = kbar.shape[2]
-    assert M == nb * block_slots, (M, nb, block_slots)
+    if start_blocks is None:
+        assert M == nb * block_slots, (M, nb, block_slots)
+        start_blocks = jnp.zeros((B,), jnp.int32)
+    nb0 = jnp.asarray(start_blocks, jnp.int32).reshape(B, 1)
     q3 = q.reshape(B * H, S, Dh)
     k3 = k.reshape(B * Hkv, S, Dh)
     v3 = v.reshape(B * Hkv, S, Dh)
@@ -435,6 +463,7 @@ def blockwise_causal_attn_bwd(
             pl.BlockSpec((1, c), lambda bkv, n, g: (q_row(bkv, g), n)),
             pl.BlockSpec((1, c), lambda bkv, n, g: (q_row(bkv, g), n)),
             pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (q_row(bkv, g), n, 0)),
+            pl.BlockSpec((1, 1), lambda bkv, n, g: (bkv // Hkv, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, c, Dh), lambda bkv, n, g: (q_row(bkv, g), n, 0)),
@@ -457,7 +486,7 @@ def blockwise_causal_attn_bwd(
             pltpu.VMEM((M, Dh), jnp.float32),
         ],
         interpret=interpret,
-    )(q3, k3, v3, kb3, vb3, m3, d3, do3)
+    )(q3, k3, v3, kb3, vb3, m3, d3, do3, nb0)
     return (dq.reshape(B, H, S, Dh), dkl.reshape(B, Hkv, S, Dh),
             dvl.reshape(B, Hkv, S, Dh), dkb.reshape(B, Hkv, M, Dh),
             dvb.reshape(B, Hkv, M, Dh))

@@ -1,0 +1,97 @@
+"""Shared kernel-wrapper plumbing: layout moves, backend resolution, grid
+sizing and the VMEM fail-fast budgets.
+
+One home for the helpers both `kernels/ops.py` (the jit'd shard-local kernel
+wrappers) and `parallel/plan.py` (the mesh-aware execution plan) consume —
+previously private copies inside ops.py that the plan would have had to
+duplicate. Everything here is shape/string logic with no Pallas dependency.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("reference", "fused")
+BACKWARD_IMPLS = ("fused", "reference")
+
+# VMEM budgets for operands the kernels pin whole per grid step
+# (docs/kernels.md "Known limits"). Exceeding them used to compile anyway and
+# blow VMEM (or silently thrash) at runtime — now the wrappers fail fast.
+MAX_EXACT_K = 512          # exact form: compressed length of k̄/v̄
+MAX_PINNED_SLOTS = 4096    # causal/decode/chunk forms: M = (max_seq/c)·r
+
+# Grids tile the sequence into blocks that must divide it evenly; blocks
+# below this floor degrade the grid to near-per-row steps (S=509 prime would
+# mean a 509-step grid per (batch, head) — pathological in interpret mode and
+# a compile-size bomb on TPU), so `divisor_block` refuses them.
+MIN_DIVISOR_BLOCK = 8
+
+
+def auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve an `AttentionConfig.backend` knob to a concrete backend.
+
+    "auto" per platform: TPU -> fused (Mosaic-compiled); CPU -> fused in
+    interpret mode (the kernel logic is the validated default path on this
+    container); any other platform (e.g. GPU, which has no Mosaic lowering
+    and where interpret mode would be pathologically slow) -> reference.
+    """
+    if backend in BACKENDS:
+        return backend
+    if backend != "auto":
+        raise ValueError(
+            f"unknown attention backend {backend!r}; "
+            f"expected 'auto' or one of {BACKENDS}")
+    return "fused" if jax.default_backend() in ("tpu", "cpu") else "reference"
+
+
+def resolve_backward_impl(backward_impl: str) -> str:
+    if backward_impl not in BACKWARD_IMPLS:
+        raise ValueError(
+            f"unknown backward_impl {backward_impl!r}; "
+            f"expected one of {BACKWARD_IMPLS}")
+    return backward_impl
+
+
+def divisor_block(size: int, preferred: int) -> int:
+    """Largest block ≤ preferred that divides `size` (kernels tile evenly).
+
+    Fails fast instead of silently degrading: a sequence length whose largest
+    usable divisor is tiny (prime/odd S) would otherwise quietly emit a
+    degenerate near-per-row grid. A sub-floor block is only refused when it
+    also means a blown-up grid (> MIN_DIVISOR_BLOCK steps) — tiny sequences
+    that fit in a handful of blocks are fine."""
+    b = max(1, min(preferred, size))
+    while size % b:
+        b -= 1
+    if b < MIN_DIVISOR_BLOCK and size // b > MIN_DIVISOR_BLOCK:
+        raise ValueError(
+            f"sequence length {size} has no block divisor in "
+            f"[{MIN_DIVISOR_BLOCK}, {preferred}] — the kernel grid would "
+            f"degrade to {b}-row blocks ({size // b} grid steps per "
+            f"(batch, head)). Pad or trim the sequence so it has a divisor "
+            f"≥ {MIN_DIVISOR_BLOCK} (any multiple of {MIN_DIVISOR_BLOCK} "
+            f"works), or use backend='reference' for this shape.")
+    return b
+
+
+def to_kernel_layout(x):         # (B,S,H,D) -> (B,H,S,D)
+    return jnp.moveaxis(x, 2, 1)
+
+
+def from_kernel_layout(x):
+    return jnp.moveaxis(x, 1, 2)
+
+
+def repeat_kv(x, H):             # (B,Hkv,K,D) -> (B,H,K,D)
+    Hkv = x.shape[1]
+    if Hkv == H:
+        return x
+    return jnp.repeat(x, H // Hkv, axis=1)

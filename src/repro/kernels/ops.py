@@ -37,13 +37,17 @@ compressed operands (cheap: K is small). The single-token decode wrapper
 query-sequence axis, so K/V are never repeated; the blockwise-causal
 wrappers route grouped query heads to their kv row via the grid index maps.
 
-Known limits (docs/kernels.md has the full list): the fused path is
-single-device (under a mesh, GSPMD partitions the reference einsums; the
-kernels run whole inside a shard); `fused_chunk_prefill_attention` and
-`fused_decode_attention` are inference-only (no VJP); pinned compressed
-operands must fit VMEM — fail-fast enforced here: K ≤ MAX_EXACT_K for the
-exact form, M = (max_seq/c)·r ≤ MAX_PINNED_SLOTS for the causal/decode/chunk
-forms; blockwise-causal forms need S % block_size == 0 (serving routes the
+Every wrapper here is SHARD-LOCAL: shapes are whatever one device holds, and
+the fail-fast checks below validate those local shapes. Whether a wrapper is
+called on full arrays (single device) or per-shard inside a `shard_map`
+manual region is decided in exactly one place — the mesh-aware
+`parallel/plan.py` AttentionPlan — never here and never at call sites.
+
+Known limits (docs/kernels.md has the full list): `fused_decode_attention`
+is inference-only (no VJP); pinned compressed operands must fit VMEM —
+fail-fast enforced here: K ≤ MAX_EXACT_K for the exact form,
+M = (max_seq/c)·r ≤ MAX_PINNED_SLOTS for the causal/decode/chunk forms;
+blockwise-causal forms need S % block_size == 0 (serving routes the
 remainder through the decode path).
 """
 from __future__ import annotations
@@ -58,85 +62,19 @@ from repro.kernels import blockwise_causal_attn as bca
 from repro.kernels import linformer_attn as la
 from repro.kernels import ref
 from repro.kernels import seq_projection as sp
+from repro.kernels.common import (BACKENDS, BACKWARD_IMPLS, MAX_EXACT_K,
+                                  MAX_PINNED_SLOTS, MIN_DIVISOR_BLOCK,
+                                  auto_interpret as _auto_interpret,
+                                  divisor_block as _divisor_block,
+                                  from_kernel_layout as _from_kernel_layout,
+                                  repeat_kv as _repeat_kv,
+                                  resolve_backend,
+                                  to_kernel_layout as _to_kernel_layout)
 from repro.core.causal import (CHUNKED_ATTENTION_MIN_SEQ,
                                blockwise_causal_attention,
                                blockwise_causal_attention_chunked,
+                               blockwise_causal_prefix_attention,
                                compress_blocks)
-
-BACKENDS = ("reference", "fused")
-BACKWARD_IMPLS = ("fused", "reference")
-
-# VMEM budgets for operands the kernels pin whole per grid step
-# (docs/kernels.md "Known limits"). Exceeding them used to compile anyway and
-# blow VMEM (or silently thrash) at runtime — now the wrappers fail fast.
-MAX_EXACT_K = 512          # exact form: compressed length of k̄/v̄
-MAX_PINNED_SLOTS = 4096    # causal/decode/chunk forms: M = (max_seq/c)·r
-
-# Grids tile the sequence into blocks that must divide it evenly; blocks
-# below this floor degrade the grid to near-per-row steps (S=509 prime would
-# mean a 509-step grid per (batch, head) — pathological in interpret mode and
-# a compile-size bomb on TPU), so `_divisor_block` refuses them.
-MIN_DIVISOR_BLOCK = 8
-
-
-def _auto_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
-
-
-def resolve_backend(backend: str = "auto") -> str:
-    """Resolve an `AttentionConfig.backend` knob to a concrete backend.
-
-    "auto" per platform: TPU -> fused (Mosaic-compiled); CPU -> fused in
-    interpret mode (the kernel logic is the validated default path on this
-    container); any other platform (e.g. GPU, which has no Mosaic lowering
-    and where interpret mode would be pathologically slow) -> reference.
-    """
-    if backend in BACKENDS:
-        return backend
-    if backend != "auto":
-        raise ValueError(
-            f"unknown attention backend {backend!r}; "
-            f"expected 'auto' or one of {BACKENDS}")
-    return "fused" if jax.default_backend() in ("tpu", "cpu") else "reference"
-
-
-def _divisor_block(size: int, preferred: int) -> int:
-    """Largest block ≤ preferred that divides `size` (kernels tile evenly).
-
-    Fails fast instead of silently degrading: a sequence length whose largest
-    usable divisor is tiny (prime/odd S) would otherwise quietly emit a
-    degenerate near-per-row grid. A sub-floor block is only refused when it
-    also means a blown-up grid (> MIN_DIVISOR_BLOCK steps) — tiny sequences
-    that fit in a handful of blocks are fine."""
-    b = max(1, min(preferred, size))
-    while size % b:
-        b -= 1
-    if b < MIN_DIVISOR_BLOCK and size // b > MIN_DIVISOR_BLOCK:
-        raise ValueError(
-            f"sequence length {size} has no block divisor in "
-            f"[{MIN_DIVISOR_BLOCK}, {preferred}] — the kernel grid would "
-            f"degrade to {b}-row blocks ({size // b} grid steps per "
-            f"(batch, head)). Pad or trim the sequence so it has a divisor "
-            f"≥ {MIN_DIVISOR_BLOCK} (any multiple of {MIN_DIVISOR_BLOCK} "
-            f"works), or use backend='reference' for this shape.")
-    return b
-
-
-def _to_kernel_layout(x):        # (B,S,H,D) -> (B,H,S,D)
-    return jnp.moveaxis(x, 2, 1)
-
-
-def _from_kernel_layout(x):
-    return jnp.moveaxis(x, 1, 2)
-
-
-def _repeat_kv(x, H):            # (B,Hkv,K,D) -> (B,H,K,D)
-    Hkv = x.shape[1]
-    if Hkv == H:
-        return x
-    return jnp.repeat(x, H // Hkv, axis=1)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -396,37 +334,116 @@ def fused_blockwise_causal_attention(
                                   backward_impl)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def _chunk_prefill_diff(q, k, v, comp_k, comp_v, nb0f, block_size,
+                        block_slots, scale, interpret, backward_impl):
+    """Differentiable prefix-form attention. The per-row start block rides
+    as an fp32 array (`nb0f`) purely so custom_vjp has an ordinary zero
+    cotangent to return for it — it is cast back to int32 before the kernel
+    sees it (the offset itself is of course not differentiable)."""
+    out = bca.blockwise_causal_prefix_attn(
+        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
+        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v),
+        nb0f.astype(jnp.int32), block_size=block_size,
+        block_slots=block_slots, scale=scale, interpret=interpret)
+    return _from_kernel_layout(out)
+
+
+def _cp_fwd(q, k, v, comp_k, comp_v, nb0f, block_size, block_slots, scale,
+            interpret, backward_impl):
+    if backward_impl == "reference":
+        out = _chunk_prefill_diff(q, k, v, comp_k, comp_v, nb0f, block_size,
+                                  block_slots, scale, interpret,
+                                  backward_impl)
+        return out, (q, k, v, comp_k, comp_v, nb0f, None, None)
+    out, m, denom = bca.blockwise_causal_prefix_attn(
+        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
+        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v),
+        nb0f.astype(jnp.int32), block_size=block_size,
+        block_slots=block_slots, scale=scale, interpret=interpret,
+        return_residuals=True)
+    return (_from_kernel_layout(out),
+            (q, k, v, comp_k, comp_v, nb0f, m, denom))
+
+
+def _cp_bwd(block_size, block_slots, scale, interpret, backward_impl, res,
+            do):
+    q, k, v, comp_k, comp_v, nb0f, m, denom = res
+    nb0 = nb0f.astype(jnp.int32)
+    if backward_impl == "reference":
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_, ck_, cv_: blockwise_causal_prefix_attention(
+                q_, k_, v_, ck_, cv_, nb0, block_size=block_size,
+                block_slots=block_slots, scale=scale),
+            q, k, v, comp_k, comp_v)
+        dq, dk, dv, dck, dcv = vjp(do)
+        return dq, dk, dv, dck, dcv, jnp.zeros_like(nb0f)
+    dq_k, dkl_k, dvl_k, dck_k, dcv_k = bca.blockwise_causal_attn_bwd(
+        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
+        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v), m, denom,
+        _to_kernel_layout(do), block_size=block_size,
+        block_slots=block_slots, scale=scale, interpret=interpret,
+        start_blocks=nb0)
+    # comp_k/comp_v are independent primal inputs here (a cache buffer, or
+    # the gathered sequence-parallel prefix): their cotangent is the raw
+    # full-buffer dk̄/dv̄ — exact zeros on slots this chunk never sees —
+    # and any chaining back into k/v (compress_blocks, all-gather) belongs
+    # to the caller's autodiff.
+    return (_from_kernel_layout(dq_k),
+            _from_kernel_layout(dkl_k).astype(k.dtype),
+            _from_kernel_layout(dvl_k).astype(v.dtype),
+            _from_kernel_layout(dck_k).astype(comp_k.dtype),
+            _from_kernel_layout(dcv_k).astype(comp_v.dtype),
+            jnp.zeros_like(nb0f))
+
+
+_chunk_prefill_diff.defvjp(_cp_fwd, _cp_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "block_size", "block_slots", "scale", "interpret"))
+    "block_size", "block_slots", "scale", "interpret", "backward_impl"))
 def fused_chunk_prefill_attention(
-    q: jax.Array,        # (B, P, H, Dh) — one prefill chunk, model layout
+    q: jax.Array,        # (B, P, H, Dh) — one query chunk, model layout
     k: jax.Array,        # (B, P, Hkv, Dh) — the chunk's own keys
     v: jax.Array,
-    comp_k: jax.Array,   # (B, M, Hkv, Dh) — slot-resident compressed cache
+    comp_k: jax.Array,   # (B, M, Hkv, Dh) — full compressed slot buffer
     comp_v: jax.Array,   #   with the chunk's own blocks already folded in
-    start_blocks: jax.Array,   # (B,) int32 — per-row absolute start block
+    start_blocks: jax.Array,   # (B,) int — per-row absolute start block
     *,
     block_size: int,
     block_slots: int,
     scale: float,
     interpret: Optional[bool] = None,
+    backward_impl: str = "fused",
 ) -> jax.Array:
-    """Blockwise-causal attention for a prefill chunk starting at a nonzero
-    per-row offset (the chunked-admission prefill path).
+    """Blockwise-causal attention for a query chunk starting at a nonzero
+    per-row offset — the chunked-admission prefill path, and (per-shard,
+    with the gathered compressed prefix as the slot buffer) the
+    sequence-parallel training form that `parallel/plan.py` runs inside
+    shard_map.
 
     Shapes/dtypes: model layout in and out — q (B, P, H, Dh) with
     P % block_size == 0; k/v carry native Hkv GQA heads (index-map routing,
-    no HBM repeat); comp_k/comp_v are the cache's FULL slot buffers
-    (M = (max_seq/block_size)·block_slots rows, cache dtype), pinned per grid
-    step like the decode kernel's compressed operand. Row b's query block j
-    attends [its own block, causally | compressed slots of absolute blocks
-    < start_blocks[b] + j] — `start_blocks` is traced (one compile serves
-    every offset), which is what makes fixed-size chunk compiles reusable
-    across a prompt and across rows of a batched admission round.
+    no HBM repeat); comp_k/comp_v are FULL slot buffers (the cache's
+    M = (max_seq/block_size)·block_slots rows, or the gathered (S/c)·r
+    prefix), pinned per grid step like the decode kernel's compressed
+    operand. Row b's query block j attends [its own block, causally |
+    compressed slots of absolute blocks < start_blocks[b] + j] —
+    `start_blocks` is traced (one compile serves every offset), which is
+    what makes fixed-size chunk compiles reusable across a prompt and
+    across rows of a batched admission round.
 
-    Inference-only: no custom VJP (the training path prefers
-    `fused_blockwise_causal_attention`, which starts at offset zero).
+    Trainable end to end since PR 5: `backward_impl="fused"` (default) runs
+    the offset-aware Pallas backward from saved (m, denom) residuals;
+    `"reference"` recomputes through the pure-jnp prefix reference VJP (the
+    parity oracle). Gradients flow to q/k/v AND to comp_k/comp_v (the
+    full-buffer dk̄/dv̄, exact zeros on invisible slots) — sequence
+    parallelism chains the latter through the all-gather transpose.
     """
+    if backward_impl not in BACKWARD_IMPLS:
+        raise ValueError(
+            f"unknown backward_impl {backward_impl!r}; "
+            f"expected one of {BACKWARD_IMPLS}")
     if q.shape[1] % block_size != 0:
         raise ValueError(
             f"P={q.shape[1]} must be a multiple of block_size={block_size}")
@@ -438,12 +455,10 @@ def fused_chunk_prefill_attention(
             f"grid step, which requires M ≤ {MAX_PINNED_SLOTS}. Raise "
             f"block_size, lower block_slots or max_seq, or use "
             f"backend='reference' for this cache shape.")
-    out = bca.blockwise_causal_prefix_attn(
-        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
-        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v), start_blocks,
-        block_size=block_size, block_slots=block_slots, scale=scale,
-        interpret=_auto_interpret(interpret))
-    return _from_kernel_layout(out)
+    nb0f = jnp.asarray(start_blocks).astype(jnp.float32)
+    return _chunk_prefill_diff(q, k, v, comp_k, comp_v, nb0f, block_size,
+                               block_slots, scale,
+                               _auto_interpret(interpret), backward_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))

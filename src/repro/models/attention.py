@@ -5,10 +5,14 @@ softmax baseline and the paper's Linformer forms.
 sharing mode is per-layer; the layerwise-shared E lives in the model's
 "shared" collection and is passed through `shared_lin`).
 
-Compute-backend dispatch: `cfg.backend` ("auto" | "reference" | "fused",
-resolved by kernels/ops.resolve_backend) selects between the pure-jnp einsum
-reference implementations and the fused Pallas kernels for both linformer
-kinds, in the full-sequence forward AND the single-token decode path.
+Compute dispatch: every Linformer form executes through an
+:class:`repro.parallel.plan.AttentionPlan` — resolved once per (config,
+mesh) and threaded in by the caller (models/transformer.py passes the plan
+for its ParallelCtx; a missing plan resolves the config single-device).
+The plan owns backend selection (`cfg.backend` "auto" | "reference" |
+"fused") AND, under a mesh, the shard_map specs that run the fused Pallas
+kernels per shard — this module never branches on backend strings or mesh
+presence.
 """
 from __future__ import annotations
 
@@ -21,8 +25,8 @@ from repro.configs.base import AttentionConfig
 from repro.core import cache as cache_lib
 from repro.core import causal as causal_lib
 from repro.core import linformer as lin_lib
-from repro.kernels import ops as kernel_ops
 from repro.models import layers as L
+from repro.parallel import plan as plan_lib
 
 NEG_INF = causal_lib.NEG_INF
 
@@ -87,28 +91,6 @@ def _resolve_ef(params: Dict, shared_lin: Optional[Dict],
     return lp["E"], lp.get("F", lp["E"])
 
 
-def _fused_exact_linformer(q: jax.Array, k: jax.Array, v: jax.Array,
-                           E: jax.Array, F: jax.Array,
-                           cfg: AttentionConfig) -> jax.Array:
-    """Exact (bidirectional) Linformer through the Pallas kernels.
-
-    The fused sequence-projection kernel handles the paper's default shared
-    linear E ∈ R^{S×K}; per-head or conv/pool projections compress via the
-    reference ops (cheap: output is K slots) with the attention still fused.
-    """
-    S, Dh = k.shape[1], q.shape[-1]
-    if cfg.linformer.projection == "linear" and E.ndim == 2:
-        Es = E[:S] if E.shape[0] != S else E
-        Fs = F[:S] if F.shape[0] != S else F
-        kbar = kernel_ops.fused_seq_projection(k, Es)
-        vbar = kernel_ops.fused_seq_projection(v, Fs)
-    else:
-        kbar, vbar = lin_lib.project_kv(k, v, E, F,
-                                        kind=cfg.linformer.projection)
-    return kernel_ops.fused_linformer_attention(q, kbar, vbar,
-                                                scale=Dh ** -0.5)
-
-
 def standard_attention(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
     scale: Optional[float] = None,
@@ -136,41 +118,32 @@ def apply_attention(
     positions: Optional[jax.Array] = None,
     chunked: bool = False,
     cache_entry_spec: Optional[Dict] = None,
+    plan: Optional[plan_lib.AttentionPlan] = None,
 ):
     """Full-sequence attention (training / prefill). x: (B, S, D).
 
     With `cache_entry_spec` = {"max_seq": int, "dtype": ...}, also returns
     this layer's decode-cache entry built from the SAME k/v (single-pass
-    prefill — no second forward)."""
+    prefill — no second forward). `plan` carries the resolved execution
+    plan; None resolves the config single-device."""
     B, S, _ = x.shape
-    backend = kernel_ops.resolve_backend(cfg.backend)
+    if plan is None:
+        plan = plan_lib.resolve_attention_plan(cfg)
     q, k, v = _qkv(params, x, cfg, positions)
     if cfg.kind == "standard":
         out = standard_attention(q, k, v, causal=cfg.causal)
     elif cfg.kind == "linformer":
         E, F = _resolve_ef(params, shared_lin, cfg)
-        if backend == "fused":
-            out = _fused_exact_linformer(q, k, v, E, F, cfg)
-        else:
-            out = lin_lib.exact_linformer_attention(
-                q, k, v, E, F, kind=cfg.linformer.projection)
+        out = plan.exact_attention(q, k, v, E, F,
+                                   projection=cfg.linformer.projection,
+                                   scale=cfg.head_dim ** -0.5)
     elif cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
-        if backend == "fused":
-            # the kernel streams query blocks itself in BOTH directions: the
-            # default fused backward never materializes global scores, and
-            # the backward_impl="reference" oracle switches to the chunked
-            # reference at long S inside ops._bca_bwd_reference — so
-            # `chunked` needs no handling here
-            out = kernel_ops.fused_blockwise_causal_attention(
-                q, k, v, E, F, block_size=cfg.linformer.block_size,
-                block_slots=cfg.linformer.block_slots,
-                scale=cfg.head_dim ** -0.5,
-                backward_impl=cfg.backward_impl)
-        else:
-            fn = (causal_lib.blockwise_causal_attention_chunked if chunked
-                  else causal_lib.blockwise_causal_attention)
-            out = fn(q, k, v, E, F, block_size=cfg.linformer.block_size)
+        out = plan.causal_attention(q, k, v, E, F,
+                                    block_size=cfg.linformer.block_size,
+                                    block_slots=cfg.linformer.block_slots,
+                                    scale=cfg.head_dim ** -0.5,
+                                    chunked=chunked)
     else:
         raise ValueError(f"unknown attention kind {cfg.kind!r}")
     out = out.reshape(B, S, -1) @ params["wo"]
@@ -221,16 +194,18 @@ def apply_attention_decode(
     cfg: AttentionConfig,
     *,
     shared_lin: Optional[Dict] = None,
+    plan: Optional[plan_lib.AttentionPlan] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode step against the layer's cache. A (B,) t gives each
     row its own position (rope + cache write + mask all per row)."""
+    if plan is None:
+        plan = plan_lib.resolve_attention_plan(cfg)
     positions = t[None] if t.ndim == 0 else t[:, None]      # (1,) or (B, 1)
     q, k, v = _qkv(params, x_t, cfg, positions=positions)
     if cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
         out, new_cache = cache_lib.compressed_decode_attention(
-            q, k, v, layer_cache, E, F, t,
-            backend=kernel_ops.resolve_backend(cfg.backend))
+            q, k, v, layer_cache, E, F, t, plan=plan)
     elif cfg.kind == "standard":
         out, new_cache = cache_lib.full_decode_attention(
             q, k, v, layer_cache, t)
@@ -251,20 +226,22 @@ def apply_attention_prefill_chunk(
     *,
     shared_lin: Optional[Dict] = None,
     positions: Optional[jax.Array] = None,   # (B, P) absolute positions
+    plan: Optional[plan_lib.AttentionPlan] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Chunked-prefill attention at a per-row offset, against the layer's
     slot-resident cache: row b's chunk covers absolute positions
     [t0[b], t0[b] + P). For linformer_causal t0 and P must be multiples of
     the block size (chunk boundaries are block-fold boundaries); standard
     attention takes any offset. Returns (out (B, P, D'), updated cache)."""
+    if plan is None:
+        plan = plan_lib.resolve_attention_plan(cfg)
     if positions is None:
         positions = t0[:, None] + jnp.arange(x.shape[1])[None, :]
     q, k, v = _qkv(params, x, cfg, positions=positions)
     if cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
         out, new_cache = cache_lib.compressed_prefill_chunk(
-            q, k, v, layer_cache, E, F, t0,
-            backend=kernel_ops.resolve_backend(cfg.backend))
+            q, k, v, layer_cache, E, F, t0, plan=plan)
     elif cfg.kind == "standard":
         out, new_cache = cache_lib.full_prefill_chunk(
             q, k, v, layer_cache, t0)

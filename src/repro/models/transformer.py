@@ -21,6 +21,7 @@ from repro.core.projections import effective_k
 from repro.models import attention as attn_lib
 from repro.models import layers as L
 from repro.models import moe as moe_lib
+from repro.parallel import plan as plan_lib
 from repro.parallel.sharding import ParallelCtx, shard_activation
 
 import dataclasses
@@ -92,10 +93,12 @@ def apply_block(
 ):
     """Returns (x, moe_aux_loss[, cache_entry])."""
     spec = _act_spec(ctx, cfg)
+    plan = plan_lib.resolve_attention_plan(cfg.attention, ctx)
     res = attn_lib.apply_attention(params["attn"], L.rms_norm(params["ln1"], x),
                                    cfg.attention, shared_lin=shared_lin,
                                    chunked=chunked_attn,
-                                   cache_entry_spec=cache_entry_spec)
+                                   cache_entry_spec=cache_entry_spec,
+                                   plan=plan)
     entry = None
     if cache_entry_spec is not None:
         h, entry = res
@@ -126,7 +129,8 @@ def apply_block_decode(
 ) -> Tuple[jax.Array, Dict, jax.Array]:
     h, new_cache = attn_lib.apply_attention_decode(
         params["attn"], L.rms_norm(params["ln1"], x_t), layer_cache, t,
-        cfg.attention, shared_lin=shared_lin)
+        cfg.attention, shared_lin=shared_lin,
+        plan=plan_lib.resolve_attention_plan(cfg.attention, ctx))
     x_t = x_t + h
     hin = L.rms_norm(params["ln2"], x_t)
     if cfg.moe.num_experts > 0:
@@ -152,7 +156,8 @@ def apply_block_prefill_chunk(
     `apply_block_decode` but P tokens at once)."""
     h, new_cache = attn_lib.apply_attention_prefill_chunk(
         params["attn"], L.rms_norm(params["ln1"], x), layer_cache, t0,
-        cfg.attention, shared_lin=shared_lin, positions=positions)
+        cfg.attention, shared_lin=shared_lin, positions=positions,
+        plan=plan_lib.resolve_attention_plan(cfg.attention, ctx))
     x = x + h
     hin = L.rms_norm(params["ln2"], x)
     if cfg.moe.num_experts > 0:

@@ -3,3 +3,8 @@ from repro.parallel.sharding import (  # noqa: F401
     param_shardings,
     shard_activation,
 )
+from repro.parallel.plan import (  # noqa: F401
+    AttentionPlan,
+    as_plan,
+    resolve_attention_plan,
+)

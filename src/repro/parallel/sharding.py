@@ -54,6 +54,9 @@ class ParallelCtx:
 
     mesh: Optional[Mesh] = None
     model_axis: str = "model"
+    # mesh axis carrying sequence parallelism for the fused attention plan
+    # (parallel/plan.py); absent from the mesh = no sequence sharding
+    seq_axis: str = "seq"
     # "none" | "data" | "pod_data" | "experts_data" | "experts_pod_data"
     # ("experts_*": only MoE expert stacks are FSDP-sharded — serving keeps
     #  the small attention/norm weights TP-only so decode never regathers
@@ -89,6 +92,12 @@ class ParallelCtx:
         if self.mesh is None:
             return 1
         return self.mesh.shape[self.model_axis]
+
+    @property
+    def seq_shards(self) -> int:
+        if self.mesh is None or self.seq_axis not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[self.seq_axis]
 
 
 def shard_activation(x: jax.Array, ctx: Optional[ParallelCtx],

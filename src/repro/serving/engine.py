@@ -111,6 +111,12 @@ class ServingEngine:
     ):
         if attention_backend is not None:
             cfg = cfg.with_attention_backend(attention_backend)
+        # Resolve the attention execution plan once per engine: fails fast
+        # on an unshardable mesh at construction, and owns the pool cache's
+        # placement (per-shard slots for the decode kernel's two pinned
+        # operands under tensor parallelism).
+        from repro.parallel.plan import resolve_attention_plan
+        self.plan = resolve_attention_plan(cfg.attention, ctx)
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
@@ -258,11 +264,18 @@ class ServingEngine:
         row's offset, and without slack a window crossing max_seq would be
         CLAMPED by dynamic_update_slice — shifting the write down over
         earlier, still-valid slots. The slack region only ever holds padding
-        junk (budget checks cap real content at max_seq)."""
+        junk (budget checks cap real content at max_seq).
+
+        Under a mesh the pool is laid out per the plan's cache specs —
+        KV-head axis sharded over tensor parallelism, so the decode
+        kernel's two pinned operands hold per-shard slots — and every
+        donating consumer (decode scans, slot writes, prefill chunks)
+        inherits that layout."""
         slack = self.prefill_chunk  # 0 in monolithic mode
-        return model_lib.init_cache(self.cfg, batch=max_batch,
-                                    max_seq=self.max_seq + slack,
-                                    dtype=self.cache_dtype)
+        cache = model_lib.init_cache(self.cfg, batch=max_batch,
+                                     max_seq=self.max_seq + slack,
+                                     dtype=self.cache_dtype)
+        return self.plan.place_cache(cache)
 
     @staticmethod
     def _write_slot_impl(pool: Dict, slot: Dict, row: jax.Array) -> Dict:

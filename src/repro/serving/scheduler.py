@@ -127,7 +127,12 @@ class SlotPool:
 
     All jitted mutations (slot writes, chunk scans) donate the cache and the
     pool swaps in the result, so external references can never observe a
-    donated buffer.
+    donated buffer. Under a mesh the cache arrives from
+    `engine.init_pool_cache` already laid out per the engine's
+    AttentionPlan (KV-head axis sharded over tensor parallelism — per-shard
+    slots for the decode kernel's pinned operands); donation round-trips
+    preserve that layout, so the pool stays sharded for its whole life
+    without the scheduler knowing a mesh exists.
     """
 
     def __init__(self, engine, max_batch: int):

@@ -28,12 +28,12 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.models import model as model_lib
 from repro.optim import adamw_update, clip_by_global_norm, make_schedule
 from repro.optim.grad_utils import quantize_int8
+from repro.parallel.plan import pod_batch_sharding, pod_stacked_sharding
 from repro.parallel.sharding import ParallelCtx
 
 
@@ -96,21 +96,20 @@ def make_compressed_train_step(
     # mention the pod axis (it is the vmapped dimension)
     inner_ctx = dataclasses.replace(ctx, exclude_data_axes=("pod",))
 
-    def pod_sharding(x):
-        return NamedSharding(mesh, P(*(("pod",) + (None,) * (x.ndim - 1))))
-
     def step(params, opt_state, residual, batch):
         # explicit pod axis: each pod sees its own batch shard and its own
         # copy of the params (broadcast_to + P('pod') = one copy per pod on
-        # device, the same bytes as plain replication)
+        # device, the same bytes as plain replication). Placement specs come
+        # from parallel/plan.py — the same module that owns the attention
+        # sharding — instead of being hand-written here.
         params_pod = jax.tree.map(
             lambda p: jax.lax.with_sharding_constraint(
                 jnp.broadcast_to(p[None], (n_pods,) + p.shape),
-                pod_sharding(p[None])), params)
+                pod_stacked_sharding(mesh, p.ndim + 1)), params)
         batch_pod = jax.tree.map(
             lambda x: jax.lax.with_sharding_constraint(
                 x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]),
-                NamedSharding(mesh, P("pod", inner_ctx.data_axes))),
+                pod_batch_sharding(mesh, inner_ctx.data_axes, x.ndim + 1)),
             batch)
 
         def mean_loss(pp):

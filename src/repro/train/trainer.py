@@ -109,6 +109,12 @@ class Trainer:
             cfg = cfg.with_attention_backend(attention_backend)
         if backward_impl is not None:
             cfg = cfg.with_backward_impl(backward_impl)
+        # Resolve the attention execution plan up front: under a mesh this
+        # fails fast (launch/mesh.py divisibility errors) at construction
+        # instead of deep inside the first jitted step, and the resolved
+        # plan is what every attention call of the step function threads.
+        from repro.parallel.plan import resolve_attention_plan
+        self.plan = resolve_attention_plan(cfg.attention, ctx)
         self.cfg = cfg
         self.tcfg = tcfg
         self.ctx = ctx

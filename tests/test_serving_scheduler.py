@@ -113,7 +113,7 @@ class TestPerRowLengthsParity:
         for t in range(t_stop):
             _, lc = compressed_decode_attention(
                 q[:, t:t + 1], k[:, t:t + 1], v[:, t:t + 1], lc,
-                self.EF, self.EF, jnp.int32(t), backend=backend)
+                self.EF, self.EF, jnp.int32(t), plan=backend)
         return lc
 
     @pytest.mark.parametrize("backend", ["reference", "fused"])
@@ -137,7 +137,7 @@ class TestPerRowLengthsParity:
             o, lc = compressed_decode_attention(
                 q[b:b + 1, t:t + 1], k[b:b + 1, t:t + 1],
                 v[b:b + 1, t:t + 1], lc, self.EF, self.EF, jnp.int32(t),
-                backend=backend)
+                plan=backend)
             row_outs.append(o)
             row_caches.append(lc)
 
@@ -152,7 +152,7 @@ class TestPerRowLengthsParity:
         vs = jnp.stack([v[b, t] for b, t in enumerate(positions)])[:, None]
         out_b, lc_b = compressed_decode_attention(
             qs, kss, vs, lc_b, self.EF, self.EF,
-            jnp.asarray(positions, jnp.int32), backend=backend)
+            jnp.asarray(positions, jnp.int32), plan=backend)
 
         np.testing.assert_allclose(out_b, jnp.concatenate(row_outs),
                                    atol=1e-5)
@@ -171,10 +171,10 @@ class TestPerRowLengthsParity:
         v = jax.random.normal(ks[2], (2, 1, 2, 8))
         lc = _layer_cache(2)
         o_s, c_s = compressed_decode_attention(
-            q, k, v, lc, self.EF, self.EF, jnp.int32(3), backend=backend)
+            q, k, v, lc, self.EF, self.EF, jnp.int32(3), plan=backend)
         o_v, c_v = compressed_decode_attention(
             q, k, v, lc, self.EF, self.EF, jnp.full((2,), 3, jnp.int32),
-            backend=backend)
+            plan=backend)
         np.testing.assert_array_equal(o_s, o_v)
         for key in c_s:
             np.testing.assert_array_equal(c_s[key], c_v[key])
