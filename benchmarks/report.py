@@ -41,10 +41,12 @@ HEADER = ("| arch | shape | attn | FLOPs/dev | mem GiB/dev | compute s "
 
 def bench_json_summary(out=None):
     """Pretty-print the committed BENCH_*.json records. The serving record
-    carries TWO traces: `mixed` (continuous vs static scheduling) and
-    `long_prompt` (chunked vs monolithic admission prefill). Written to
-    stderr by default so `report > section.md` (the EXPERIMENTS.md
-    workflow) keeps only the tables on stdout."""
+    carries THREE traces: `mixed` (continuous vs static scheduling),
+    `long_prompt` (chunked vs monolithic admission prefill), and
+    `overload` (2x-oversubscribed SLO trace: sheds, preemptions,
+    high-priority deadline latency). Written to stderr by default so
+    `report > section.md` (the EXPERIMENTS.md workflow) keeps only the
+    tables on stdout."""
     out = out if out is not None else sys.stderr
     print_ = lambda *a: print(*a, file=out)
     paths = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
@@ -73,6 +75,18 @@ def bench_json_summary(out=None):
                       f"{lp['speedup_warm']}x warm "
                       f"({lp['chunked']['tok_per_s_cold']} vs "
                       f"{lp['monolithic']['tok_per_s_cold']} tok/s cold)")
+            ov = rec.get("overload")
+            if ov:
+                hi = ov["high_priority"]
+                print_(f"  * overload trace ({ov['mode']}, "
+                      f"{ov['oversubscription']}x oversubscribed, queue "
+                      f"bound {ov['max_queue']}): {ov['sheds']} sheds "
+                      f"{ov['shed_reasons']}, {ov['preemptions']} "
+                      f"preemptions; high-priority {hi['completed']}/"
+                      f"{hi['n']} completed, p50 latency "
+                      f"{hi['p50_latency_ticks']} ticks, "
+                      f"{hi['deadline_misses']} deadline misses "
+                      f"(occupancy {ov['mean_occupancy']})")
         elif name == "train_step":
             sh = rec.get("shape", {})
             print_(f"  * train step ({rec['mode']}, S={sh.get('seq')}, "

@@ -1,4 +1,4 @@
-"""End-to-end serving throughput, two traces:
+"""End-to-end serving throughput, three traces:
 
 **mixed** — continuous (slot) batching vs the static bucketed baseline on a
 mixed-length arrival trace. The workload is adversarial for static batching
@@ -25,11 +25,21 @@ decode rounds and batches co-arriving prompts into shared forwards. Both
 cold (includes jit, the realistic serve-novel-traffic number) and warm
 (steady-state) walls are reported; outputs are asserted byte-identical.
 
-Both traces emit ``name,us_per_call,derived`` CSV lines (us_per_call =
+**overload** — graceful degradation: a 2×+ oversubscribed low-priority
+backlog against a bounded admission queue, with a thin stream of
+high-priority, deadline-carrying arrivals. The trace asserts the SLO
+contract rather than timing it: the queue sheds part of the backlog with
+explicit ShedResults (no silent unbounded queueing), the high-priority
+requests preempt their way into the pool, and every one of them meets its
+deadline. Recorded: shed count/reasons, preemptions, high-priority p50
+latency in ticks, mean occupancy.
+
+All traces emit ``name,us_per_call,derived`` CSV lines (us_per_call =
 microseconds per generated token) and are recorded together in
 BENCH_serving.json at the repo root.
 
-    python -m benchmarks.serving_throughput [--smoke] [--trace mixed|long_prompt|both]
+    python -m benchmarks.serving_throughput [--smoke] \
+        [--trace mixed|long_prompt|overload|both]
 """
 from __future__ import annotations
 
@@ -307,12 +317,127 @@ def run_long_prompt(quick: bool = True) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Trace 3: overload — bounded queue, priorities, deadlines, preemption
+# ---------------------------------------------------------------------------
+
+
+def _overload_trace(quick: bool, seed: int = 0):
+    """2× (slot) oversubscribed backlog of low-priority requests plus a thin
+    stream of high-priority, deadline-carrying arrivals. The point is
+    graceful degradation: the bounded queue must shed part of the backlog
+    EXPLICITLY (no silent unbounded queueing) while the high-priority
+    requests preempt their way in and meet their deadlines."""
+    rng = np.random.default_rng(seed)
+    if quick:
+        pool, dchunk = 4, 4
+        n_low, low_b = 12, 16     # 4 chunks each: still running at tick 2+
+        hi_arrivals = [2, 4, 6, 8]
+        hi_b, hi_margin = 4, 4
+        max_queue = 8
+    else:
+        pool, dchunk = 8, 8
+        n_low, low_b = 24, 16
+        hi_arrivals = [2, 4, 6, 8, 10, 12]
+        hi_b, hi_margin = 8, 4
+        max_queue = 16
+    prompts, budgets, arrivals, prios, deadlines = [], [], [], [], []
+    for _ in range(n_low):                    # instantaneous backlog
+        plen = int(rng.choice([8, 16, 24]))
+        prompts.append(list(rng.integers(4, 512, plen)))
+        budgets.append(low_b)
+        arrivals.append(0)
+        prios.append(2)
+        deadlines.append(None)
+    for a in hi_arrivals:                     # interactive stream with SLOs
+        prompts.append(list(rng.integers(4, 512, 8)))
+        budgets.append(hi_b)
+        arrivals.append(a)
+        prios.append(0)
+        deadlines.append(a + hi_margin)
+    max_seq = max(len(p) + b for p, b in zip(prompts, budgets)) + dchunk
+    max_seq = ((max_seq + 7) // 8) * 8
+    n_hi = len(hi_arrivals)
+    return (prompts, budgets, arrivals, prios, deadlines,
+            dict(pool=pool, dchunk=dchunk, max_queue=max_queue,
+                 max_seq=max_seq, n_low=n_low, n_hi=n_hi))
+
+
+def run_overload(quick: bool = True) -> dict:
+    # EOS-free seed (same trick as the mixed trace): every request must run
+    # its full budget, so the low-priority backlog genuinely occupies its
+    # slots and the high-priority stream can only get in by preempting.
+    for seed in range(16):
+        prompts, budgets, arrivals, prios, deadlines, p = _overload_trace(
+            quick, seed)
+        cfg = _cfg(p["max_seq"])
+        params = M.init_params(jax.random.PRNGKey(seed), cfg)
+        eng = ServingEngine(params, cfg, max_seq=p["max_seq"],
+                            cache_dtype=jnp.float32,
+                            decode_chunk=p["dchunk"])
+        outs = eng.serve_static(prompts, budgets, max_batch=p["pool"])
+        if all(len(o) == b for o, b in zip(outs, budgets)):
+            break
+    else:
+        raise RuntimeError("no EOS-free overload trace found in 16 seeds")
+
+    outs, sched = eng.serve(prompts, budgets, max_batch=p["pool"],
+                            arrival_chunks=arrivals, priorities=prios,
+                            deadlines=deadlines, max_queue=p["max_queue"],
+                            return_scheduler=True)
+
+    from repro.serving import ShedResult
+    shed = [o for o in outs if isinstance(o, ShedResult)]
+    reasons: dict = {}
+    for s in shed:
+        reasons[s.reason] = reasons.get(s.reason, 0) + 1
+    n_low = p["n_low"]
+    hi_ids = list(range(n_low, n_low + p["n_hi"]))
+    hi_shed = [i for i in hi_ids if isinstance(outs[i], ShedResult)]
+    hi_lat = [sched.completed_at[i] - arrivals[i]
+              for i in hi_ids if i not in hi_shed]
+    hi_misses = sum(1 for i in hi_ids if i not in hi_shed
+                    and sched.completed_at[i] > deadlines[i])
+    p50 = float(np.median(hi_lat)) if hi_lat else float("nan")
+
+    assert len(shed) > 0, "overload trace must shed (bounded queue)"
+    assert not hi_shed, f"high-priority requests were shed: {hi_shed}"
+    assert hi_misses == 0, f"{hi_misses} high-priority deadline misses"
+
+    emit("serving_throughput/overload/sheds", 0.0,
+         f"sheds={len(shed)},preemptions={sched.stats.preemptions}")
+    emit("serving_throughput/overload/high_priority", 0.0,
+         f"p50_latency_ticks={p50:.1f},deadline_misses={hi_misses},"
+         f"occupancy={sched.stats.mean_occupancy:.2f}")
+
+    return {
+        "mode": "smoke" if quick else "full",
+        "n_requests": len(prompts),
+        "slot_pool": p["pool"],
+        "oversubscription": round((n_low + p["n_hi"]) / p["pool"], 1),
+        "max_queue": p["max_queue"],
+        "sheds": len(shed),
+        "shed_reasons": reasons,
+        "preemptions": sched.stats.preemptions,
+        "deadline_misses_total": sched.stats.deadline_misses,
+        "mean_occupancy": round(sched.stats.mean_occupancy, 3),
+        "high_priority": {
+            "n": p["n_hi"],
+            "completed": p["n_hi"] - len(hi_shed),
+            "p50_latency_ticks": p50,
+            "deadline_misses": hi_misses,
+        },
+    }
+
+
 def run(quick: bool = True, trace: str = "both"):
     payload = {}
     if trace in ("mixed", "both"):
         payload["mixed"] = run_mixed(quick)
     if trace in ("long_prompt", "both"):
         payload["long_prompt"] = run_long_prompt(quick)
+    if trace in ("overload", "both"):
+        payload["overload"] = run_overload(quick)
     if trace == "both":
         # the committed perf record carries BOTH traces; selective runs
         # print CSV only so a partial run can't clobber the artifact
@@ -325,7 +450,7 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="fast mode for the scripts/check.sh smoke gate")
     ap.add_argument("--trace", default="both",
-                    choices=["mixed", "long_prompt", "both"])
+                    choices=["mixed", "long_prompt", "overload", "both"])
     args = ap.parse_args()
     res = run(quick=args.smoke, trace=args.trace)
     if "mixed" in res:
@@ -334,3 +459,9 @@ if __name__ == "__main__":
         lp = res["long_prompt"]
         print(f"# long_prompt: chunked/monolithic cold = "
               f"{lp['speedup_cold']:.2f}x, warm = {lp['speedup_warm']:.2f}x")
+    if "overload" in res:
+        ov = res["overload"]
+        print(f"# overload: {ov['sheds']} sheds at "
+              f"{ov['oversubscription']}x oversubscription, hi-pri p50 = "
+              f"{ov['high_priority']['p50_latency_ticks']:.1f} ticks, "
+              f"misses = {ov['high_priority']['deadline_misses']}")

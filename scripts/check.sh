@@ -2,16 +2,23 @@
 # One-entry-point smoke gate for builders:
 #   1. docs link check (every file referenced from README/docs exists)
 #   2. tier-1 test suite (ROADMAP.md "Tier-1 verify")
-#   3. the central-complexity-claim benchmark as a quick perf canary
-#   4. the two-trace serving benchmark (--smoke): the mixed continuous-vs-
-#      static trace AND the long-prompt chunked-admission-prefill trace,
-#      recording both in BENCH_serving.json (the perf trajectory)
-#   5. the train-step benchmark (--smoke): fused Pallas backward vs
+#   3. the seeded fault-injection suite: deterministic slot-step / NaN-
+#      logits / snapshot-corruption faults must all be detected,
+#      quarantined, and recovered byte-identically (REPRO_FAULT_SEED
+#      re-seeds the randomized schedule leg)
+#   4. the central-complexity-claim benchmark as a quick perf canary
+#   5. the three-trace serving benchmark (--smoke): the mixed continuous-
+#      vs-static trace, the long-prompt chunked-admission-prefill trace,
+#      AND the oversubscribed overload trace (sheds + preemption +
+#      high-priority deadline latency), all recorded in BENCH_serving.json
+#      (the perf trajectory)
+#   6. the train-step benchmark (--smoke): fused Pallas backward vs
 #      reference-recompute, recording BENCH_train_step.json
-#   6. the forced-8-device leg: the attention-plan parity suite (fused
+#   7. the forced-8-device leg: the attention-plan parity suite (fused
 #      kernels under shard_map on tp/sp/tp×sp meshes == single-device ==
-#      reference) and the sharded train-step benchmark (--mesh tp=2,
-#      recorded under the "mesh" key of BENCH_train_step.json)
+#      reference, plus the preempt/snapshot-restore parity legs) and the
+#      sharded train-step benchmark (--mesh tp=2, recorded under the
+#      "mesh" key of BENCH_train_step.json)
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -24,10 +31,13 @@ python scripts/check_docs.py
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== fault injection: seeded recovery suite (REPRO_FAULT_SEED=7) =="
+REPRO_FAULT_SEED=7 python -m pytest -q tests/test_serving_faults.py
+
 echo "== smoke benchmark: table1_complexity =="
 python -m benchmarks.run --only table1_complexity
 
-echo "== smoke benchmark: serving_throughput (mixed + long-prompt) =="
+echo "== smoke benchmark: serving_throughput (mixed + long-prompt + overload) =="
 python -m benchmarks.serving_throughput --smoke
 
 echo "== smoke benchmark: train_step (fused vs reference backward) =="

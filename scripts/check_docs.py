@@ -4,6 +4,9 @@ must exist, so the docs cannot silently rot as the tree moves.
 
 Checked references:
   * markdown links whose target is a relative path (not http/#anchor)
+  * anchored links (`file.md#heading-slug` or in-page `#heading-slug`):
+    the target file must exist AND contain a heading whose GitHub slug
+    matches the anchor
   * backtick-quoted tokens that look like repo paths (contain a '/' and a
     known suffix, e.g. `src/repro/serving/engine.py`, `docs/serving.md`)
   * `python -m pkg.module` invocations in fenced blocks / backticks
@@ -23,8 +26,41 @@ DOC_GLOBS = ["README.md", "docs"]
 PATH_SUFFIXES = (".py", ".sh", ".md", ".json", ".txt", ".ini")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#]+)\)")
+ANCHOR_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]*)#([^)\s]+)\)")
 TICK_RE = re.compile(r"`([^`\s]+)`")
 MODULE_RE = re.compile(r"python -m ([A-Za-z0-9_.]+)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*#*\s*$")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor id: drop markdown/punctuation, lowercase,
+    spaces to hyphens (hyphens/underscores survive)."""
+    text = heading.replace("`", "").strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_anchors(path: str) -> set[str]:
+    """All anchor ids a markdown file exposes (duplicate headings get the
+    GitHub -1/-2 suffixes). Fenced code blocks are skipped so a `# comment`
+    inside ```...``` is not mistaken for a heading."""
+    anchors: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in open(path):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
 
 
 def doc_files():
@@ -84,6 +120,23 @@ def main() -> int:
             if not any(os.path.exists(os.path.join(r, target))
                        for r in roots):
                 missing.append(f"{rel_doc}: {target}")
+        for m in ANCHOR_LINK_RE.finditer(text):
+            target, anchor = m.group(1).strip(), m.group(2).strip()
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            checked += 1
+            page = doc if not target else None
+            if page is None:
+                for r in (base, ROOT):
+                    cand = os.path.join(r, target)
+                    if os.path.isfile(cand):
+                        page = cand
+                        break
+            if page is None:
+                missing.append(f"{rel_doc}: {target}#{anchor} (no such file)")
+            elif anchor not in heading_anchors(page):
+                missing.append(f"{rel_doc}: {target}#{anchor} "
+                               f"(no heading with that slug)")
         for m in MODULE_RE.finditer(text):
             mod = m.group(1)
             if mod.split(".")[0] not in ("repro", "benchmarks"):

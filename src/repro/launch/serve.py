@@ -4,6 +4,8 @@ the static bucketed baseline.
 
     python -m repro.launch.serve --arch qwen3-8b --smoke --requests 8
     python -m repro.launch.serve --arch qwen3-8b --smoke --scheduler static
+    python -m repro.launch.serve --arch qwen3-8b --smoke --requests 12 \
+        --max-batch 2 --priority-classes 3 --deadline-ticks 8 --max-queue 6
 """
 import argparse
 import dataclasses
@@ -42,6 +44,20 @@ def main():
                     help="continuous: slot-based admission/eviction between "
                          "decode chunks; static: equal-length bucketed "
                          "batches (baseline)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="assign synthetic requests round-robin to this many "
+                         "priority classes (0 = most urgent; urgent arrivals "
+                         "preempt running lower-priority slots); 1 = all "
+                         "priority 0, plain FCFS")
+    ap.add_argument("--deadline-ticks", type=int, default=0,
+                    help="give every priority-0 request an absolute deadline "
+                         "this many scheduler ticks out (0 = no deadlines); "
+                         "provably-infeasible deadlines are shed at "
+                         "admission")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue to this many waiting "
+                         "requests; overflow sheds the least-valued entry "
+                         "(0 = unbounded)")
     args = ap.parse_args()
 
     import jax
@@ -80,17 +96,27 @@ def main():
         print(f"[serve] {cfg.family!r} cache has no per-row positions; "
               "falling back to the static bucketed scheduler")
         mode = "static"
+    prios = ([i % args.priority_classes for i in range(len(prompts))]
+             if args.priority_classes > 1 else None)
+    deadlines = None
+    if args.deadline_ticks:
+        deadlines = [args.deadline_ticks if (prios is None or p == 0) else None
+                     for p in (prios or [0] * len(prompts))]
     t0 = time.perf_counter()
     if mode == "continuous":
         outs, sched = eng.serve(prompts, args.max_new_tokens,
                                 max_batch=args.max_batch,
+                                priorities=prios,
+                                deadlines=deadlines,
+                                max_queue=args.max_queue or None,
                                 return_scheduler=True)
     else:
         outs = eng.serve_static(prompts, args.max_new_tokens,
                                 max_batch=args.max_batch)
         sched = None
     dt = time.perf_counter() - t0
-    n_tok = sum(len(o) for o in outs)
+    shed = [o for o in outs if not isinstance(o, list)]
+    n_tok = sum(len(o) for o in outs if isinstance(o, list))
     occ = (f", occupancy {sched.stats.mean_occupancy:.2f} over "
            f"{sched.stats.chunks} chunks" if sched is not None else "")
     if sched is not None and args.prefill_chunk:
@@ -100,8 +126,14 @@ def main():
           f"tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s){occ}; "
           f"cache/request ≈ "
           f"{eng.cache_bytes(args.max_batch) // args.max_batch} B")
+    if sched is not None:
+        print(f"[serve] {sched.stats.counters_line()}")
+    for o in shed:
+        print(f"  req{o.rid} SHED at tick {o.tick}: {o.reason} "
+              f"(priority {o.priority})")
     for i, o in enumerate(outs[:4]):
-        print(f"  req{i} ({len(prompts[i])} prompt toks) -> {o[:10]}")
+        if isinstance(o, list):
+            print(f"  req{i} ({len(prompts[i])} prompt toks) -> {o[:10]}")
 
 
 if __name__ == "__main__":

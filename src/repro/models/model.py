@@ -69,7 +69,7 @@ def decode_scan(
     eos_id: int,
     temperature: float = 0.0,
     ctx: Optional[ParallelCtx] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array, Dict, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, Dict, jax.Array]:
     """Device-resident multi-token decode: a lax.scan over `n_steps` steps
     with on-device sampling (argmax / categorical) and on-device EOS
     masking. No host round-trips inside — the caller syncs ONCE per chunk
@@ -80,7 +80,13 @@ def decode_scan(
     Finished rows also freeze their per-row position counter
     (cache["lengths"]), so an idle slot of a continuous-batching pool never
     advances past the cache capacity no matter how long it sits empty.
-    Returns (tokens (B, n_steps), next cur, finished, cache, rng).
+
+    The carry also accumulates a per-row `bad` flag: any step whose logits
+    for a still-live row go non-finite latches the flag. It rides the
+    chunk's single host sync, so NaN/Inf detection costs nothing extra —
+    the serving scheduler quarantines flagged rows instead of streaming
+    garbage tokens.
+    Returns (tokens (B, n_steps), next cur, finished, bad, cache, rng).
     """
 
     def sample(logits, key):
@@ -89,7 +95,7 @@ def decode_scan(
         return jax.random.categorical(key, logits / temperature, axis=-1)
 
     def step(carry, _):
-        cur, finished, cache, rng = carry
+        cur, finished, bad, cache, rng = carry
         tok = jnp.where(finished, eos_id, cur)
         finished = finished | (tok == eos_id)
         rng, sub = jax.random.split(rng)
@@ -100,12 +106,14 @@ def decode_scan(
         if prev_lengths is not None:    # ssm/hybrid caches keep a scalar
             cache["lengths"] = jnp.where(finished, prev_lengths,
                                          cache["lengths"])
+        bad = bad | (~jnp.isfinite(logits[:, 0]).all(axis=-1) & ~finished)
         nxt = sample(logits[:, 0], sub)
-        return (nxt, finished, cache, rng), tok
+        return (nxt, finished, bad, cache, rng), tok
 
-    (cur, finished, cache, rng), toks = jax.lax.scan(
-        step, (cur, finished, cache, rng), None, length=n_steps)
-    return jnp.moveaxis(toks, 0, 1), cur, finished, cache, rng
+    bad0 = jnp.zeros(cur.shape, bool)
+    (cur, finished, bad, cache, rng), toks = jax.lax.scan(
+        step, (cur, finished, bad0, cache, rng), None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), cur, finished, bad, cache, rng
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,5 @@
 from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.faults import Fault, FaultInjector  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
-    Request, ScheduleStats, Scheduler, SlotPool)
+    Request, ScheduleStats, Scheduler, ShedResult, SlotPool)
+from repro.serving.snapshot import SlotSnapshot  # noqa: F401

@@ -136,6 +136,15 @@ class ServingEngine:
         self._chunk_fns: Dict[int, Callable] = {}
         self._write_slot = jax.jit(self._write_slot_impl,
                                    donate_argnums=(0,))
+        # Snapshot/restore surface (preemption + fault recovery): gather
+        # does NOT donate (the pool stays live — a snapshot is a copy),
+        # scatter/scrub/corrupt donate like every other pool mutation.
+        self._snapshot_rows = jax.jit(self._gather_rows)
+        self._restore_rows = jax.jit(self._scatter_rows,
+                                     donate_argnums=(0,))
+        self._scrub_row = jax.jit(self._scrub_row_impl, donate_argnums=(0,))
+        self._corrupt_row = jax.jit(self._corrupt_row_impl,
+                                    static_argnums=(2,), donate_argnums=(0,))
         if self.prefill_chunk:
             blk = self._block()
             if self.prefill_chunk < blk or self.prefill_chunk % blk != 0:
@@ -244,6 +253,47 @@ class ServingEngine:
         return self._scatter_rows(pool, sub, idx), logits
 
     @staticmethod
+    def _scrub_row_impl(pool: Dict, row: jax.Array) -> Dict:
+        """Zero pool row `row` — cache leaves AND its position counter.
+        Quarantine needs a real scrub, not the lengths-only reset: a
+        faulty row may hold NaN/Inf, and unlike finite stale garbage a NaN
+        would LEAK through the next occupant's additive attention masks
+        (NaN + (-1e9) is still NaN)."""
+        out = {}
+        for k, v in pool.items():
+            if k == "lengths":
+                out[k] = v.at[row].set(0)
+            else:
+                zero = jnp.zeros_like(
+                    jax.lax.dynamic_slice_in_dim(v, row, 1, axis=1))
+                out[k] = jax.lax.dynamic_update_slice_in_dim(
+                    v, zero, row, axis=1)
+        return out
+
+    @staticmethod
+    def _corrupt_row_impl(pool: Dict, row: jax.Array, mode: str) -> Dict:
+        """Fault-injection primitive: corrupt row `row`'s cache leaves in
+        place. mode='nan' poisons with NaN (exercises the NaN guard);
+        mode='garble' applies a finite, deterministic bit-change (models a
+        silent device fault — wrong bytes, nothing for the guard to see).
+        `lengths` is untouched: the row keeps decoding, just wrongly."""
+        out = {}
+        for k, v in pool.items():
+            if k == "lengths":
+                out[k] = v
+                continue
+            rowv = jax.lax.dynamic_slice_in_dim(v, row, 1, axis=1)
+            if mode == "nan":
+                upd = jnp.full_like(rowv, jnp.nan)
+            elif mode == "garble":
+                upd = rowv * jnp.asarray(-1.5, v.dtype) \
+                    + jnp.asarray(0.25, v.dtype)
+            else:
+                raise ValueError(f"unknown corruption mode {mode!r}")
+            out[k] = jax.lax.dynamic_update_slice_in_dim(v, upd, row, axis=1)
+        return out
+
+    @staticmethod
     def _reset_row_impl(pool: Dict, row: jax.Array) -> Dict:
         """Zero a row's position counter for incremental (chunked) prefill.
         Only `lengths` needs resetting: stale K/V from the slot's previous
@@ -311,6 +361,46 @@ class ServingEngine:
         """Mark pool row `row` empty at t=0 for incremental prefill
         (donates `pool`; route through the SlotPool owner)."""
         return self._reset_row(pool, jnp.asarray(row, jnp.int32))
+
+    def snapshot_pool_rows(self, pool: Dict, rows: Sequence[int],
+                           pad_to: int) -> List[Dict]:
+        """Host-side copies of pool rows `rows` (does NOT donate — the pool
+        stays live): one padded gather (`_gather_rows`, rows duplicated to
+        `pad_to` so every capture of a pool shares one compile) + one
+        device_get, sliced into per-row B=1 sub-caches. Thanks to the
+        compressed prefix each row is O(c + M) bytes, not O(n) — the
+        low-rank-state property that makes preemption snapshots cheap."""
+        g = len(rows)
+        rows_p, _ = self._pad_rows(rows, pad_to=pad_to)
+        sub = jax.device_get(
+            self._snapshot_rows(pool, jnp.asarray(rows_p, jnp.int32)))
+        return [{k: (v[j:j + 1] if k == "lengths" else v[:, j:j + 1])
+                 for k, v in sub.items()} for j in range(g)]
+
+    def restore_pool_rows(self, pool: Dict, sub: Dict, row: int) -> Dict:
+        """Scatter a snapshot's B=1 sub-cache back into pool row `row`
+        (donates `pool`) — the byte-exact inverse of `snapshot_pool_rows`.
+        The result is re-placed per the attention plan so a mesh-sharded
+        pool keeps its layout across a restore exactly as it does across
+        donation round-trips."""
+        pool = self._restore_rows(pool, sub,
+                                  jnp.asarray([row], jnp.int32))
+        return self.plan.place_cache(pool)
+
+    def scrub_pool_row(self, pool: Dict, row: int) -> Dict:
+        """Zero a quarantined row — cache leaves and position counter
+        (donates `pool`; route through the SlotPool owner). Re-placed per
+        the plan: the row-wise update gives the compiler no reason to keep
+        the KV-head sharding, so the layout is pinned back explicitly."""
+        pool = self._scrub_row(pool, jnp.asarray(row, jnp.int32))
+        return self.plan.place_cache(pool)
+
+    def corrupt_pool_row(self, pool: Dict, row: int, mode: str) -> Dict:
+        """Fault-injection entry point (serving/faults.py): corrupt row
+        `row` in place (donates `pool`; re-placed like `scrub_pool_row`).
+        mode: 'nan' | 'garble'."""
+        pool = self._corrupt_row(pool, jnp.asarray(row, jnp.int32), mode)
+        return self.plan.place_cache(pool)
 
     @staticmethod
     def _pad_rows(rows: Sequence[int], *arrays: np.ndarray, pad_to: int):
@@ -388,7 +478,7 @@ class ServingEngine:
         done = 0
         while done < max_new_tokens:
             n = min(self.decode_chunk, max_new_tokens - done)
-            toks, cur, finished, cache, rng = self._chunk_fn(n)(
+            toks, cur, finished, _bad, cache, rng = self._chunk_fn(n)(
                 self.params, cur, finished, cache, rng)
             outs[:, done:done + n] = np.asarray(toks)   # the chunk's one sync
             done += n
@@ -444,6 +534,9 @@ class ServingEngine:
                 # from (and a zero-token PREFILLING slot would never
                 # activate, deadlocking the chunked scheduler)
                 raise ValueError(f"request {i}: empty prompt")
+            if budgets[i] <= 0:
+                raise ValueError(f"request {i}: max_new_tokens="
+                                 f"{budgets[i]} must be positive")
             if len(p) + budgets[i] > self.max_seq:
                 raise ValueError(
                     f"request {i}: prompt {len(p)} + budget {budgets[i]} "
@@ -454,6 +547,13 @@ class ServingEngine:
               max_batch: int = 8,
               *,
               arrival_chunks: Optional[Sequence[int]] = None,
+              priorities: Optional[Sequence[int]] = None,
+              deadlines: Optional[Sequence[Optional[int]]] = None,
+              max_queue: Optional[int] = None,
+              max_retries: int = 2,
+              snapshot_chunks: int = 0,
+              nan_guard: bool = True,
+              fault_injector=None,
               on_token: Optional[Callable[[int, int], None]] = None,
               on_complete: Optional[Callable[[int, List[int]], None]] = None,
               rng: Optional[jax.Array] = None,
@@ -465,6 +565,17 @@ class ServingEngine:
         `max_new_tokens` may be one int or a per-request sequence;
         `arrival_chunks` optionally replays an arrival trace (request i
         admissible after that much virtual time, in chunk units).
+
+        SLO knobs (all default to the plain FCFS behavior): `priorities`
+        (per-request class, lower = more urgent — a strictly more urgent
+        arrival preempts the least-urgent running slot), `deadlines`
+        (per-request absolute deadline in ticks, None = none), `max_queue`
+        (bounded admission queue — overflow sheds the least-valued entry),
+        `max_retries` + `snapshot_chunks` (fault recovery: retry budget and
+        last-good-snapshot refresh period), `nan_guard` (quarantine rows
+        whose logits go non-finite), `fault_injector` (serving/faults.py).
+        A shed request's output is a `ShedResult` instead of a token list.
+
         `on_token`/`on_complete` stream per-request progress. Returns
         outputs ordered like `prompts` (or (outputs, scheduler) with
         return_scheduler=True, for stats).
@@ -473,13 +584,17 @@ class ServingEngine:
         (ssm/hybrid) fall back to the static bucketed scheduler; streaming
         callbacks then fire after each bucket completes."""
         budgets = _per_request_max_new(max_new_tokens, len(prompts))
+        slo = (priorities is not None or deadlines is not None
+               or max_queue is not None or fault_injector is not None
+               or snapshot_chunks)
         if not self.supports_continuous_batching:
-            if return_scheduler or arrival_chunks is not None:
+            if return_scheduler or arrival_chunks is not None or slo:
                 raise ValueError(
                     f"family {self.cfg.family!r} has a shared-scalar cache: "
                     "no continuous scheduler (serve falls back to the "
-                    "static bucketed path, which has no scheduler stats "
-                    "and cannot replay an arrival trace)")
+                    "static bucketed path, which has no scheduler stats, "
+                    "no SLO/fault handling, and cannot replay an arrival "
+                    "trace)")
             outputs = self.serve_static(prompts, budgets,
                                         max_batch=max_batch)
             for i, out in enumerate(outputs):
@@ -490,16 +605,30 @@ class ServingEngine:
                     on_complete(i, out)
             return outputs
         from repro.serving.scheduler import Request, Scheduler
+        n = len(prompts)
         arrivals = list(arrival_chunks) if arrival_chunks is not None \
-            else [0] * len(prompts)
+            else [0] * n
+        prios = list(priorities) if priorities is not None else [0] * n
+        dls = list(deadlines) if deadlines is not None else [None] * n
+        for name, seq in (("arrival_chunks", arrivals),
+                          ("priorities", prios), ("deadlines", dls)):
+            if len(seq) != n:
+                raise ValueError(f"{name} has {len(seq)} entries "
+                                 f"for {n} prompts")
         self._check_budgets(prompts, budgets)
-        sched = Scheduler(self, max_batch, rng=rng)
+        sched = Scheduler(self, max_batch, rng=rng, max_queue=max_queue,
+                          max_retries=max_retries,
+                          snapshot_chunks=snapshot_chunks,
+                          nan_guard=nan_guard,
+                          fault_injector=fault_injector)
         for i, p in enumerate(prompts):
             sched.submit(Request(rid=i, tokens=tuple(p),
                                  max_new_tokens=budgets[i],
-                                 arrival_chunk=arrivals[i]))
+                                 arrival_chunk=arrivals[i],
+                                 priority=prios[i],
+                                 deadline_ticks=dls[i]))
         results = sched.run(on_token=on_token, on_complete=on_complete)
-        outputs = [results[i] for i in range(len(prompts))]
+        outputs = [results[i] for i in range(n)]
         if return_scheduler:
             return outputs, sched
         return outputs

@@ -1,0 +1,131 @@
+"""Deterministic fault injection for the serving stack.
+
+The injector models three failure classes, all applied at chunk boundaries
+through the SlotPool owner (so donation safety is never violated), and all
+seeded/scheduled so a failing run replays exactly:
+
+* ``slot_step`` — one slot's decode step "fails" (the model of a device
+  fault): the row's cache leaves are garbled with finite noise before the
+  chunk, and the injector reports the row as failed at the chunk's host
+  sync (the stand-in for a runtime error status). The garbling is real —
+  with detection disabled (``detectable=False``) the run provably streams
+  wrong tokens — so recovery is negative-testable, not vacuous.
+* ``nan_logits`` — the row's cache leaves are poisoned with NaN before the
+  chunk, so the model's logits for that row genuinely go non-finite and the
+  scheduler's NaN/Inf guard (the per-row ``bad`` flag riding the chunk's
+  one host sync) must catch it. The injector does NOT report this row:
+  detection is entirely the guard's job.
+* ``snapshot_corrupt`` — the row's last-good snapshot has a byte flipped
+  after capture AND the row's step fails (as ``slot_step``), forcing a
+  restore attempt: the checksum mismatch must be detected at restore and
+  recovery must fall back to re-running the request from its prompt.
+
+Scheduler contract under injection (tests/test_serving_faults.py): every
+fired fault is detected, the faulty request still completes byte-identically
+(requeue from its last good snapshot, or from scratch), and co-resident
+rows' outputs never change — a fault quarantines exactly one row.
+
+Schedules are either explicit (``Fault(kind, chunk, row)`` list) or random:
+``FaultInjector(seed=s, n_random=k)`` draws k (chunk, kind) pairs up front
+and picks a live row at fire time — deterministic for a given seed and
+serve trace. ``fired`` / ``skipped`` record what actually happened.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+SLOT_STEP = "slot_step"
+NAN_LOGITS = "nan_logits"
+SNAPSHOT_CORRUPT = "snapshot_corrupt"
+FAULT_KINDS = (SLOT_STEP, NAN_LOGITS, SNAPSHOT_CORRUPT)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault. ``chunk`` indexes executed decode chunks
+    (ScheduleStats.chunks at fire time); ``row`` is the pool row, or None
+    for random schedules (a live row is drawn at fire time)."""
+
+    kind: str
+    chunk: int
+    row: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(choose from {FAULT_KINDS})")
+
+
+class FaultInjector:
+    def __init__(self, schedule: Optional[Sequence[Fault]] = None, *,
+                 seed: int = 0, n_random: int = 0, horizon: int = 16,
+                 kinds: Sequence[str] = FAULT_KINDS,
+                 detectable: bool = True):
+        """`schedule`: explicit faults; or `n_random` faults drawn over
+        chunks [0, horizon) from `kinds` with `seed`. `detectable=False`
+        keeps the corruption but silences the injector's failure reports
+        (slot_step faults become silent corruption — the negative-test mode
+        proving the injection is real; nan_logits stays detectable because
+        the NaN guard, not the injector, detects it)."""
+        self.detectable = detectable
+        self._rng = np.random.default_rng(seed)
+        if schedule is None:
+            chunks = sorted(self._rng.choice(horizon, size=n_random,
+                                             replace=False)
+                            if n_random <= horizon else
+                            self._rng.integers(0, horizon, n_random))
+            schedule = [Fault(kind=str(self._rng.choice(list(kinds))),
+                              chunk=int(c)) for c in chunks]
+        self.schedule: List[Fault] = list(schedule)
+        self.fired: List[Fault] = []      # faults that actually landed
+        self.skipped: List[Fault] = []    # target row dead at fire time
+        self._reported: Set[int] = set()  # rows to report failed this chunk
+
+    # -- scheduler hooks (called between decode chunks) -------------------
+
+    def _due(self, chunk_idx: int) -> List[Fault]:
+        return [f for f in self.schedule if f.chunk == chunk_idx]
+
+    def before_chunk(self, pool, snapshots: Dict[int, object],
+                     chunk_idx: int) -> None:
+        """Apply the corruption of every fault due at this chunk. `pool` is
+        the SlotPool (corruption routes through its donating owner methods);
+        `snapshots` is the scheduler's row -> last-good-snapshot map."""
+        self._reported = set()
+        for fault in self._due(chunk_idx):
+            row = fault.row
+            if row is None:
+                live = [r for r, s in enumerate(pool.slots) if s is not None]
+                if not live:
+                    self.skipped.append(fault)
+                    continue
+                row = int(self._rng.choice(live))
+            elif pool.slots[row] is None:
+                self.skipped.append(fault)
+                continue
+            fault = dataclasses.replace(fault, row=row)
+            if fault.kind == NAN_LOGITS:
+                pool.corrupt_row(row, mode="nan")
+            else:                          # slot_step / snapshot_corrupt
+                pool.corrupt_row(row, mode="garble")
+                if self.detectable:
+                    self._reported.add(row)
+            if fault.kind == SNAPSHOT_CORRUPT:
+                snap = snapshots.get(row)
+                if snap is None:
+                    self.skipped.append(fault)
+                    continue
+                key = sorted(snap.cache_rows)[0]
+                leaf = snap.cache_rows[key]
+                flat = leaf.reshape(-1).view(np.uint8)
+                flat[int(self._rng.integers(flat.size))] ^= 0xFF
+            self.fired.append(fault)
+
+    def failed_rows(self, chunk_idx: int) -> Set[int]:
+        """Rows whose step the injector reports as failed for the chunk that
+        just ran — the simulated device-error status the scheduler consumes
+        at the host sync."""
+        return set(self._reported)

@@ -1,5 +1,5 @@
-"""Slot-based continuous-batching scheduler over the device-resident decode
-loop.
+"""SLO-aware slot-based continuous-batching scheduler over the
+device-resident decode loop.
 
 Admission/eviction contract
 ---------------------------
@@ -7,59 +7,86 @@ Admission/eviction contract
 The unit of work is a *slot*: one row of a fixed (max_batch)-row pool cache.
 The scheduler mutates the pool ONLY between decode chunks:
 
-* **Admission** — a queued request whose arrival time has passed claims a
-  free slot. With `engine.prefill_chunk == 0` (monolithic) it is prefilled
-  alone (B=1, its own forward), its cache rows are `dynamic_update_slice`d
-  into the pool, its first sampled token becomes the slot's `cur`, and its
-  per-row position counter (`cache["lengths"][slot]`) is set to the prompt
-  length. With `engine.prefill_chunk > 0` (chunked) the slot is claimed in
-  the PREFILLING state at t=0 and the prompt streams into the pool cache
-  one fixed-size chunk per scheduler round, interleaved with everyone
-  else's decode chunks — a 32k-token prompt can no longer stall the pool
-  for a full forward — and every PREFILLING row's next chunk rides ONE
-  padded, batched forward (batched admission prefill; per-row offsets and
-  valid-token counts are traced, so one compile covers any mix of lengths
-  and progress). Admission never perturbs live rows: every cache write,
-  rope position, attention mask and block fold is per-row (core/cache.py),
-  so a slot's math is identical whether its neighbours are mid-request,
-  mid-prefill, freshly admitted, or idle.
+* **Admission** — earliest-deadline-first within priority classes: arrived
+  requests are ordered by (priority, deadline, submission order) — lower
+  `priority` numbers are more urgent, `deadline_ticks=None` sorts last
+  within its class, and with the default priority/deadline on every request
+  the order degenerates to exactly the old FCFS. A queued request whose
+  arrival time has passed claims a free slot. With `engine.prefill_chunk ==
+  0` (monolithic) it is prefilled alone (B=1, its own forward) and its
+  cache rows are `dynamic_update_slice`d into the pool; with
+  `engine.prefill_chunk > 0` (chunked) the slot is claimed PREFILLING at
+  t=0 and the prompt streams into the pool cache one fixed-size chunk per
+  round, every co-prefilling row sharing ONE padded, batched forward.
+  Admission never perturbs live rows: every cache write, rope position,
+  attention mask and block fold is per-row (core/cache.py).
+* **Preemption** — when no slot is free, an arrived request whose priority
+  is STRICTLY more urgent than the least-urgent occupied slot evicts that
+  slot: the victim's state is captured as a host-side `SlotSnapshot`
+  (cache rows via the engine's `_gather_rows` — O(c + M) bytes per row,
+  the compressed prefix making preemption cheap — plus `cur`, `finished`,
+  emitted tokens and prefill progress) and the victim is requeued; when it
+  is re-admitted the snapshot is `_scatter_rows`'d back and decode resumes
+  byte-identically to an uninterrupted run. Strict inequality means a
+  victim can never preempt its preemptor — no thrash.
+* **Overload shedding** — `max_queue` bounds the admission queue: a submit
+  beyond the bound sheds the entry that EDF would schedule LAST (lowest
+  priority class, latest deadline, latest submission) with an explicit
+  `ShedResult` instead of queueing unboundedly. Per round, a waiting
+  request whose deadline can no longer be met even by the optimistic
+  lower-bound estimate (`_needed_ticks`) is shed as infeasible rather than
+  admitted to miss.
 * **Decode** — the pool decodes `decode_chunk` tokens as one jitted
-  `lax.scan` (model.decode_scan): ONE host sync per chunk. Idle and
-  PREFILLING slots ride along `finished`-masked (their outputs are frozen
-  to EOS and their position counters do not advance; a PREFILLING row's
-  masked ring-buffer writes land at pos 0 of a block the remainder/decode
-  path rewrites before any mask can see it).
-* **Eviction / retirement** — after the chunk's host sync, each live slot's
-  tokens are scanned: an EOS or an exhausted per-request `max_new_tokens`
-  budget retires the slot (completion callback fires; the slot is free for
-  the next admission round). Tokens a row produced past its retirement point
-  are discarded — they never reach the request's output, and the next
-  admission makes the slot's stale cache contents unreachable (monolithic:
-  a full row overwrite; chunked: a lengths reset — every mask is bounded
-  by the row's committed length, and writes land before visibility).
+  `lax.scan` (model.decode_scan): ONE host sync per chunk, which now also
+  carries a per-row non-finite-logits flag (the NaN/Inf guard — detection
+  costs nothing extra).
+* **Faults & quarantine** — a row flagged bad (NaN/Inf logits) or reported
+  failed by an attached `FaultInjector` is quarantined at the chunk
+  boundary: its tokens from the poisoned chunk are discarded, its row is
+  scrubbed (zeroed — a NaN cache must never be left where additive masks
+  could leak it to a later occupant), and the request is requeued from its
+  last good snapshot (or from scratch when none exists — greedy decode
+  makes that byte-identical too). Retries are bounded by `max_retries`;
+  exhaustion sheds the request with an explicit ShedResult. A corrupt
+  snapshot (checksum mismatch) is detected at restore and falls back to
+  from-scratch. Neighbour rows' bytes are never touched — per-row masks
+  make every row's math independent, so a fault-free co-resident request
+  is byte-identical to a fault-free run (tests/test_serving_faults.py).
+* **Eviction / retirement** — after the chunk's host sync, an EOS or an
+  exhausted per-request `max_new_tokens` budget retires the slot; a
+  completion past the request's deadline counts a `deadline_miss`.
 
-The pool cache has a single owner (`SlotPool`): the chunk scan donates the
-cache buffers, so `SlotPool` swaps in the returned cache each chunk and no
-other live reference can dangle (the donation-safety contract the serving
-engine relies on).
+The pool cache has a single owner (`SlotPool`): every donating mutation
+(chunk scans, slot writes, restores, scrubs, fault corruption) routes
+through it and swaps in the returned cache, so no other live reference can
+dangle. Snapshot capture gathers WITHOUT donating.
 
 Determinism: greedy decode of a request depends only on its own prompt —
 per-row masks make every row's attention independent of its neighbours — so
-continuous scheduling produces byte-identical outputs to the static bucketed
-baseline (`ServingEngine.serve_static`), under any arrival order and any
-pool size (tests/test_serving_scheduler.py).
+continuous scheduling (with any mix of preemptions, requeues and restores)
+produces byte-identical outputs to the static bucketed baseline
+(`ServingEngine.serve_static`), under any arrival order and any pool size
+(tests/test_serving_scheduler.py, tests/test_serving_faults.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import EOS
+from repro.serving.snapshot import SlotSnapshot, capture
+
+_INF = float("inf")
+
+# ShedResult reasons
+SHED_QUEUE_FULL = "queue_full"
+SHED_DEADLINE_INFEASIBLE = "deadline_infeasible"
+SHED_RETRIES_EXHAUSTED = "retries_exhausted"
 
 
 @dataclasses.dataclass
@@ -70,12 +97,53 @@ class Request:
     time has passed (executed decode chunks + idle ticks, `stats.ticks`) —
     the replay knob for arrival traces (benchmarks/serving_throughput.py);
     0 = available immediately.
+
+    `priority`: admission class — LOWER is more urgent (0 = interactive).
+    Within a class, earliest `deadline_ticks` first, then submission order.
+    A strictly more urgent arrival may preempt a less urgent running slot.
+
+    `deadline_ticks`: absolute virtual-time deadline (None = no deadline).
+    Used for EDF ordering, feasibility shedding, and the deadline_misses
+    counter; it is an SLO signal, not a hard kill — a running request past
+    its deadline finishes and counts a miss.
+
+    Construction fails fast on malformed fields with the rid in the message
+    (a bad request must never surface as an opaque shape error mid-decode).
     """
 
     rid: int
     tokens: Tuple[int, ...]
     max_new_tokens: int
     arrival_chunk: int = 0
+    priority: int = 0
+    deadline_ticks: Optional[int] = None
+
+    def __post_init__(self):
+        if len(self.tokens) == 0:
+            raise ValueError(f"request {self.rid}: empty prompt (there are "
+                             "no logits to sample a first token from)")
+        if self.max_new_tokens <= 0:
+            raise ValueError(f"request {self.rid}: max_new_tokens="
+                             f"{self.max_new_tokens} must be positive")
+        if self.arrival_chunk < 0:
+            raise ValueError(f"request {self.rid}: arrival_chunk="
+                             f"{self.arrival_chunk} must be >= 0")
+        if self.deadline_ticks is not None and self.deadline_ticks < 0:
+            raise ValueError(f"request {self.rid}: deadline_ticks="
+                             f"{self.deadline_ticks} must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShedResult:
+    """Explicit rejection: the scheduler refused (or gave up on) a request
+    instead of queueing it forever or streaming garbage. Returned in place
+    of the token list."""
+
+    rid: int
+    reason: str        # SHED_QUEUE_FULL | SHED_DEADLINE_INFEASIBLE |
+    #                    SHED_RETRIES_EXHAUSTED
+    tick: int          # virtual time of the decision
+    priority: int
 
 
 # Slot states. A monolithically-admitted slot is born DECODING; under
@@ -94,6 +162,31 @@ class _Slot:
     emitted: List[int]
     state: str = DECODING
     filled: int = 0                    # prompt tokens committed to the cache
+    seq: int = 0                       # submission order (EDF tie-break)
+    retries: int = 0                   # fault requeues consumed so far
+
+
+@dataclasses.dataclass
+class _QueueEntry:
+    """A waiting request, possibly carrying resume state from a preemption
+    or a fault requeue."""
+
+    request: Request
+    seq: int
+    snapshot: Optional[SlotSnapshot] = None
+    retries: int = 0
+
+    def sort_key(self) -> Tuple[int, float, int]:
+        """EDF within priority classes; submission order breaks ties. The
+        max of this key over a set is also the shedding/preemption victim
+        (the entry the schedule values least)."""
+        dl = self.request.deadline_ticks
+        return (self.request.priority, _INF if dl is None else dl, self.seq)
+
+
+def _slot_sort_key(slot: _Slot) -> Tuple[int, float, int]:
+    dl = slot.request.deadline_ticks
+    return (slot.request.priority, _INF if dl is None else dl, slot.seq)
 
 
 @dataclasses.dataclass
@@ -109,6 +202,14 @@ class ScheduleStats:
     #                                    chunk/remainder; monolithic: one
     #                                    B=1 forward per admission)
     prefill_tokens: int = 0            # real (unpadded) prompt tokens filled
+    preemptions: int = 0               # slots evicted for a more urgent
+    #                                    arrival (snapshot + requeue)
+    sheds: int = 0                     # requests rejected with a ShedResult
+    deadline_misses: int = 0           # completions past deadline_ticks
+    retries: int = 0                   # fault requeues (snapshot or scratch)
+    quarantines: int = 0               # faulty rows detected and isolated
+    snapshots: int = 0                 # slot snapshots captured
+    snapshot_corruptions: int = 0      # restores rejected by checksum
 
     @property
     def ticks(self) -> int:
@@ -121,18 +222,26 @@ class ScheduleStats:
         nothing decoded, are excluded)."""
         return self.occupancy_sum / max(self.chunks, 1)
 
+    def counters_line(self) -> str:
+        """One-line SLO counter summary (surfaced by launch/serve.py)."""
+        return (f"preemptions={self.preemptions} sheds={self.sheds} "
+                f"deadline_misses={self.deadline_misses} "
+                f"retries={self.retries} quarantines={self.quarantines} "
+                f"snapshot_corruptions={self.snapshot_corruptions}")
+
 
 class SlotPool:
     """Sole owner of the live pool cache + per-slot decode state.
 
-    All jitted mutations (slot writes, chunk scans) donate the cache and the
-    pool swaps in the result, so external references can never observe a
-    donated buffer. Under a mesh the cache arrives from
-    `engine.init_pool_cache` already laid out per the engine's
-    AttentionPlan (KV-head axis sharded over tensor parallelism — per-shard
-    slots for the decode kernel's pinned operands); donation round-trips
-    preserve that layout, so the pool stays sharded for its whole life
-    without the scheduler knowing a mesh exists.
+    All jitted mutations (slot writes, chunk scans, restores, scrubs,
+    injected corruption) donate the cache and the pool swaps in the result,
+    so external references can never observe a donated buffer. Snapshot
+    capture (`snapshot_rows`) gathers without donating. Under a mesh the
+    cache arrives from `engine.init_pool_cache` already laid out per the
+    engine's AttentionPlan (KV-head axis sharded over tensor parallelism —
+    per-shard slots for the decode kernel's pinned operands); donation and
+    snapshot/restore round-trips preserve that layout, so the pool stays
+    sharded for its whole life without the scheduler knowing a mesh exists.
     """
 
     def __init__(self, engine, max_batch: int):
@@ -161,6 +270,9 @@ class SlotPool:
     def decoding_count(self) -> int:
         return sum(s is not None and s.state == DECODING for s in self.slots)
 
+    def occupied_rows(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
     # -- mutations (between chunks only) ---------------------------------
 
     def admit(self, row: int, request: Request, slot_cache: Dict,
@@ -185,6 +297,45 @@ class SlotPool:
         self.finished[row] = True
         self.slots[row] = _Slot(request=request, emitted=[],
                                 state=PREFILLING, filled=0)
+
+    def snapshot_rows(self, rows: Sequence[int],
+                      tick: int) -> List[SlotSnapshot]:
+        """Capture host-side snapshots of occupied `rows` at the current
+        chunk boundary (one non-donating padded gather + device_get — the
+        cache slice is O(c + M) per row)."""
+        subs = self.engine.snapshot_pool_rows(self.cache, rows,
+                                              pad_to=self.max_batch)
+        out = []
+        for row, sub in zip(rows, subs):
+            slot = self.slots[row]
+            out.append(capture(
+                rid=slot.request.rid, state=slot.state, filled=slot.filled,
+                cur=int(self.cur[row]), finished=bool(self.finished[row]),
+                emitted=slot.emitted, cache_rows=sub, tick=tick))
+        return out
+
+    def restore(self, row: int, request: Request,
+                snap: SlotSnapshot) -> None:
+        """Re-admit a preempted/faulted request from its snapshot: scatter
+        the cache rows back (byte-identical resume) and rebuild the slot."""
+        sub = {k: jnp.asarray(v) for k, v in snap.cache_rows.items()}
+        self.cache = self.engine.restore_pool_rows(self.cache, sub, row)
+        self.cur[row] = snap.cur
+        self.finished[row] = snap.finished
+        self.slots[row] = _Slot(request=request, emitted=list(snap.emitted),
+                                state=snap.state, filled=snap.filled)
+
+    def scrub_row(self, row: int) -> None:
+        """Zero a quarantined row's cache leaves and its position counter.
+        A faulty row may hold NaN/Inf — which, unlike finite stale garbage,
+        would LEAK through the additive masking of a later occupant's
+        attention (NaN + bias = NaN) — so quarantine always scrubs."""
+        self.cache = self.engine.scrub_pool_row(self.cache, row)
+
+    def corrupt_row(self, row: int, mode: str) -> None:
+        """Fault-injection surface: corrupt row's cache leaves in place
+        (mode 'nan' or 'garble') through the donating owner path."""
+        self.cache = self.engine.corrupt_pool_row(self.cache, row, mode)
 
     def prefill_chunk_rows(self, rows: List[int], tokens: np.ndarray,
                            n_valid: np.ndarray) -> np.ndarray:
@@ -216,55 +367,183 @@ class SlotPool:
         self.finished[row] = True
 
     def decode_chunk(self, n: int, rng: jax.Array
-                     ) -> Tuple[np.ndarray, jax.Array]:
+                     ) -> Tuple[np.ndarray, np.ndarray, jax.Array]:
         """Run one n-step device-resident decode chunk over the pool.
-        Returns (tokens (max_batch, n), next rng). The chunk scan donates
-        the pool cache; the returned cache replaces it atomically."""
-        toks, cur, finished, cache, rng = self.engine.pool_chunk_fn(n)(
+        Returns (tokens (max_batch, n), bad (max_batch,) non-finite-logits
+        flags, next rng). The chunk scan donates the pool cache; the
+        returned cache replaces it atomically."""
+        toks, cur, finished, bad, cache, rng = self.engine.pool_chunk_fn(n)(
             self.engine.params, jnp.asarray(self.cur),
             jnp.asarray(self.finished), self.cache, rng)
         self.cache = cache
         self.cur = np.array(cur)            # writable host copies
         self.finished = np.array(finished)
-        return np.asarray(toks), rng
+        return np.asarray(toks), np.asarray(bad), rng
 
 
 class Scheduler:
-    """FCFS continuous-batching scheduler: admit into free slots between
-    decode chunks, retire on EOS / per-request token budget, stream
-    completions. See the module docstring for the full contract."""
+    """SLO-aware continuous-batching scheduler: EDF-within-priority
+    admission, preemptive eviction with snapshot resume, bounded-queue
+    overload shedding, and fault quarantine/retry. With every knob at its
+    default (priority 0, no deadlines, unbounded queue, no injector) the
+    behavior is exactly the old FCFS scheduler. See the module docstring
+    for the full contract."""
 
     def __init__(self, engine, max_batch: int,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None, *,
+                 max_queue: Optional[int] = None,
+                 max_retries: int = 2,
+                 snapshot_chunks: int = 0,
+                 nan_guard: bool = True,
+                 fault_injector=None):
         self.engine = engine
         self.pool = SlotPool(engine, max_batch)
-        self.queue: deque[Request] = deque()
+        self.waiting: List[_QueueEntry] = []
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.stats = ScheduleStats()
+        self.max_queue = max_queue
+        self.max_retries = max_retries
+        # snapshot_chunks=k refreshes every occupied row's last-good
+        # snapshot each k-th executed chunk (0 = only capture on
+        # preemption; fault recovery then requeues from scratch)
+        self.snapshot_chunks = snapshot_chunks
+        self.nan_guard = nan_guard
+        self.fault_injector = fault_injector
+        self.shed: Dict[int, ShedResult] = {}
+        self.completed_at: Dict[int, int] = {}      # rid -> completion tick
+        self.snapshots: Dict[int, SlotSnapshot] = {}  # row -> last good
+        self._streamed: Dict[int, int] = {}  # rid -> on_token high-water
+        #                                      mark (a requeued request must
+        #                                      not re-stream tokens)
+        self._seq = 0
 
     def submit(self, request: Request) -> None:
-        self.queue.append(request)
+        """Queue a request. With `max_queue` set, submitting past the bound
+        sheds the entry EDF values least (possibly the incoming one) with
+        an explicit ShedResult — never silent unbounded queueing."""
+        entry = _QueueEntry(request=request, seq=self._seq)
+        self._seq += 1
+        if self.max_queue is not None and len(self.waiting) >= self.max_queue:
+            victim = max(self.waiting + [entry],
+                         key=lambda e: e.sort_key())
+            self._shed(victim, SHED_QUEUE_FULL)
+            if victim is entry:
+                return
+            self.waiting.remove(victim)
+        self.waiting.append(entry)
 
     # -- internals -------------------------------------------------------
 
-    def _admit_ready(self) -> None:
-        """Fill free slots with arrived requests (FCFS; later-arriving
-        requests never jump the queue). Monolithic mode prefills the whole
-        prompt here (one B=1 forward per request); chunked mode only claims
-        the slot — `_advance_prefill` streams the prompt in afterwards."""
-        free = self.pool.free_rows()
-        chunked = self.engine.prefill_chunk > 0
-        while free and self.queue \
-                and self.queue[0].arrival_chunk <= self.stats.ticks:
-            req = self.queue.popleft()
-            if chunked:
-                self.pool.begin_prefill(free.pop(0), req)
-                continue
+    def _shed(self, entry: _QueueEntry, reason: str) -> None:
+        sr = ShedResult(rid=entry.request.rid, reason=reason,
+                        tick=self.stats.ticks,
+                        priority=entry.request.priority)
+        self.shed[entry.request.rid] = sr
+        self.stats.sheds += 1
+
+    def _needed_ticks(self, entry: _QueueEntry) -> int:
+        """Optimistic lower bound on ticks to completion if admitted NOW:
+        remaining chunked-prefill rounds + remaining decode chunks. Used
+        only to shed provably-infeasible deadlines — an optimistic bound
+        never sheds a request that could still make it."""
+        req = entry.request
+        emitted = len(entry.snapshot.emitted) if entry.snapshot else 0
+        filled = entry.snapshot.filled if entry.snapshot \
+            else (len(req.tokens) if not self.engine.prefill_chunk else 0)
+        P = self.engine.prefill_chunk
+        prefill_rounds = 0
+        if P and filled < len(req.tokens):
+            c = self.engine._block()
+            nfull = (len(req.tokens) // c) * c
+            prefill_rounds = max(0, math.ceil((nfull - filled) / P))
+        decode_chunks = math.ceil(
+            max(0, req.max_new_tokens - emitted) / self.engine.decode_chunk)
+        return prefill_rounds + decode_chunks
+
+    def _arrived(self) -> List[_QueueEntry]:
+        """Waiting entries whose arrival time has passed, in EDF order,
+        with infeasible-deadline entries shed (the per-round feasibility
+        check)."""
+        tick = self.stats.ticks
+        arrived = [e for e in self.waiting
+                   if e.request.arrival_chunk <= tick]
+        arrived.sort(key=lambda e: e.sort_key())
+        feasible = []
+        for e in arrived:
+            dl = e.request.deadline_ticks
+            if dl is not None and tick + self._needed_ticks(e) > dl:
+                self.waiting.remove(e)
+                self._shed(e, SHED_DEADLINE_INFEASIBLE)
+            else:
+                feasible.append(e)
+        return feasible
+
+    def _admit_entry(self, row: int, entry: _QueueEntry) -> None:
+        """Place one entry into a free row: snapshot restore (verified by
+        checksum) for preempted/faulted entries, else a fresh prefill."""
+        self.waiting.remove(entry)
+        self.snapshots.pop(row, None)      # stale snapshot of a past tenant
+        if entry.snapshot is not None:
+            if entry.snapshot.verify():
+                self.pool.restore(row, entry.request, entry.snapshot)
+                slot = self.pool.slots[row]
+                slot.seq, slot.retries = entry.seq, entry.retries
+                return
+            # corrupt snapshot: detected BEFORE its bytes touch the pool;
+            # fall back to re-running from the prompt (byte-identical under
+            # greedy decode, just slower)
+            self.stats.snapshot_corruptions += 1
+            entry.snapshot = None
+        req = entry.request
+        if self.engine.prefill_chunk > 0:
+            self.pool.begin_prefill(row, req)
+        else:
             self.rng, sub = jax.random.split(self.rng)
             slot_cache, first = self.engine.prefill_request(req.tokens, sub)
             self.stats.prefill_forwards += 1      # one B=1 forward each
             self.stats.prefill_tokens += len(req.tokens)
-            self.pool.admit(free.pop(0), req, slot_cache, first)
+            self.pool.admit(row, req, slot_cache, first)
+        slot = self.pool.slots[row]
+        slot.seq, slot.retries = entry.seq, entry.retries
+
+    def _preempt_row(self, row: int) -> None:
+        """Evict `row` mid-stream: snapshot its state (chunk boundary, so
+        the state is clean) and requeue it with the snapshot attached."""
+        slot = self.pool.slots[row]
+        snap = self.pool.snapshot_rows([row], self.stats.ticks)[0]
+        self.stats.snapshots += 1
+        self.waiting.append(_QueueEntry(
+            request=slot.request, seq=slot.seq, snapshot=snap,
+            retries=slot.retries))
+        self.snapshots.pop(row, None)
+        self.pool.retire(row)
+        self.stats.preemptions += 1
+
+    def _admit_ready(self) -> None:
+        """Fill free slots with arrived requests in EDF-within-priority
+        order, then preempt: while the most urgent still-waiting arrival is
+        STRICTLY more urgent than the least-urgent occupied slot, evict
+        that slot (snapshot + requeue) and admit the arrival in its place.
+        Monolithic mode prefills the whole prompt here (one B=1 forward per
+        request); chunked mode only claims the slot — `_advance_prefill`
+        streams the prompt in afterwards."""
+        arrived = self._arrived()
+        for row in self.pool.free_rows():
+            if not arrived:
+                return
+            self._admit_entry(row, arrived.pop(0))
+        while arrived:
+            entry = arrived.pop(0)
+            occupied = self.pool.occupied_rows()
+            if not occupied:
+                break
+            victim = max(occupied,
+                         key=lambda r: _slot_sort_key(self.pool.slots[r]))
+            if _slot_sort_key(self.pool.slots[victim])[0] \
+                    <= entry.request.priority:
+                break                      # nothing strictly less urgent
+            self._preempt_row(victim)
+            self._admit_entry(victim, entry)
 
     def _advance_prefill(self) -> None:
         """Advance every PREFILLING slot by ONE chunk (the interleave
@@ -337,33 +616,93 @@ class Scheduler:
                                     sub))[0])
             self.pool.activate(row, first)
 
+    # -- faults ----------------------------------------------------------
+
+    def _capture_snapshots(self) -> None:
+        """Refresh every occupied row's last-good snapshot at this chunk
+        boundary (one padded gather for the whole pool)."""
+        rows = self.pool.occupied_rows()
+        if not rows:
+            return
+        for row, snap in zip(rows,
+                             self.pool.snapshot_rows(rows,
+                                                     self.stats.ticks)):
+            self.snapshots[row] = snap
+            self.stats.snapshots += 1
+
+    def _quarantine(self, row: int) -> None:
+        """Isolate a faulty row: discard its poisoned chunk, scrub the
+        row's cache (NaN must never linger where additive masks could leak
+        it), and requeue the request from its last good snapshot — or from
+        scratch when none exists. Bounded by `max_retries`; exhaustion
+        sheds the request explicitly. Neighbour rows are untouched."""
+        slot = self.pool.slots[row]
+        self.stats.quarantines += 1
+        snap = self.snapshots.pop(row, None)
+        if snap is not None and snap.rid != slot.request.rid:
+            snap = None                    # snapshot of a previous tenant
+        entry = _QueueEntry(request=slot.request, seq=slot.seq,
+                            snapshot=snap, retries=slot.retries + 1)
+        self.pool.retire(row)
+        self.pool.scrub_row(row)
+        if entry.retries > self.max_retries:
+            self._shed(entry, SHED_RETRIES_EXHAUSTED)
+            return
+        self.stats.retries += 1
+        self.waiting.append(entry)
+
+    def _collect_faults(self, bad: np.ndarray) -> Set[int]:
+        """Rows to quarantine after a chunk: non-finite-logits flags from
+        the device (the NaN guard) plus the injector's failure reports.
+        Only live DECODING rows can fault — masked ride-along rows' logits
+        are discarded anyway."""
+        faulted: Set[int] = set()
+        if self.nan_guard:
+            for row in np.flatnonzero(bad):
+                slot = self.pool.slots[row]
+                if slot is not None and slot.state == DECODING:
+                    faulted.add(int(row))
+        if self.fault_injector is not None:
+            for row in self.fault_injector.failed_rows(self.stats.chunks):
+                if self.pool.slots[row] is not None:
+                    faulted.add(int(row))
+        return faulted
+
     def _drain_chunk(self, toks: np.ndarray,
                      on_token: Optional[Callable[[int, int], None]],
                      on_complete: Optional[Callable[[int, List[int]], None]],
                      results: Dict[int, List[int]]) -> None:
         """Distribute a chunk's tokens to their requests; retire EOS'd /
-        budget-exhausted slots."""
+        budget-exhausted slots. A requeued request's already-streamed
+        tokens are not re-streamed (`_streamed` high-water mark)."""
         for row in range(self.pool.max_batch):
             slot = self.pool.slots[row]
             if slot is None or slot.state != DECODING:
                 continue                 # PREFILLING rows rode along masked
             done = False
+            rid = slot.request.rid
             budget = slot.request.max_new_tokens
             for tok in toks[row].tolist():
-                # budget check BEFORE appending: a ≤0 budget emits nothing
-                # (matching serve_static's gen[row, :0] truncation)
+                # budget check BEFORE appending: emit at most `budget`
                 if tok == EOS or len(slot.emitted) >= budget:
                     done = True
                     break
                 slot.emitted.append(tok)
-                if on_token is not None:
-                    on_token(slot.request.rid, tok)
+                if on_token is not None \
+                        and len(slot.emitted) > self._streamed.get(rid, 0):
+                    self._streamed[rid] = len(slot.emitted)
+                    on_token(rid, tok)
             if len(slot.emitted) >= budget:
                 done = True
             if done:
-                results[slot.request.rid] = slot.emitted
+                results[rid] = slot.emitted
+                self.completed_at[rid] = self.stats.ticks
+                dl = slot.request.deadline_ticks
+                if dl is not None and self.stats.ticks > dl:
+                    self.stats.deadline_misses += 1
                 if on_complete is not None:
-                    on_complete(slot.request.rid, slot.emitted)
+                    on_complete(rid, slot.emitted)
+                self.snapshots.pop(row, None)
                 self.pool.retire(row)
 
     # -- main loop -------------------------------------------------------
@@ -371,12 +710,14 @@ class Scheduler:
     def run(self,
             on_token: Optional[Callable[[int, int], None]] = None,
             on_complete: Optional[Callable[[int, List[int]], None]] = None,
-            ) -> Dict[int, List[int]]:
-        """Drive the pool until every submitted request completes. Returns
-        {rid: tokens} (tokens exclude EOS, capped at max_new_tokens)."""
-        results: Dict[int, List[int]] = {}
+            ) -> Dict[int, object]:
+        """Drive the pool until every submitted request completes or is
+        shed. Returns {rid: tokens} (tokens exclude EOS, capped at
+        max_new_tokens) with an explicit `ShedResult` in place of the token
+        list for rejected requests."""
+        results: Dict[int, object] = {}
         chunk = self.engine.decode_chunk
-        while self.queue or self.pool.occupancy:
+        while self.waiting or self.pool.occupancy:
             self._admit_ready()
             if self.engine.prefill_chunk:
                 self._advance_prefill()
@@ -387,10 +728,20 @@ class Scheduler:
                 # arrival_chunk requests become admissible
                 self.stats.idle_ticks += 1
                 continue
-            toks, self.rng = self.pool.decode_chunk(chunk, self.rng)
+            if self.snapshot_chunks and \
+                    self.stats.chunks % self.snapshot_chunks == 0:
+                self._capture_snapshots()
+            if self.fault_injector is not None:
+                self.fault_injector.before_chunk(self.pool, self.snapshots,
+                                                 self.stats.chunks)
+            toks, bad, self.rng = self.pool.decode_chunk(chunk, self.rng)
+            faulted = self._collect_faults(bad)
             self.stats.chunks += 1
             self.stats.row_steps += decoding * chunk
             self.stats.occupancy_sum += self.pool.occupancy \
                 / self.pool.max_batch
+            for row in sorted(faulted):
+                self._quarantine(row)      # retires the row: drain skips it
             self._drain_chunk(toks, on_token, on_complete, results)
+        results.update(self.shed)
         return results

@@ -1,0 +1,72 @@
+"""Host-side slot snapshots: the preemption / fault-recovery unit.
+
+A `SlotSnapshot` is everything needed to resume one request byte-identically
+on any free pool row: the row's cache leaves (host copies of the
+`_gather_rows` slice — O(c + M) per row thanks to the compressed prefix, not
+O(n)), the next un-emitted sampled token (`cur`), the finished flag, the
+emitted-token list, and the chunked-prefill progress (`state`, `filled`).
+
+Snapshots are always captured at a chunk boundary (between device-resident
+decode chunks), where a slot's state is clean: restoring the cache rows via
+`_scatter_rows` and re-entering the decode loop replays exactly the steps an
+uninterrupted run would have taken — greedy decode depends only on the
+row's own bytes (per-row masks), so preempt -> requeue -> resume is
+byte-identical (tests/test_serving_scheduler.py::TestPreemption).
+
+Integrity: `checksum` is a CRC32 over the cache-row bytes, computed at
+capture. `verify()` recomputes it at restore time — a corrupted snapshot
+(bit-rot, a buggy transport, or the fault injector's `snapshot_corrupt`
+fault) is detected *before* its bytes reach the pool, and the scheduler
+falls back to re-running the request from its prompt (greedy decode makes
+that fallback byte-identical too, just slower).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List
+
+import numpy as np
+
+
+def cache_rows_checksum(cache_rows: Dict[str, np.ndarray]) -> int:
+    """CRC32 over the snapshot's cache bytes (key order fixed by sort)."""
+    crc = 0
+    for key in sorted(cache_rows):
+        leaf = np.ascontiguousarray(cache_rows[key])
+        crc = zlib.crc32(leaf.tobytes(), crc)
+    return crc
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """Resume state for one request, captured at a chunk boundary."""
+
+    rid: int
+    state: str                         # scheduler slot state at capture
+    filled: int                        # prompt tokens committed (chunked)
+    cur: int                           # next un-emitted sampled token
+    finished: bool                     # EOS already sampled into `cur`
+    emitted: List[int]                 # tokens emitted up to the boundary
+    cache_rows: Dict[str, np.ndarray]  # host copies, batch-of-1 leaves
+    checksum: int                      # CRC32 of cache_rows at capture
+    tick: int                          # virtual time of capture
+
+    def verify(self) -> bool:
+        """True iff the cache bytes still match the capture-time checksum."""
+        return cache_rows_checksum(self.cache_rows) == self.checksum
+
+    @property
+    def nbytes(self) -> int:
+        return sum(v.nbytes for v in self.cache_rows.values())
+
+
+def capture(rid: int, state: str, filled: int, cur: int, finished: bool,
+            emitted: List[int], cache_rows: Dict[str, np.ndarray],
+            tick: int) -> SlotSnapshot:
+    """Build a snapshot, owning copies of the mutable pieces."""
+    rows = {k: np.array(v) for k, v in cache_rows.items()}
+    return SlotSnapshot(rid=rid, state=state, filled=filled, cur=int(cur),
+                        finished=bool(finished), emitted=list(emitted),
+                        cache_rows=rows,
+                        checksum=cache_rows_checksum(rows), tick=tick)

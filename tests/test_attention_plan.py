@@ -308,6 +308,64 @@ def test_serving_engine_chunked_prefill_on_tp_mesh():
 
 
 @pytest.mark.slow
+def test_serving_snapshot_roundtrip_on_tp_mesh():
+    """Preemption on a tp=2 mesh: slot snapshots gather from the SHARDED
+    pool cache, restores scatter back into it, and the whole
+    preempt -> requeue -> resume cycle is byte-identical to the
+    single-device engine. After restores the pool must still carry the
+    plan's layout (per-shard slots on the KV-head axis) — snapshot
+    round-trips preserve sharding exactly as donation does."""
+    out = run_py(_COMMON + """
+        from repro.serving.engine import ServingEngine
+        from repro.serving.faults import Fault, FaultInjector
+        cfg = cfg_(2)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompts = [[5, 6, 7] * 6, [9, 10] * 8, [3] * 21, [8] * 4,
+                   [11, 4] * 5, [2, 3, 4] * 4]
+        budgets = [16, 16, 16, 6, 6, 6]   # low-pri long, hi-pri short
+        kw = dict(max_batch=2, priorities=[3, 3, 3, 0, 0, 0],
+                  arrival_chunks=[0, 0, 0, 1, 1, 2],
+                  return_scheduler=True)
+        one = ServingEngine(params, cfg, max_seq=64, decode_chunk=4,
+                            prefill_chunk=16)
+        out1, s1 = one.serve(prompts, budgets, **kw)
+        assert s1.stats.preemptions > 0, s1.stats
+        mesh = make_local_mesh(model_shards=2)
+        ctx = ParallelCtx(mesh=mesh)
+        with mesh:
+            two = ServingEngine(params, cfg, max_seq=64, ctx=ctx,
+                                decode_chunk=4, prefill_chunk=16)
+            out2, s2 = two.serve(prompts, budgets, **kw)
+            assert s2.stats.preemptions == s1.stats.preemptions
+            # a fault-recovery restore also round-trips the sharded pool
+            inj = FaultInjector([Fault("slot_step", chunk=1, row=0)])
+            out3, s3 = two.serve(prompts, budgets, max_batch=2,
+                                 snapshot_chunks=1, fault_injector=inj,
+                                 return_scheduler=True)
+            assert s3.stats.quarantines == 1
+            # primitive-level: gather -> host -> scatter round-trips the
+            # sharded pool byte-exactly AND restores the plan's layout
+            pool = two.init_pool_cache(2)
+            spec0 = pool["comp_k"].sharding.spec
+            assert spec0[-2] == "model", spec0
+            snap = two.snapshot_pool_rows(pool, [0, 1], pad_to=2)
+            pool = two.restore_pool_rows(
+                pool, {k: jnp.asarray(v) for k, v in snap[0].items()}, 0)
+            assert pool["comp_k"].sharding.spec == spec0, \\
+                pool["comp_k"].sharding.spec
+            back = two.snapshot_pool_rows(pool, [0, 1], pad_to=2)
+            for a, b in zip(snap, back):
+                for key in a:
+                    np.testing.assert_array_equal(a[key], b[key])
+        assert out1 == out2, (out1, out2)
+        plain = one.serve(prompts, budgets, max_batch=2)
+        assert out3 == plain, (out3, plain)
+        print("DONE")
+        """)
+    assert "DONE" in out
+
+
+@pytest.mark.slow
 def test_mesh_validation_indivisible_hkv():
     """tp that does not divide Hkv: strict validation raises the clear
     launch/mesh.py error; plan resolution warns and demotes attention to

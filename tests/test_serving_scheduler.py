@@ -11,7 +11,8 @@ from repro.configs.base import AttentionConfig, LinformerConfig, ModelConfig
 from repro.core.cache import (compressed_decode_attention,
                               full_decode_attention, init_compressed_cache)
 from repro.models import model as M
-from repro.serving import Request, Scheduler, ServingEngine, SlotPool
+from repro.serving import (Request, Scheduler, ServingEngine, ShedResult,
+                           SlotPool)
 
 
 def _tiny_cfg(max_seq=64):
@@ -33,12 +34,15 @@ def _tiny_cfg(max_seq=64):
     )
 
 
-def _engine(max_seq=64, decode_chunk=4, temperature=0.0):
+def _engine(max_seq=64, decode_chunk=4, temperature=0.0, backend=None,
+            prefill_chunk=0):
     cfg = _tiny_cfg(max_seq)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(params, cfg, max_seq=max_seq,
                         cache_dtype=jnp.float32, temperature=temperature,
-                        decode_chunk=decode_chunk)
+                        decode_chunk=decode_chunk,
+                        attention_backend=backend,
+                        prefill_chunk=prefill_chunk)
     return eng, cfg, params
 
 
@@ -249,15 +253,16 @@ class TestSchedulerMechanics:
         with pytest.raises(ValueError, match="max_seq"):
             eng.serve_static([[1] * 24], max_new_tokens=16, max_batch=2)
 
-    def test_zero_budget_matches_static(self):
-        """max_new_tokens=0 emits nothing on both schedulers."""
+    def test_zero_budget_rejected(self):
+        """max_new_tokens <= 0 fails fast at submission on both schedulers
+        (a request that can emit nothing is a caller bug, not a no-op)."""
         eng, _, _ = _engine()
         prompts, _ = _requests(3, seed=15)
         budgets = [0, 4, 0]
-        cont = eng.serve(prompts, budgets, max_batch=2)
-        static = eng.serve_static(prompts, budgets, max_batch=2)
-        assert cont == static
-        assert cont[0] == [] and cont[2] == []
+        with pytest.raises(ValueError, match="request 0.*max_new_tokens"):
+            eng.serve(prompts, budgets, max_batch=2)
+        with pytest.raises(ValueError, match="request 0.*max_new_tokens"):
+            eng.serve_static(prompts, budgets, max_batch=2)
 
     def test_pool_requires_per_row_lengths(self):
         """Model families with a shared scalar cache can't pool-schedule."""
@@ -285,3 +290,150 @@ class TestSchedulerMechanics:
         assert first == second
         # the owner's cache is live (donation replaced, not invalidated)
         assert np.asarray(sched.pool.cache["lengths"]).shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# Preemption: evict-and-requeue with byte-identical resume
+# ---------------------------------------------------------------------------
+
+
+class TestPreemption:
+    @pytest.mark.parametrize("backend", ["reference", "fused"])
+    def test_preempt_resume_byte_identical(self, backend):
+        """Property test: low-priority requests running first, high-priority
+        arrivals displacing them mid-stream, shuffled submission order — a
+        preempted request's snapshot-restored resume must be byte-identical
+        to an uninterrupted run (the static baseline), on both kernel
+        backends."""
+        eng, _, _ = _engine(backend=backend)
+        prompts, budgets = _requests(8, seed=21)
+        static = eng.serve_static(prompts, budgets, max_batch=4)
+        order = list(np.random.default_rng(2).permutation(len(prompts)))
+        out, sched = eng.serve(
+            [prompts[i] for i in order], [budgets[i] for i in order],
+            max_batch=2,
+            # late arrivals are strictly more urgent: they must preempt
+            priorities=[3, 3, 3, 3, 0, 0, 0, 0],
+            arrival_chunks=[0, 0, 0, 0, 2, 2, 3, 3],
+            return_scheduler=True)
+        assert sched.stats.preemptions > 0
+        for j, i in enumerate(order):
+            assert out[j] == static[i], f"request {i} diverged"
+
+    def test_one_slot_pool_preemption(self):
+        """Degenerate 1-slot pool: every high-priority arrival preempts THE
+        slot; the victim bounces back and forth and must still finish
+        byte-identically."""
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(4, seed=23)
+        static = eng.serve_static(prompts, budgets, max_batch=4)
+        out, sched = eng.serve(prompts, budgets, max_batch=1,
+                               priorities=[2, 1, 1, 0],
+                               arrival_chunks=[0, 1, 2, 3],
+                               return_scheduler=True)
+        assert sched.stats.preemptions > 0
+        assert out == static
+
+    def test_chunked_prefill_preemption(self):
+        """A PREFILLING slot can be preempted mid-prompt; its snapshot
+        carries the prefill progress and resumes without re-reading
+        committed chunks."""
+        eng, _, _ = _engine(prefill_chunk=8)
+        prompts, budgets = _requests(8, seed=25)
+        static = eng.serve_static(prompts, budgets, max_batch=4)
+        out, sched = eng.serve(prompts, budgets, max_batch=2,
+                               priorities=[3, 3, 2, 2, 1, 1, 0, 0],
+                               arrival_chunks=[0, 0, 1, 1, 2, 2, 3, 3],
+                               return_scheduler=True)
+        assert sched.stats.preemptions > 0
+        assert out == static
+
+    def test_equal_priority_never_preempts(self):
+        """Preemption needs STRICT urgency: same-priority arrivals wait for
+        a free slot (no thrash between peers)."""
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(6, seed=27)
+        out, sched = eng.serve(prompts, budgets, max_batch=2,
+                               priorities=[1] * 6,
+                               arrival_chunks=[0, 0, 1, 2, 3, 4],
+                               return_scheduler=True)
+        assert sched.stats.preemptions == 0
+        assert out == eng.serve_static(prompts, budgets, max_batch=4)
+
+
+# ---------------------------------------------------------------------------
+# SLO scheduling: EDF ordering, bounded queue, deadlines
+# ---------------------------------------------------------------------------
+
+
+class TestSLOScheduling:
+    def test_priority_classes_order_admission(self):
+        """With one slot and simultaneous arrivals, admission follows
+        priority classes (then submission order)."""
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(4, seed=31)
+        completed = []
+        eng.serve(prompts, budgets, max_batch=1,
+                  priorities=[2, 0, 1, 0],
+                  on_complete=lambda rid, toks: completed.append(rid))
+        assert completed == [1, 3, 2, 0]
+
+    def test_edf_within_class(self):
+        """Same priority: the earlier deadline runs first."""
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(3, seed=33)
+        completed = []
+        eng.serve(prompts, budgets, max_batch=1,
+                  deadlines=[None, 50, 200],
+                  on_complete=lambda rid, toks: completed.append(rid))
+        assert completed[0] == 1          # deadline 50 beats 200 and None
+
+    def test_bounded_queue_sheds_least_urgent(self):
+        """Submissions beyond max_queue shed the least-valued entry with an
+        explicit ShedResult — never silent unbounded queueing — and every
+        admitted request still completes byte-identically."""
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(8, seed=35)
+        static = eng.serve_static(prompts, budgets, max_batch=4)
+        out, sched = eng.serve(prompts, budgets, max_batch=2, max_queue=3,
+                               priorities=[0, 0, 1, 1, 2, 2, 2, 2],
+                               return_scheduler=True)
+        shed = [o for o in out if isinstance(o, ShedResult)]
+        assert shed and sched.stats.sheds == len(shed)
+        assert all(o.reason == "queue_full" for o in shed)
+        # shedding picks the least-valued entry KNOWN AT SUBMIT TIME, so
+        # later low-priority arrivals can't retroactively save an earlier
+        # victim — but the most urgent class is never shed
+        assert all(o.priority >= 1 for o in shed)
+        for o, s in zip(out, static):
+            assert isinstance(o, ShedResult) or o == s
+
+    def test_infeasible_deadline_shed_not_admitted(self):
+        """A deadline that cannot be met even by the optimistic estimate is
+        shed at admission, not admitted to fail."""
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(2, seed=37)
+        out, sched = eng.serve(prompts, budgets, max_batch=2,
+                               deadlines=[None, 0],
+                               return_scheduler=True)
+        assert isinstance(out[1], ShedResult)
+        assert out[1].reason == "deadline_infeasible"
+        assert sched.stats.deadline_misses == 0
+
+    def test_deadline_met_not_counted_missed(self):
+        """Generous deadlines complete with zero misses and no sheds."""
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(4, seed=39)
+        out, sched = eng.serve(prompts, budgets, max_batch=4,
+                               deadlines=[1000] * 4,
+                               return_scheduler=True)
+        assert sched.stats.deadline_misses == 0
+        assert sched.stats.sheds == 0
+        assert out == eng.serve_static(prompts, budgets, max_batch=4)
+
+    def test_counters_line_mentions_every_counter(self):
+        stats = Scheduler(_engine()[0], max_batch=1).stats
+        line = stats.counters_line()
+        for name in ("preemptions", "sheds", "deadline_misses", "retries",
+                     "quarantines"):
+            assert name in line
