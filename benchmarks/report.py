@@ -3,18 +3,50 @@ the dry-run artifacts, plus a summary of the committed BENCH_*.json
 perf-trajectory records (both serving traces, decode throughput, ...).
 
     PYTHONPATH=src python -m benchmarks.report [--mesh 16x16] [--tag TAG]
+    PYTHONPATH=src python -m benchmarks.report --trace overload.json \
+        --trace-metrics overload.jsonl
+
+A missing or malformed input artifact (a BENCH_*.json that isn't valid
+JSON, a record without its required fields, an unreadable trace) is a
+hard error: a clear message on stderr and exit code 1, never a silently
+truncated report.
+
+``--trace`` summarizes a Chrome-trace/Perfetto JSON exported by the
+telemetry subsystem (top spans by total duration, instant-event counts);
+``--trace-metrics`` summarizes a metrics JSONL dump (per-priority
+TTFT/TPOT/queue-wait percentiles reconstructed from the exported
+histogram buckets via `repro.telemetry.percentile_from_cumulative`, plus
+shed/preemption counters). See docs/observability.md.
 """
 from __future__ import annotations
 
 import argparse
 import glob
 import json
+import math
 import os
 import sys
 from collections import defaultdict
 
 from benchmarks.common import REPO_ROOT
 from benchmarks.roofline import load_records
+from repro.telemetry import percentile_from_cumulative
+
+
+class BenchJsonError(Exception):
+    """An input artifact (BENCH_*.json, trace, metrics dump) is missing,
+    unreadable, or structurally malformed."""
+
+
+def load_json_artifact(path: str):
+    """Read one JSON input or raise BenchJsonError with a usable message."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        raise BenchJsonError(f"cannot read {path}: {e}") from e
+    except json.JSONDecodeError as e:
+        raise BenchJsonError(f"malformed JSON in {path}: {e}") from e
 
 
 def gib(b):
@@ -39,82 +71,219 @@ HEADER = ("| arch | shape | attn | FLOPs/dev | mem GiB/dev | compute s "
           "|---|---|---|---|---|---|---|---|---|---|---|")
 
 
-def bench_json_summary(out=None):
+def bench_json_summary(out=None, bench_dir=None):
     """Pretty-print the committed BENCH_*.json records. The serving record
     carries THREE traces: `mixed` (continuous vs static scheduling),
     `long_prompt` (chunked vs monolithic admission prefill), and
     `overload` (2x-oversubscribed SLO trace: sheds, preemptions,
     high-priority deadline latency). Written to stderr by default so
     `report > section.md` (the EXPERIMENTS.md workflow) keeps only the
-    tables on stdout."""
+    tables on stdout. A malformed record raises BenchJsonError."""
     out = out if out is not None else sys.stderr
     print_ = lambda *a: print(*a, file=out)
-    paths = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
+    bench_dir = bench_dir if bench_dir is not None else REPO_ROOT
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
     if not paths:
         return
     print_("\n### Committed perf trajectory (BENCH_*.json)\n")
     for path in paths:
         name = os.path.basename(path)[len("BENCH_"):-len(".json")]
-        with open(path) as f:
-            rec = json.load(f)
+        rec = load_json_artifact(path)
+        if not isinstance(rec, dict):
+            raise BenchJsonError(f"{path}: expected a JSON object, got "
+                                 f"{type(rec).__name__}")
         print_(f"* **{name}**")
-        if name == "serving":
-            mixed = rec.get("mixed")
-            if mixed:
-                print_(f"  * mixed trace ({mixed['mode']}): continuous "
-                      f"{mixed['continuous']['tok_per_s']} tok/s vs static "
-                      f"{mixed['static']['tok_per_s']} tok/s "
-                      f"({mixed['speedup']}x, occupancy "
-                      f"{mixed['continuous']['mean_occupancy']})")
-            lp = rec.get("long_prompt")
-            if lp:
-                print_(f"  * long-prompt trace ({lp['mode']}, lens "
-                      f"{lp['long_prompt_lens']}, chunk "
-                      f"{lp['prefill_chunk']}): chunked vs monolithic "
-                      f"admission {lp['speedup_cold']}x cold / "
-                      f"{lp['speedup_warm']}x warm "
-                      f"({lp['chunked']['tok_per_s_cold']} vs "
-                      f"{lp['monolithic']['tok_per_s_cold']} tok/s cold)")
-            ov = rec.get("overload")
-            if ov:
-                hi = ov["high_priority"]
-                print_(f"  * overload trace ({ov['mode']}, "
-                      f"{ov['oversubscription']}x oversubscribed, queue "
-                      f"bound {ov['max_queue']}): {ov['sheds']} sheds "
-                      f"{ov['shed_reasons']}, {ov['preemptions']} "
-                      f"preemptions; high-priority {hi['completed']}/"
-                      f"{hi['n']} completed, p50 latency "
-                      f"{hi['p50_latency_ticks']} ticks, "
-                      f"{hi['deadline_misses']} deadline misses "
-                      f"(occupancy {ov['mean_occupancy']})")
-        elif name == "train_step":
-            sh = rec.get("shape", {})
-            print_(f"  * train step ({rec['mode']}, S={sh.get('seq')}, "
-                   f"{sh.get('slots_total')} compressed slots): fused "
-                   f"backward {rec['step_ms_fused']}ms vs "
-                   f"reference-recompute {rec['step_ms_reference']}ms "
-                   f"({rec['speedup_fused_over_reference']}x)")
-            mrec = rec.get("mesh")
-            if mrec:
-                print_(f"  * sharded plan ({mrec['spec']}, "
-                       f"{mrec['devices']} forced host devices, "
-                       f"S={mrec['shape'].get('seq')}): "
-                       f"{mrec['step_ms_sharded']}ms sharded vs "
-                       f"{mrec['step_ms_single_shard']}ms single-shard "
-                       f"({mrec['sharded_over_single']}x on this CPU "
-                       f"container; meaningful scaling needs real chips)")
-        else:
-            scalars = {k: v for k, v in rec.items()
-                       if not isinstance(v, (dict, list))}
-            print_(f"  * {json.dumps(scalars, sort_keys=True)}")
+        try:
+            _summarize_bench_record(name, rec, print_)
+        except (KeyError, TypeError) as e:
+            raise BenchJsonError(
+                f"{path}: record is missing/miswired field {e!r} — "
+                f"regenerate it with the matching benchmark") from e
 
 
-def main():
+def _summarize_bench_record(name, rec, print_):
+    if name == "serving":
+        mixed = rec.get("mixed")
+        if mixed:
+            print_(f"  * mixed trace ({mixed['mode']}): continuous "
+                   f"{mixed['continuous']['tok_per_s']} tok/s vs static "
+                   f"{mixed['static']['tok_per_s']} tok/s "
+                   f"({mixed['speedup']}x, occupancy "
+                   f"{mixed['continuous']['mean_occupancy']})")
+        lp = rec.get("long_prompt")
+        if lp:
+            print_(f"  * long-prompt trace ({lp['mode']}, lens "
+                   f"{lp['long_prompt_lens']}, chunk "
+                   f"{lp['prefill_chunk']}): chunked vs monolithic "
+                   f"admission {lp['speedup_cold']}x cold / "
+                   f"{lp['speedup_warm']}x warm "
+                   f"({lp['chunked']['tok_per_s_cold']} vs "
+                   f"{lp['monolithic']['tok_per_s_cold']} tok/s cold)")
+        ov = rec.get("overload")
+        if ov:
+            hi = ov["high_priority"]
+            print_(f"  * overload trace ({ov['mode']}, "
+                   f"{ov['oversubscription']}x oversubscribed, queue "
+                   f"bound {ov['max_queue']}): {ov['sheds']} sheds "
+                   f"{ov['shed_reasons']}, {ov['preemptions']} "
+                   f"preemptions; high-priority {hi['completed']}/"
+                   f"{hi['n']} completed, p50 latency "
+                   f"{hi['p50_latency_ticks']} ticks, "
+                   f"{hi['deadline_misses']} deadline misses "
+                   f"(occupancy {ov['mean_occupancy']})")
+    elif name == "train_step":
+        sh = rec.get("shape", {})
+        print_(f"  * train step ({rec['mode']}, S={sh.get('seq')}, "
+               f"{sh.get('slots_total')} compressed slots): fused "
+               f"backward {rec['step_ms_fused']}ms vs "
+               f"reference-recompute {rec['step_ms_reference']}ms "
+               f"({rec['speedup_fused_over_reference']}x)")
+        mrec = rec.get("mesh")
+        if mrec:
+            print_(f"  * sharded plan ({mrec['spec']}, "
+                   f"{mrec['devices']} forced host devices, "
+                   f"S={mrec['shape'].get('seq')}): "
+                   f"{mrec['step_ms_sharded']}ms sharded vs "
+                   f"{mrec['step_ms_single_shard']}ms single-shard "
+                   f"({mrec['sharded_over_single']}x on this CPU "
+                   f"container; meaningful scaling needs real chips)")
+    else:
+        scalars = {k: v for k, v in rec.items()
+                   if not isinstance(v, (dict, list))}
+        print_(f"  * {json.dumps(scalars, sort_keys=True)}")
+
+
+def trace_summary(path, out=None, top=10):
+    """Summarize a telemetry Chrome-trace JSON: top span families by total
+    duration, instant-event counts, dropped-event metadata."""
+    out = out if out is not None else sys.stdout
+    print_ = lambda *a: print(*a, file=out)
+    doc = load_json_artifact(path)
+    events = doc.get("traceEvents") if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        raise BenchJsonError(f"{path}: no traceEvents array — not a "
+                             "telemetry trace export")
+    spans = defaultdict(lambda: [0, 0.0, 0.0])   # name -> [n, total_us, max]
+    instants = defaultdict(int)
+    for e in events:
+        if not isinstance(e, dict) or "ph" not in e:
+            raise BenchJsonError(f"{path}: event without 'ph' — not a "
+                                 "Chrome-trace event stream")
+        if e["ph"] == "X":
+            s = spans[e.get("name", "?")]
+            s[0] += 1
+            s[1] += e.get("dur", 0.0)
+            s[2] = max(s[2], e.get("dur", 0.0))
+        elif e["ph"] == "i":
+            instants[e.get("name", "?")] += 1
+    meta = doc.get("metadata", {}) if isinstance(doc, dict) else {}
+    print_(f"\n### Trace summary: {path}\n")
+    if meta:
+        print_(f"* metadata: {json.dumps(meta, sort_keys=True)}")
+    print_(f"* {sum(s[0] for s in spans.values())} spans "
+           f"({len(spans)} families), "
+           f"{sum(instants.values())} instants ({len(instants)} kinds)")
+    print_(f"\n| span | count | total ms | mean ms | max ms |\n"
+           f"|---|---|---|---|---|")
+    ranked = sorted(spans.items(), key=lambda kv: -kv[1][1])[:top]
+    for name, (n, tot, mx) in ranked:
+        print_(f"| {name} | {n} | {tot / 1e3:.3f} | {tot / 1e3 / n:.3f} "
+               f"| {mx / 1e3:.3f} |")
+    if instants:
+        print_("\n* instants: " + ", ".join(
+            f"{k}×{v}" for k, v in sorted(instants.items())))
+
+
+def _percentiles_from_record(rec):
+    """(p50, p90, p99) reconstructed from an exported histogram record's
+    cumulative buckets — the same math the live registry uses."""
+    cum = [(math.inf if le == "+Inf" else float(le), c)
+           for le, c in rec["buckets"]]
+    lo = rec.get("min", math.inf)
+    hi = rec.get("max", -math.inf)
+    return tuple(percentile_from_cumulative(cum, rec["count"], p, lo, hi)
+                 for p in (50, 90, 99))
+
+
+def metrics_summary(path, out=None):
+    """Summarize a telemetry metrics JSONL dump: per-priority serving SLO
+    percentiles (reconstructed from the exported buckets) and the
+    shed/preemption/deadline counters."""
+    out = out if out is not None else sys.stdout
+    print_ = lambda *a: print(*a, file=out)
+    slo = ("serving_queue_wait_ticks", "serving_ttft_ticks",
+           "serving_ttft_ms", "serving_tpot_ms",
+           "serving_deadline_slack_ticks", "train_step_ms")
+    hists, counters = [], []
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError as e:
+        raise BenchJsonError(f"cannot read {path}: {e}") from e
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise BenchJsonError(
+                f"malformed JSONL in {path} line {i + 1}: {e}") from e
+        if rec.get("type") == "histogram" and rec.get("metric") in slo:
+            hists.append(rec)
+        elif rec.get("type") == "counter" and (
+                "shed" in rec.get("metric", "")
+                or "preempt" in rec.get("metric", "")
+                or "deadline" in rec.get("metric", "")
+                or "quarantin" in rec.get("metric", "")):
+            counters.append(rec)
+    print_(f"\n### Metrics summary: {path}\n")
+    if hists:
+        print_("| metric | labels | run | count | p50 | p90 | p99 |\n"
+               "|---|---|---|---|---|---|---|")
+        for rec in hists:
+            if not rec.get("count"):
+                continue
+            p50, p90, p99 = _percentiles_from_record(rec)
+            labels = ",".join(f"{k}={v}"
+                              for k, v in sorted(rec["labels"].items()))
+            print_(f"| {rec['metric']} | {labels or '-'} "
+                   f"| {rec.get('run', '-')} | {rec['count']} "
+                   f"| {p50:.2f} | {p90:.2f} | {p99:.2f} |")
+    for rec in counters:
+        if not rec.get("value"):
+            continue
+        labels = ",".join(f"{k}={v}"
+                          for k, v in sorted(rec["labels"].items()))
+        print_(f"* {rec['metric']}{{{labels}}} = {rec['value']:g} "
+               f"({rec.get('run', '-')})")
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--tag", default="")
-    args = ap.parse_args()
-    bench_json_summary()
+    ap.add_argument("--bench-dir", default=None,
+                    help="directory holding the BENCH_*.json records "
+                         "(default: repo root)")
+    ap.add_argument("--trace", default=None,
+                    help="summarize this telemetry Chrome-trace JSON "
+                         "(top spans, instant counts)")
+    ap.add_argument("--trace-metrics", default=None,
+                    help="summarize this telemetry metrics JSONL "
+                         "(per-priority TTFT/TPOT percentiles, SLO "
+                         "counters)")
+    args = ap.parse_args(argv)
+    try:
+        if args.trace:
+            trace_summary(args.trace)
+        if args.trace_metrics:
+            metrics_summary(args.trace_metrics)
+        if args.trace or args.trace_metrics:
+            return
+        bench_json_summary(bench_dir=args.bench_dir)
+    except BenchJsonError as e:
+        print(f"[report] ERROR: {e}", file=sys.stderr)
+        sys.exit(1)
 
     for mesh in ([args.mesh] if args.mesh else ["16x16", "2x16x16"]):
         recs = load_records(mesh=mesh, tag=args.tag)

@@ -123,7 +123,7 @@ def _eos_free_setup(n_requests, long_budget, short_budget, max_seq,
     raise RuntimeError("no EOS-free serving trace found in 16 seeds")
 
 
-def run_mixed(quick: bool = True) -> dict:
+def run_mixed(quick: bool = True, telemetry=None) -> dict:
     if quick:
         n_requests, pool, long_b, short_b, chunk = 8, 4, 24, 6, 6
         iters = 3
@@ -166,9 +166,12 @@ def run_mixed(quick: bool = True) -> dict:
     occ = sched.stats.mean_occupancy
 
     # replay with the Poisson-ish arrival trace: occupancy under staggered
-    # arrivals instead of an instantaneous backlog
+    # arrivals instead of an instantaneous backlog (this is the run that
+    # carries the trace when --trace-out is set — the timed runs above stay
+    # un-instrumented so the recorded walls are never perturbed)
     _, sched_arr = eng.serve(prompts, budgets, max_batch=pool,
-                             arrival_chunks=arrivals, return_scheduler=True)
+                             arrival_chunks=arrivals, return_scheduler=True,
+                             telemetry=telemetry)
 
     emit(f"serving_throughput/static/n{n_requests}",
          t_static / n_tok * 1e6, f"tok_per_s={tok_s_static:.1f}")
@@ -327,7 +330,14 @@ def _overload_trace(quick: bool, seed: int = 0):
     stream of high-priority, deadline-carrying arrivals. The point is
     graceful degradation: the bounded queue must shed part of the backlog
     EXPLICITLY (no silent unbounded queueing) while the high-priority
-    requests preempt their way in and meet their deadlines."""
+    requests preempt their way in and meet their deadlines.
+
+    Two mid-priority requests carry a deadline their own budget makes
+    impossible (deadline < needed decode chunks): the feasibility check
+    must shed them at admission as `deadline_infeasible` — the scheduler
+    converts what would be a certain deadline miss into an early, explicit
+    rejection, and the telemetry gate (scripts/check_trace.py) asserts the
+    exported trace records exactly that."""
     rng = np.random.default_rng(seed)
     if quick:
         pool, dchunk = 4, 4
@@ -355,15 +365,26 @@ def _overload_trace(quick: bool, seed: int = 0):
         arrivals.append(a)
         prios.append(0)
         deadlines.append(a + hi_margin)
+    n_inf = 2
+    for _ in range(n_inf):                    # provably-infeasible deadlines
+        prompts.append(list(rng.integers(4, 512, 8)))
+        budgets.append(low_b)                 # needs low_b/dchunk chunks...
+        arrivals.append(1)
+        prios.append(1)
+        deadlines.append(2)                   # ...but the deadline is 1 away
+    # widen the queue by the infeasible entries: at submit they displace
+    # backlog entries (they outrank priority 2), and without the slack the
+    # thinned backlog would leave free slots — no preemption leg left
+    max_queue += n_inf
     max_seq = max(len(p) + b for p, b in zip(prompts, budgets)) + dchunk
     max_seq = ((max_seq + 7) // 8) * 8
     n_hi = len(hi_arrivals)
     return (prompts, budgets, arrivals, prios, deadlines,
             dict(pool=pool, dchunk=dchunk, max_queue=max_queue,
-                 max_seq=max_seq, n_low=n_low, n_hi=n_hi))
+                 max_seq=max_seq, n_low=n_low, n_hi=n_hi, n_inf=n_inf))
 
 
-def run_overload(quick: bool = True) -> dict:
+def run_overload(quick: bool = True, telemetry=None) -> dict:
     # EOS-free seed (same trick as the mixed trace): every request must run
     # its full budget, so the low-priority backlog genuinely occupies its
     # slots and the high-priority stream can only get in by preempting.
@@ -384,7 +405,7 @@ def run_overload(quick: bool = True) -> dict:
     outs, sched = eng.serve(prompts, budgets, max_batch=p["pool"],
                             arrival_chunks=arrivals, priorities=prios,
                             deadlines=deadlines, max_queue=p["max_queue"],
-                            return_scheduler=True)
+                            return_scheduler=True, telemetry=telemetry)
 
     from repro.serving import ShedResult
     shed = [o for o in outs if isinstance(o, ShedResult)]
@@ -403,6 +424,8 @@ def run_overload(quick: bool = True) -> dict:
     assert len(shed) > 0, "overload trace must shed (bounded queue)"
     assert not hi_shed, f"high-priority requests were shed: {hi_shed}"
     assert hi_misses == 0, f"{hi_misses} high-priority deadline misses"
+    assert reasons.get("deadline_infeasible", 0) == p["n_inf"], \
+        f"expected {p['n_inf']} deadline_infeasible sheds, got {reasons}"
 
     emit("serving_throughput/overload/sheds", 0.0,
          f"sheds={len(shed)},preemptions={sched.stats.preemptions}")
@@ -414,7 +437,8 @@ def run_overload(quick: bool = True) -> dict:
         "mode": "smoke" if quick else "full",
         "n_requests": len(prompts),
         "slot_pool": p["pool"],
-        "oversubscription": round((n_low + p["n_hi"]) / p["pool"], 1),
+        "oversubscription": round((n_low + p["n_hi"] + p["n_inf"])
+                                  / p["pool"], 1),
         "max_queue": p["max_queue"],
         "sheds": len(shed),
         "shed_reasons": reasons,
@@ -430,14 +454,14 @@ def run_overload(quick: bool = True) -> dict:
     }
 
 
-def run(quick: bool = True, trace: str = "both"):
+def run(quick: bool = True, trace: str = "both", telemetry=None):
     payload = {}
     if trace in ("mixed", "both"):
-        payload["mixed"] = run_mixed(quick)
+        payload["mixed"] = run_mixed(quick, telemetry=telemetry)
     if trace in ("long_prompt", "both"):
         payload["long_prompt"] = run_long_prompt(quick)
     if trace in ("overload", "both"):
-        payload["overload"] = run_overload(quick)
+        payload["overload"] = run_overload(quick, telemetry=telemetry)
     if trace == "both":
         # the committed perf record carries BOTH traces; selective runs
         # print CSV only so a partial run can't clobber the artifact
@@ -451,8 +475,26 @@ if __name__ == "__main__":
                     help="fast mode for the scripts/check.sh smoke gate")
     ap.add_argument("--trace", default="both",
                     choices=["mixed", "long_prompt", "overload", "both"])
+    ap.add_argument("--trace-out", default=None,
+                    help="export a Chrome-trace/Perfetto JSON of the "
+                         "instrumented serve runs to this path")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export the metrics dump (scheduler counters + "
+                         "per-priority TTFT/TPOT histograms) as JSONL")
     args = ap.parse_args()
-    res = run(quick=args.smoke, trace=args.trace)
+    telemetry = None
+    if args.trace_out or args.metrics_out:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry()
+    res = run(quick=args.smoke, trace=args.trace, telemetry=telemetry)
+    if telemetry is not None and args.trace_out:
+        telemetry.export_trace(args.trace_out,
+                               metadata={"bench": "serving_throughput",
+                                         "trace": args.trace})
+        print(f"# trace -> {args.trace_out}")
+    if telemetry is not None and args.metrics_out:
+        telemetry.export_metrics_jsonl(args.metrics_out)
+        print(f"# metrics -> {args.metrics_out}")
     if "mixed" in res:
         print(f"# mixed: continuous/static = {res['mixed']['speedup']:.2f}x")
     if "long_prompt" in res:

@@ -25,7 +25,13 @@ microseconds per train step) and records BENCH_train_step.json via
 `common.write_bench_json` (merging, so single-device and mesh legs can be
 recorded by separate runs).
 
-    PYTHONPATH=src python -m benchmarks.train_step [--smoke] [--mesh tp=2]
+    PYTHONPATH=src python -m benchmarks.train_step [--smoke] [--mesh tp=2] \
+        [--trace-out t.json] [--metrics-out m.jsonl]
+
+With ``--trace-out`` / ``--metrics-out`` a `repro.telemetry.Telemetry` is
+attached: every timed call (compile included) becomes a span in the
+Perfetto trace and per-impl step timings land in the metrics JSONL
+(summarize with ``python -m benchmarks.report --trace t.json``).
 """
 from __future__ import annotations
 
@@ -40,6 +46,15 @@ def _parse_mesh_arg(argv):
         if i + 1 < len(argv):
             return argv[i + 1]
         raise SystemExit("--mesh needs a spec, e.g. --mesh tp=2")
+    return None
+
+
+def _parse_path_arg(argv, flag):
+    if flag in argv:
+        i = argv.index(flag)
+        if i + 1 < len(argv):
+            return argv[i + 1]
+        raise SystemExit(f"{flag} needs a path")
     return None
 
 
@@ -63,6 +78,7 @@ from repro.configs.base import (AttentionConfig, LinformerConfig, ModelConfig,
                                 OptimizerConfig)
 from repro.models import model as M
 from repro.optim import adamw_init
+from repro.telemetry import as_telemetry
 from repro.train.trainer import make_train_step
 
 
@@ -116,12 +132,14 @@ def _cfg(backward_impl: str, *, seq: int, block_size: int,
 
 def _time_step(backward_impl: str, *, seq: int, block_size: int,
                block_slots: int, batch_size: int, iters: int,
-               ctx=None) -> float:
+               ctx=None, telemetry=None, label: str = "") -> float:
     """Median seconds of the jit'd train step (first call = compile+warmup,
     excluded). No donation so the same buffers are re-fed every iteration.
     With `ctx` the step runs on the mesh, params laid out per the sharding
-    rules and attention through the plan's shard_map."""
+    rules and attention through the plan's shard_map. With `telemetry` every
+    call (compile included) becomes a span in the exported trace."""
     import contextlib
+    tel = as_telemetry(telemetry)
     cfg = _cfg(backward_impl, seq=seq, block_size=block_size,
                block_slots=block_slots)
     opt_cfg = OptimizerConfig()
@@ -141,16 +159,18 @@ def _time_step(backward_impl: str, *, seq: int, block_size: int,
                                      None, None))
         scope = ctx.mesh
     with scope:
-        jax.block_until_ready(step(params, opt_state, batch))
-        times = []
-        for _ in range(iters):
-            t0 = time.perf_counter()
+        with tel.span("train_step_compile", cat="bench", impl=label):
             jax.block_until_ready(step(params, opt_state, batch))
+        times = []
+        for i in range(iters):
+            t0 = time.perf_counter()
+            with tel.span("train_step", cat="bench", impl=label, iter=i):
+                jax.block_until_ready(step(params, opt_state, batch))
             times.append(time.perf_counter() - t0)
     return float(np.median(times))
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, telemetry=None):
     # quick: nb·r = 1024 compressed slots at S=2048 — small enough for the
     # smoke gate, big enough that the reference recompute's global score
     # tensor dominates its backward. full: the 4k training shape.
@@ -158,12 +178,16 @@ def run(quick: bool = True):
         seq, block_size, block_slots, batch_size, iters = 2048, 64, 32, 1, 3
     else:
         seq, block_size, block_slots, batch_size, iters = 4096, 128, 32, 1, 5
+    tel = as_telemetry(telemetry)
     results = {}
     for impl in ("fused", "reference"):
         t = _time_step(impl, seq=seq, block_size=block_size,
                        block_slots=block_slots, batch_size=batch_size,
-                       iters=iters)
+                       iters=iters, telemetry=telemetry, label=impl)
         results[impl] = t
+        tel.record("bench_train_step", impl=impl, seq=seq,
+                   step_ms=round(t * 1e3, 3),
+                   steps_per_s=round(1.0 / t, 3))
         emit(f"train_step/{impl}/s{seq}", t * 1e6,
              f"steps_per_s={1.0 / t:.3f}")
     speedup = results["reference"] / results["fused"]
@@ -181,7 +205,7 @@ def run(quick: bool = True):
     return results
 
 
-def run_mesh(spec: str, quick: bool = True):
+def run_mesh(spec: str, quick: bool = True, telemetry=None):
     """Fused train step sharded through the attention plan vs the same step
     single-shard, on a forced-8-host-device mesh. The manual region shards
     whatever the spec names (tp=2 → heads only; the leftover data axis is
@@ -195,12 +219,14 @@ def run_mesh(spec: str, quick: bool = True):
         seq, block_size, block_slots, batch_size, iters = 2048, 64, 32, 2, 3
     single = _time_step("fused", seq=seq, block_size=block_size,
                         block_slots=block_slots, batch_size=batch_size,
-                        iters=iters)
+                        iters=iters, telemetry=telemetry,
+                        label="single_shard")
     mesh = make_local_mesh(model_shards=tp, seq_shards=sp)
     ctx = ParallelCtx(mesh=mesh, fsdp="none")
     sharded = _time_step("fused", seq=seq, block_size=block_size,
                          block_slots=block_slots, batch_size=batch_size,
-                         iters=iters, ctx=ctx)
+                         iters=iters, ctx=ctx, telemetry=telemetry,
+                         label=f"mesh_{spec}")
     emit(f"train_step/mesh_{spec}/s{seq}", sharded * 1e6,
          f"single_shard_ms={single * 1e3:.1f}")
     _merge_bench_json({
@@ -218,7 +244,19 @@ def run_mesh(spec: str, quick: bool = True):
 
 
 if __name__ == "__main__":
+    _trace_out = _parse_path_arg(sys.argv[1:], "--trace-out")
+    _metrics_out = _parse_path_arg(sys.argv[1:], "--metrics-out")
+    _tel = None
+    if _trace_out or _metrics_out:
+        from repro.telemetry import Telemetry
+        _tel = Telemetry()
     if _MESH_SPEC:
-        run_mesh(_MESH_SPEC, quick="--smoke" in sys.argv[1:])
+        run_mesh(_MESH_SPEC, quick="--smoke" in sys.argv[1:], telemetry=_tel)
     else:
-        run(quick="--smoke" in sys.argv[1:])
+        run(quick="--smoke" in sys.argv[1:], telemetry=_tel)
+    if _tel is not None and _trace_out:
+        _tel.export_trace(_trace_out, metadata={"bench": "train_step"})
+        print(f"# trace -> {_trace_out}")
+    if _tel is not None and _metrics_out:
+        _tel.export_metrics_jsonl(_metrics_out)
+        print(f"# metrics -> {_metrics_out}")

@@ -19,6 +19,10 @@
 #      reference, plus the preempt/snapshot-restore parity legs) and the
 #      sharded train-step benchmark (--mesh tp=2, recorded under the
 #      "mesh" key of BENCH_train_step.json)
+#   8. telemetry smoke: re-run the overload trace with --trace-out /
+#      --metrics-out and validate the exports with scripts/check_trace.py
+#      (full request lifecycle, preemption leg, BOTH shed reasons,
+#      per-priority TTFT/TPOT histograms — docs/observability.md)
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -48,5 +52,12 @@ python -m pytest -q tests/test_attention_plan.py
 
 echo "== forced-8-device smoke benchmark: train_step --mesh tp=2 =="
 python -m benchmarks.train_step --smoke --mesh tp=2
+
+echo "== telemetry smoke: overload trace export + check_trace =="
+python -m benchmarks.serving_throughput --smoke --trace overload \
+    --trace-out /tmp/overload_trace.json \
+    --metrics-out /tmp/overload_metrics.jsonl
+python scripts/check_trace.py /tmp/overload_trace.json \
+    /tmp/overload_metrics.jsonl
 
 echo "== check.sh: all gates passed =="

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Telemetry smoke-gate validator (scripts/check.sh step): given the
+trace + metrics exported by the oversubscribed overload serving
+benchmark,
+
+    python -m benchmarks.serving_throughput --smoke --trace overload \
+        --trace-out /tmp/overload_trace.json \
+        --metrics-out /tmp/overload_metrics.jsonl
+    python scripts/check_trace.py /tmp/overload_trace.json \
+        /tmp/overload_metrics.jsonl
+
+assert the export is Perfetto-loadable and actually contains the SLO
+story the overload trace is designed to exercise
+(docs/observability.md):
+
+  * trace: a valid Chrome-trace JSON with the full request lifecycle —
+    request_queued / request_admitted / request_first_token /
+    request_retired instants, the preemption leg (request_snapshot +
+    request_preempted + request_restored), request_shed markers for BOTH
+    shed reasons (queue_full overflow AND a provably-infeasible
+    deadline), and the per-chunk decode_chunk scheduler spans.
+  * metrics JSONL: per-priority TTFT histograms (ticks AND wall ms),
+    per-priority TPOT histograms, queue-wait histograms, and the
+    shed-attribution counter labelled reason=deadline_infeasible.
+
+Exit 0 on success, 1 with one line per missing fact otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+REQUIRED_INSTANTS = (
+    "request_queued", "request_admitted", "request_first_token",
+    "request_retired", "request_shed", "request_snapshot",
+    "request_preempted", "request_restored",
+)
+REQUIRED_SPANS = ("decode_chunk", "serve")
+# (metric, label-subset) pairs that must exist with count > 0
+REQUIRED_HISTOGRAMS = (
+    ("serving_ttft_ticks", {"priority": "0"}),
+    ("serving_ttft_ticks", {"priority": "2"}),
+    ("serving_ttft_ms", {"priority": "0"}),
+    ("serving_tpot_ms", {"priority": "0"}),
+    ("serving_tpot_ms", {"priority": "2"}),
+    ("serving_queue_wait_ticks", {"priority": "0"}),
+)
+
+
+def check_trace(path: str, problems: list) -> None:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        problems.append(f"trace {path}: unreadable ({e})")
+        return
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        problems.append(f"trace {path}: no traceEvents array")
+        return
+    by_ph = defaultdict(lambda: defaultdict(int))
+    shed_reasons = set()
+    for e in events:
+        by_ph[e.get("ph")][e.get("name")] += 1
+        if e.get("ph") == "i" and e.get("name") == "request_shed":
+            shed_reasons.add(e.get("args", {}).get("reason"))
+    for name in REQUIRED_INSTANTS:
+        if not by_ph["i"].get(name):
+            problems.append(f"trace: no {name!r} instant event")
+    for name in REQUIRED_SPANS:
+        if not by_ph["X"].get(name):
+            problems.append(f"trace: no {name!r} span")
+    for reason in ("queue_full", "deadline_infeasible"):
+        if reason not in shed_reasons:
+            problems.append(f"trace: no request_shed with reason={reason!r} "
+                            f"(saw {sorted(shed_reasons)})")
+    # every event Perfetto needs timestamped is
+    for e in events:
+        if e.get("ph") in ("X", "i") and "ts" not in e:
+            problems.append(f"trace: {e.get('name')!r} event without ts")
+            break
+
+
+def check_metrics(path: str, problems: list) -> None:
+    recs = []
+    try:
+        with open(path) as f:
+            for i, line in enumerate(f):
+                if line.strip():
+                    try:
+                        recs.append(json.loads(line))
+                    except json.JSONDecodeError as e:
+                        problems.append(f"metrics {path} line {i + 1}: "
+                                        f"malformed JSON ({e})")
+                        return
+    except OSError as e:
+        problems.append(f"metrics {path}: unreadable ({e})")
+        return
+    hists = [r for r in recs if r.get("type") == "histogram"]
+    for name, want in REQUIRED_HISTOGRAMS:
+        hit = [r for r in hists if r.get("metric") == name
+               and all(r.get("labels", {}).get(k) == v
+                       for k, v in want.items())
+               and r.get("count", 0) > 0]
+        if not hit:
+            problems.append(f"metrics: no populated histogram {name} "
+                            f"with labels ⊇ {want}")
+    sheds = [r for r in recs if r.get("metric") == "serving_shed_events_total"
+             and r.get("labels", {}).get("reason") == "deadline_infeasible"
+             and r.get("value", 0) > 0]
+    if not sheds:
+        problems.append("metrics: no serving_shed_events_total counter "
+                        "with reason=deadline_infeasible and value > 0")
+    if not any(r.get("kind") == "plan_attribution" for r in recs):
+        problems.append("metrics: no plan_attribution record")
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print("usage: check_trace.py TRACE.json METRICS.jsonl",
+              file=sys.stderr)
+        return 2
+    problems: list = []
+    check_trace(argv[0], problems)
+    check_metrics(argv[1], problems)
+    if problems:
+        print("check_trace: FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"check_trace: {argv[0]} + {argv[1]} OK "
+          "(lifecycle, preemption, both shed reasons, SLO histograms)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

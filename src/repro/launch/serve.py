@@ -58,6 +58,15 @@ def main():
                     help="bound the admission queue to this many waiting "
                          "requests; overflow sheds the least-valued entry "
                          "(0 = unbounded)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(host spans + one lane per request) to this path; "
+                         "enables telemetry")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics dump (scheduler counters, "
+                         "per-priority TTFT/TPOT/queue-wait histograms, "
+                         "plan cost attribution) as JSONL to this path; "
+                         "enables telemetry")
     args = ap.parse_args()
 
     import jax
@@ -81,12 +90,16 @@ def main():
             params = restored["params"]
             print(f"[serve] restored step {meta['step']} from {args.ckpt_dir}")
 
+    from repro.telemetry import Telemetry
+    telemetry = (Telemetry() if args.trace_out or args.metrics_out
+                 else None)
     eng = ServingEngine(params, cfg, max_seq=args.max_seq,
                         cache_dtype=jnp.float32 if args.smoke else jnp.bfloat16,
                         temperature=args.temperature,
                         decode_chunk=args.decode_chunk,
                         attention_backend=args.backend,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        telemetry=telemetry)
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(4, cfg.vocab_size,
                                  int(rng.choice([8, 16, 16, 32]))))
@@ -134,6 +147,15 @@ def main():
     for i, o in enumerate(outs[:4]):
         if isinstance(o, list):
             print(f"  req{i} ({len(prompts[i])} prompt toks) -> {o[:10]}")
+    if telemetry is not None and args.trace_out:
+        telemetry.export_trace(args.trace_out,
+                               metadata={"arch": args.arch,
+                                         "scheduler": mode})
+        print(f"[serve] trace -> {args.trace_out} "
+              "(load at https://ui.perfetto.dev)")
+    if telemetry is not None and args.metrics_out:
+        telemetry.export_metrics_jsonl(args.metrics_out)
+        print(f"[serve] metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -69,6 +69,7 @@ from repro.configs.base import ModelConfig
 from repro.data.pipeline import EOS
 from repro.models import model as model_lib
 from repro.parallel.sharding import ParallelCtx
+from repro.telemetry import as_telemetry, plan_attribution
 
 
 def bucket_requests(prompts: Sequence[Sequence[int]], max_batch: int
@@ -108,6 +109,7 @@ class ServingEngine:
         decode_chunk: int = 32,
         attention_backend: Optional[str] = None,
         prefill_chunk: int = 0,
+        telemetry=None,
     ):
         if attention_backend is not None:
             cfg = cfg.with_attention_backend(attention_backend)
@@ -125,6 +127,12 @@ class ServingEngine:
         self.temperature = temperature
         self.decode_chunk = max(1, decode_chunk)
         self.prefill_chunk = int(prefill_chunk)
+        self.telemetry = as_telemetry(telemetry)
+        # shape-level compile-cache proxies: a novel decode-scan length or
+        # prefill shape forces a jit specialization (see _note_compile)
+        self._prefill_shapes: set = set()
+        self._attributed: set = set()   # facades holding this plan's record
+        self._record_plan_attribution(self.telemetry)
 
         self._decode = jax.jit(
             lambda p, b, c: model_lib.decode_step(p, cfg, b, c, ctx=ctx))
@@ -167,6 +175,27 @@ class ServingEngine:
             return a.linformer.block_size
         return 1
 
+    def _record_plan_attribution(self, tel) -> None:
+        """Emit the resolved plan's cost-attribution record (backend,
+        per-form FLOPs/comm-bytes estimates) into `tel` — once per facade,
+        so a per-run `serve(telemetry=...)` override still gets it."""
+        if not tel.enabled or tel in self._attributed:
+            return
+        self._attributed.add(tel)
+        rec = plan_attribution(self.plan, self.cfg.attention,
+                               max_seq=self.max_seq,
+                               prefill_chunk=self.prefill_chunk or None)
+        tel.record(rec.pop("kind"), **rec)
+
+    def _note_compile(self, fn_name: str, hit: bool) -> None:
+        """Count a shape-level jit compile-cache hit/miss (a proxy: jax's
+        own cache is keyed the same way — per (function, abstract shapes) —
+        so a novel shape here is a novel trace + compile there)."""
+        if self.telemetry.enabled:
+            self.telemetry.metrics.counter(
+                "serving_compile_cache_hit_total" if hit
+                else "serving_compile_cache_miss_total", fn=fn_name).inc()
+
     def _sample(self, logits: jax.Array, rng) -> jax.Array:
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1)
@@ -177,6 +206,9 @@ class ServingEngine:
         B, S = tokens.shape
         c = self._block()
         nfull = (S // c) * c
+        shape = (B, nfull)
+        self._note_compile("prefill", hit=shape in self._prefill_shapes)
+        self._prefill_shapes.add(shape)
         if nfull == 0:
             cache = model_lib.init_cache(self.cfg, batch=B,
                                          max_seq=self.max_seq,
@@ -196,6 +228,7 @@ class ServingEngine:
     def _chunk_fn(self, n: int) -> Callable:
         """Jitted n-step device-resident decode (cached per scan length)."""
         fn = self._chunk_fns.get(n)
+        self._note_compile("decode_chunk", hit=fn is not None)
         if fn is None:
             cfg, ctx, temp = self.cfg, self.ctx, self.temperature
             fn = jax.jit(
@@ -557,7 +590,8 @@ class ServingEngine:
               on_token: Optional[Callable[[int, int], None]] = None,
               on_complete: Optional[Callable[[int, List[int]], None]] = None,
               rng: Optional[jax.Array] = None,
-              return_scheduler: bool = False):
+              return_scheduler: bool = False,
+              telemetry=None):
         """Serve arbitrary mixed-length requests with slot-based continuous
         batching: a `max_batch`-slot pool, admission/retirement between
         decode chunks (serving/scheduler.py).
@@ -575,6 +609,11 @@ class ServingEngine:
         last-good-snapshot refresh period), `nan_guard` (quarantine rows
         whose logits go non-finite), `fault_injector` (serving/faults.py).
         A shed request's output is a `ShedResult` instead of a token list.
+
+        `telemetry` overrides the engine's `Telemetry` facade for this run
+        (span trace, per-request timelines, per-priority SLO histograms —
+        docs/observability.md); None uses the engine's own, which defaults
+        to the disabled no-op singleton.
 
         `on_token`/`on_complete` stream per-request progress. Returns
         outputs ordered like `prompts` (or (outputs, scheduler) with
@@ -616,18 +655,23 @@ class ServingEngine:
                 raise ValueError(f"{name} has {len(seq)} entries "
                                  f"for {n} prompts")
         self._check_budgets(prompts, budgets)
+        tel = telemetry if telemetry is not None else self.telemetry
+        self._record_plan_attribution(tel)
         sched = Scheduler(self, max_batch, rng=rng, max_queue=max_queue,
                           max_retries=max_retries,
                           snapshot_chunks=snapshot_chunks,
                           nan_guard=nan_guard,
-                          fault_injector=fault_injector)
+                          fault_injector=fault_injector,
+                          telemetry=tel)
         for i, p in enumerate(prompts):
             sched.submit(Request(rid=i, tokens=tuple(p),
                                  max_new_tokens=budgets[i],
                                  arrival_chunk=arrivals[i],
                                  priority=prios[i],
                                  deadline_ticks=dls[i]))
-        results = sched.run(on_token=on_token, on_complete=on_complete)
+        with tel.span("serve", cat="engine", n_requests=n,
+                      max_batch=max_batch):
+            results = sched.run(on_token=on_token, on_complete=on_complete)
         outputs = [results[i] for i in range(n)]
         if return_scheduler:
             return outputs, sched

@@ -80,6 +80,7 @@ import numpy as np
 
 from repro.data.pipeline import EOS
 from repro.serving.snapshot import SlotSnapshot, capture
+from repro.telemetry import MetricsRegistry, as_telemetry
 
 _INF = float("inf")
 
@@ -189,27 +190,64 @@ def _slot_sort_key(slot: _Slot) -> Tuple[int, float, int]:
     return (slot.request.priority, _INF if dl is None else dl, slot.seq)
 
 
-@dataclasses.dataclass
+# ScheduleStats attribute -> metric name in the backing registry. The
+# attribute surface (stats.chunks, stats.sheds += 1, ...) is unchanged from
+# the pre-telemetry dataclass; the storage moved into a MetricsRegistry so
+# one increment is visible to both the scheduler and the metrics export.
+_STAT_COUNTERS = {
+    "chunks": "serving_chunks_total",              # decode chunks executed
+    "idle_ticks": "serving_idle_ticks_total",      # no-decode ticks (pool
+    #                                                empty or all prefilling)
+    "row_steps": "serving_row_steps_total",        # DECODING-slot steps
+    "occupancy_sum": "serving_occupancy_sum",      # Σ per-chunk occupied frac
+    #                                                (DECODING + PREFILLING)
+    "prefill_forwards": "serving_prefill_forwards_total",  # prefill launches
+    "prefill_tokens": "serving_prefill_tokens_total",  # real prompt tokens
+    "preemptions": "serving_preemptions_total",    # snapshot + requeue evicts
+    "sheds": "serving_sheds_total",                # explicit ShedResults
+    "deadline_misses": "serving_deadline_misses_total",  # late completions
+    "retries": "serving_retries_total",            # fault requeues
+    "quarantines": "serving_quarantines_total",    # faulty rows isolated
+    "snapshots": "serving_snapshots_total",        # snapshots captured
+    "snapshot_corruptions": "serving_snapshot_corruptions_total",
+}
+
+
 class ScheduleStats:
-    chunks: int = 0                    # decode chunks actually executed
-    idle_ticks: int = 0                # no-decode ticks (pool empty or
-    #                                    every occupied slot still prefilling)
-    row_steps: int = 0                 # DECODING-slot decode steps
-    occupancy_sum: float = 0.0         # Σ per-executed-chunk occupied frac
-    #                                    (DECODING + PREFILLING slots — a
-    #                                    prefilling row holds its slot)
-    prefill_forwards: int = 0          # prefill launches (chunked: batched
-    #                                    chunk/remainder; monolithic: one
-    #                                    B=1 forward per admission)
-    prefill_tokens: int = 0            # real (unpadded) prompt tokens filled
-    preemptions: int = 0               # slots evicted for a more urgent
-    #                                    arrival (snapshot + requeue)
-    sheds: int = 0                     # requests rejected with a ShedResult
-    deadline_misses: int = 0           # completions past deadline_ticks
-    retries: int = 0                   # fault requeues (snapshot or scratch)
-    quarantines: int = 0               # faulty rows detected and isolated
-    snapshots: int = 0                 # slot snapshots captured
-    snapshot_corruptions: int = 0      # restores rejected by checksum
+    """Scheduler counters, stored in a `telemetry.MetricsRegistry`.
+
+    A *view*: `stats.chunks` reads — and `stats.chunks += 1` writes — the
+    `serving_chunks_total` counter of `stats.registry` (see
+    `_STAT_COUNTERS` for the full name map), so the same numbers flow into
+    the Prometheus/JSONL exports without a second set of hand-rolled ints.
+    Each Scheduler owns a FRESH registry (plus the per-priority SLO
+    histograms folded in at the end of `run`); a shared `Telemetry` facade
+    adopts it per run, so warm reruns never accumulate across schedulers.
+    All attributes except `occupancy_sum` read back as ints, exactly like
+    the old dataclass fields."""
+
+    __slots__ = ("registry", "_c")
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        object.__setattr__(self, "registry",
+                           registry if registry is not None
+                           else MetricsRegistry())
+        object.__setattr__(self, "_c", {
+            attr: self.registry.counter(name)
+            for attr, name in _STAT_COUNTERS.items()})
+
+    def __getattr__(self, name):
+        try:
+            c = object.__getattribute__(self, "_c")[name]
+        except KeyError:
+            raise AttributeError(name) from None
+        return c.value if name == "occupancy_sum" else int(c.value)
+
+    def __setattr__(self, name, value):
+        c = self._c.get(name)
+        if c is None:
+            raise AttributeError(f"ScheduleStats has no counter {name!r}")
+        c.value = float(value)
 
     @property
     def ticks(self) -> int:
@@ -395,12 +433,18 @@ class Scheduler:
                  max_retries: int = 2,
                  snapshot_chunks: int = 0,
                  nan_guard: bool = True,
-                 fault_injector=None):
+                 fault_injector=None,
+                 telemetry=None):
         self.engine = engine
         self.pool = SlotPool(engine, max_batch)
         self.waiting: List[_QueueEntry] = []
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.stats = ScheduleStats()
+        # fresh per-scheduler timeline namespace + stats registry: warm
+        # reruns reuse request ids, so runs must not share either
+        self.telemetry = as_telemetry(telemetry)
+        self.timelines = self.telemetry.new_timelines("serving")
+        self.telemetry.adopt_registry(self.stats.registry, "serving")
         self.max_queue = max_queue
         self.max_retries = max_retries
         # snapshot_chunks=k refreshes every occupied row's last-good
@@ -423,6 +467,11 @@ class Scheduler:
         an explicit ShedResult — never silent unbounded queueing."""
         entry = _QueueEntry(request=request, seq=self._seq)
         self._seq += 1
+        self.timelines.stamp(request.rid, "queued", self.stats.ticks,
+                             priority=request.priority,
+                             deadline=request.deadline_ticks,
+                             prompt_len=len(request.tokens),
+                             budget=request.max_new_tokens)
         if self.max_queue is not None and len(self.waiting) >= self.max_queue:
             victim = max(self.waiting + [entry],
                          key=lambda e: e.sort_key())
@@ -440,6 +489,8 @@ class Scheduler:
                         priority=entry.request.priority)
         self.shed[entry.request.rid] = sr
         self.stats.sheds += 1
+        self.timelines.stamp(entry.request.rid, "shed", sr.tick,
+                             reason=reason)
 
     def _needed_ticks(self, entry: _QueueEntry) -> int:
         """Optimistic lower bound on ticks to completion if admitted NOW:
@@ -488,6 +539,8 @@ class Scheduler:
                 self.pool.restore(row, entry.request, entry.snapshot)
                 slot = self.pool.slots[row]
                 slot.seq, slot.retries = entry.seq, entry.retries
+                self.timelines.stamp(entry.request.rid, "restored",
+                                     self.stats.ticks, row=row)
                 return
             # corrupt snapshot: detected BEFORE its bytes touch the pool;
             # fall back to re-running from the prompt (byte-identical under
@@ -495,14 +548,19 @@ class Scheduler:
             self.stats.snapshot_corruptions += 1
             entry.snapshot = None
         req = entry.request
+        self.timelines.stamp(req.rid, "admitted", self.stats.ticks, row=row)
         if self.engine.prefill_chunk > 0:
             self.pool.begin_prefill(row, req)
         else:
             self.rng, sub = jax.random.split(self.rng)
-            slot_cache, first = self.engine.prefill_request(req.tokens, sub)
+            with self.telemetry.span("admission_prefill", cat="scheduler",
+                                     rid=req.rid, tokens=len(req.tokens)):
+                slot_cache, first = self.engine.prefill_request(req.tokens,
+                                                                sub)
             self.stats.prefill_forwards += 1      # one B=1 forward each
             self.stats.prefill_tokens += len(req.tokens)
             self.pool.admit(row, req, slot_cache, first)
+            self.timelines.stamp(req.rid, "first_token", self.stats.ticks)
         slot = self.pool.slots[row]
         slot.seq, slot.retries = entry.seq, entry.retries
 
@@ -512,12 +570,16 @@ class Scheduler:
         slot = self.pool.slots[row]
         snap = self.pool.snapshot_rows([row], self.stats.ticks)[0]
         self.stats.snapshots += 1
+        self.timelines.stamp(slot.request.rid, "snapshot", self.stats.ticks,
+                             row=row)
         self.waiting.append(_QueueEntry(
             request=slot.request, seq=slot.seq, snapshot=snap,
             retries=slot.retries))
         self.snapshots.pop(row, None)
         self.pool.retire(row)
         self.stats.preemptions += 1
+        self.timelines.stamp(slot.request.rid, "preempted", self.stats.ticks,
+                             row=row)
 
     def _admit_ready(self) -> None:
         """Fill free slots with arrived requests in EDF-within-priority
@@ -583,12 +645,18 @@ class Scheduler:
                 n = min(P, nfull - s.filled)
                 toks[j, :n] = s.request.tokens[s.filled:s.filled + n]
                 n_valid[j] = n
-            logits = self.pool.prefill_chunk_rows(
-                [row for row, _, _ in chunk_rows], toks, n_valid)
+            with self.telemetry.span("prefill_chunk_forward",
+                                     cat="scheduler", rows=g,
+                                     tokens=int(n_valid.sum())):
+                logits = self.pool.prefill_chunk_rows(
+                    [row for row, _, _ in chunk_rows], toks, n_valid)
             self.stats.prefill_forwards += 1
             self.stats.prefill_tokens += int(n_valid.sum())
             for j, (row, s, nfull) in enumerate(chunk_rows):
                 s.filled += int(n_valid[j])
+                self.timelines.stamp(s.request.rid, "prefill_chunk",
+                                     self.stats.ticks, filled=s.filled,
+                                     total=len(s.request.tokens))
                 if s.filled == len(s.request.tokens):
                     final_logits[row] = logits[j]
 
@@ -601,12 +669,18 @@ class Scheduler:
             toks = np.asarray(
                 [s.request.tokens[s.filled:s.filled + rem]
                  for _, s in group], np.int32)
-            logits = self.pool.prefill_remainder_rows(
-                [row for row, _ in group], toks)
+            with self.telemetry.span("prefill_remainder_forward",
+                                     cat="scheduler", rows=len(group),
+                                     tokens=rem * len(group)):
+                logits = self.pool.prefill_remainder_rows(
+                    [row for row, _ in group], toks)
             self.stats.prefill_forwards += 1
             self.stats.prefill_tokens += rem * len(group)
             for j, (row, s) in enumerate(group):
                 s.filled += rem
+                self.timelines.stamp(s.request.rid, "prefill_chunk",
+                                     self.stats.ticks, filled=s.filled,
+                                     total=len(s.request.tokens))
                 final_logits[row] = logits[j]
 
         for row in sorted(final_logits):
@@ -615,6 +689,8 @@ class Scheduler:
                 self.engine._sample(jnp.asarray(final_logits[row])[None],
                                     sub))[0])
             self.pool.activate(row, first)
+            self.timelines.stamp(self.pool.slots[row].request.rid,
+                                 "first_token", self.stats.ticks)
 
     # -- faults ----------------------------------------------------------
 
@@ -624,11 +700,14 @@ class Scheduler:
         rows = self.pool.occupied_rows()
         if not rows:
             return
-        for row, snap in zip(rows,
-                             self.pool.snapshot_rows(rows,
-                                                     self.stats.ticks)):
+        with self.telemetry.span("snapshot_capture", cat="scheduler",
+                                 rows=len(rows)):
+            snaps = self.pool.snapshot_rows(rows, self.stats.ticks)
+        for row, snap in zip(rows, snaps):
             self.snapshots[row] = snap
             self.stats.snapshots += 1
+            self.timelines.stamp(snap.rid, "snapshot", self.stats.ticks,
+                                 row=row)
 
     def _quarantine(self, row: int) -> None:
         """Isolate a faulty row: discard its poisoned chunk, scrub the
@@ -638,6 +717,9 @@ class Scheduler:
         sheds the request explicitly. Neighbour rows are untouched."""
         slot = self.pool.slots[row]
         self.stats.quarantines += 1
+        self.timelines.stamp(slot.request.rid, "quarantined",
+                             self.stats.ticks, row=row,
+                             retries=slot.retries + 1)
         snap = self.snapshots.pop(row, None)
         if snap is not None and snap.rid != slot.request.rid:
             snap = None                    # snapshot of a previous tenant
@@ -700,6 +782,10 @@ class Scheduler:
                 dl = slot.request.deadline_ticks
                 if dl is not None and self.stats.ticks > dl:
                     self.stats.deadline_misses += 1
+                    self.timelines.stamp(rid, "deadline_miss",
+                                         self.stats.ticks, deadline=dl)
+                self.timelines.stamp(rid, "retired", self.stats.ticks,
+                                     n_tokens=len(slot.emitted))
                 if on_complete is not None:
                     on_complete(rid, slot.emitted)
                 self.snapshots.pop(row, None)
@@ -734,7 +820,12 @@ class Scheduler:
             if self.fault_injector is not None:
                 self.fault_injector.before_chunk(self.pool, self.snapshots,
                                                  self.stats.chunks)
-            toks, bad, self.rng = self.pool.decode_chunk(chunk, self.rng)
+            # one span per chunk, closed at the chunk's single host sync —
+            # stamping here adds ZERO device syncs (the sync already exists)
+            with self.telemetry.span("decode_chunk", cat="scheduler",
+                                     rows=decoding, chunk=chunk,
+                                     tick=self.stats.ticks):
+                toks, bad, self.rng = self.pool.decode_chunk(chunk, self.rng)
             faulted = self._collect_faults(bad)
             self.stats.chunks += 1
             self.stats.row_steps += decoding * chunk
@@ -744,4 +835,7 @@ class Scheduler:
                 self._quarantine(row)      # retires the row: drain skips it
             self._drain_chunk(toks, on_token, on_complete, results)
         results.update(self.shed)
+        # fold raw lifecycle stamps into the per-priority SLO histograms
+        # (queue wait, TTFT, TPOT, deadline slack) of this run's registry
+        self.timelines.finalize(self.stats.registry)
         return results

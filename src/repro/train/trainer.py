@@ -21,6 +21,7 @@ from repro.models import model as model_lib
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
     make_schedule
 from repro.parallel.sharding import ParallelCtx
+from repro.telemetry import MS_BUCKETS, as_telemetry, plan_attribution
 
 
 def make_train_step(
@@ -98,6 +99,7 @@ class Trainer:
         log_fn: Callable[[str], None] = print,
         attention_backend: Optional[str] = None,
         backward_impl: Optional[str] = None,
+        telemetry=None,
     ):
         # attention_backend overrides cfg.attention.backend for this run
         # ("reference" | "fused"; None keeps the config's knob, whose "auto"
@@ -123,6 +125,15 @@ class Trainer:
         self.ckpt = Checkpointer(tcfg.checkpoint_dir)
         self.corpus = SyntheticCorpus(cfg.vocab_size, seed=tcfg.seed)
         self.step_times = []
+        # telemetry: per-step spans + a "train_step" JSONL record per step
+        # (loss, grad-norm, tokens/s) + the resolved plan's cost attribution
+        # (docs/observability.md); None = the disabled no-op singleton.
+        self.telemetry = as_telemetry(telemetry)
+        if self.telemetry.enabled:
+            rec = plan_attribution(self.plan, cfg.attention,
+                                   max_seq=tcfg.seq_len,
+                                   batch=tcfg.global_batch)
+            self.telemetry.record(rec.pop("kind"), **rec)
 
         self.compressed = bool(
             tcfg.compressed_pod_grads and ctx is not None
@@ -205,16 +216,21 @@ class Trainer:
             np_batch, dstate = next(stream)
             batch = jax.tree.map(jnp.asarray, np_batch)
             t0 = time.perf_counter()
-            if self.compressed:
-                params, opt_state, self._residual, metrics = self.train_step(
-                    params, opt_state, self._residual, batch)
-            else:
-                params, opt_state, metrics = self.train_step(params,
-                                                             opt_state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            with self.telemetry.span("train_step", cat="trainer", step=step):
+                if self.compressed:
+                    params, opt_state, self._residual, metrics = \
+                        self.train_step(params, opt_state, self._residual,
+                                        batch)
+                else:
+                    params, opt_state, metrics = self.train_step(
+                        params, opt_state, batch)
+                # the float() casts below are the step's host sync; keeping
+                # them inside the span times the actual device work
+                metrics = {k: float(v) for k, v in metrics.items()}
             dt = time.perf_counter() - t0
             self.step_times.append(dt)
             self._watchdog(step, dt)
+            self._record_step(step, dt, metrics)
             last_metrics = metrics
             if (step + 1) % tcfg.log_every == 0:
                 self.log(f"[trainer] step {step + 1} "
@@ -231,6 +247,27 @@ class Trainer:
         self.save(steps, params, opt_state, dstate)
         self._params = params
         return last_metrics
+
+    def _record_step(self, step: int, dt: float,
+                     metrics: Dict[str, float]) -> None:
+        """One JSONL record + histogram/gauge updates per executed step."""
+        if not self.telemetry.enabled:
+            return
+        tokens = metrics.get("tokens",
+                             self.tcfg.global_batch * self.tcfg.seq_len)
+        tokens_per_s = tokens / dt if dt > 0 else 0.0
+        self.telemetry.record(
+            "train_step", step=step, step_ms=round(dt * 1e3, 3),
+            tokens_per_s=round(tokens_per_s, 1),
+            loss=metrics.get("loss"), grad_norm=metrics.get("grad_norm"),
+            lr=metrics.get("lr"))
+        reg = self.telemetry.metrics
+        reg.histogram("train_step_ms", buckets=MS_BUCKETS).observe(dt * 1e3)
+        reg.counter("train_steps_total").inc()
+        reg.counter("train_tokens_total").inc(tokens)
+        reg.gauge("train_loss").set(metrics.get("loss", float("nan")))
+        reg.gauge("train_grad_norm").set(
+            metrics.get("grad_norm", float("nan")))
 
     def _watchdog(self, step: int, dt: float, factor: float = 2.0):
         if len(self.step_times) >= 8:

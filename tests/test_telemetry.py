@@ -1,0 +1,375 @@
+"""Telemetry subsystem (docs/observability.md): tracer/metrics/timeline
+export round-trips, the disabled-is-free contract, the no-added-host-syncs
+negative test (byte-identical serving with telemetry on vs off), and the
+fail-fast paths of benchmarks/report.py and scripts/check_trace.py."""
+import importlib.util
+import json
+import math
+import os
+
+import pytest
+
+from repro.telemetry import (MS_BUCKETS, NULL_TELEMETRY, NULL_TIMELINES,
+                             MetricsRegistry, ServingTimelines, Telemetry,
+                             TICK_BUCKETS, Tracer, as_telemetry,
+                             percentile_from_cumulative, write_chrome_trace)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+
+class TestTracer:
+    def test_span_nesting_and_chrome_export(self, tmp_path):
+        tr = Tracer()
+        with tr.span("outer", cat="test", run=1):
+            with tr.span("inner", cat="test") as sp:
+                sp.annotate(rows=3)
+            tr.instant("marker", cat="test", tick=0)
+        events = tr.chrome_events()
+        by_name = {e["name"]: e for e in events}
+        assert by_name["inner"]["ph"] == "X"
+        assert by_name["marker"]["ph"] == "i"
+        assert by_name["inner"]["args"]["rows"] == 3
+        # inner closes before outer, and nests inside it on the timeline
+        outer, inner = by_name["outer"], by_name["inner"]
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+
+        path = write_chrome_trace(str(tmp_path / "t.json"), events,
+                                  metadata={"who": "test"})
+        doc = json.load(open(path))
+        assert doc["metadata"]["who"] == "test"
+        ts = [e["ts"] for e in doc["traceEvents"] if "ts" in e]
+        assert ts == sorted(ts)
+        for e in doc["traceEvents"]:
+            assert "ph" in e and "name" in e and "pid" in e
+
+    def test_ring_overflow_counts_drops_and_keeps_newest(self):
+        tr = Tracer(capacity=8)
+        for i in range(20):
+            tr.instant(f"e{i}")
+        events = tr.chrome_events()
+        assert len(events) == 8
+        assert tr.dropped == 12
+        assert [e["name"] for e in events] == [f"e{i}" for i in range(12, 20)]
+
+    def test_disabled_tracer_is_free(self):
+        tr = Tracer(enabled=False)
+        # the null span is a shared singleton: no per-call allocation
+        assert tr.span("a") is tr.span("b")
+        with tr.span("x") as sp:
+            sp.annotate(ignored=1)
+        tr.instant("y")
+        assert tr.events() == []
+        assert tr.dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter_gauge_histogram_export_roundtrip(self):
+        reg = MetricsRegistry()
+        reg.counter("reqs_total", priority="0").inc(3)
+        reg.counter("reqs_total", priority="1").inc()
+        reg.gauge("occupancy").set(0.75)
+        h = reg.histogram("wait_ticks", buckets=TICK_BUCKETS, priority="0")
+        for v in (0, 1, 3, 7, 200):
+            h.observe(v)
+
+        txt = reg.prometheus_text()
+        assert '# TYPE reqs_total counter' in txt
+        assert 'reqs_total{priority="0"} 3' in txt
+        assert 'reqs_total{priority="1"} 1' in txt
+        assert 'wait_ticks_bucket{le="+Inf",priority="0"} 5' in txt
+        assert 'wait_ticks_count{priority="0"} 5' in txt
+
+        recs = {(r["metric"], tuple(sorted(r["labels"].items()))): r
+                for r in reg.jsonl_records()}
+        hr = recs[("wait_ticks", (("priority", "0"),))]
+        assert hr["count"] == 5 and hr["min"] == 0 and hr["max"] == 200
+        # cumulative buckets are monotone and end at the total count
+        cums = [c for _, c in hr["buckets"]]
+        assert cums == sorted(cums) and cums[-1] == 5
+        json.dumps(recs[("occupancy", ())])  # JSON-serializable throughout
+
+    def test_type_conflict_rejected(self):
+        reg = MetricsRegistry()
+        reg.counter("x_total")
+        with pytest.raises(ValueError):
+            reg.gauge("x_total")
+
+    def test_percentiles_survive_jsonl_roundtrip(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat_ms", buckets=MS_BUCKETS)
+        for v in (0.3, 0.9, 2.0, 4.0, 8.0, 30.0, 90.0, 400.0, 900.0, 3000.0):
+            h.observe(v)
+        (rec,) = reg.jsonl_records()
+        cum = [(math.inf if le == "+Inf" else float(le), c)
+               for le, c in rec["buckets"]]
+        for p in (50, 90, 99):
+            assert percentile_from_cumulative(
+                cum, rec["count"], p, rec["min"], rec["max"]
+            ) == pytest.approx(h.percentile(p))
+        # percentiles are clamped into the observed range
+        assert h.percentile(99) <= h.max
+        assert h.percentile(1) >= h.min
+
+
+# ---------------------------------------------------------------------------
+# Serving timelines
+# ---------------------------------------------------------------------------
+
+
+class TestServingTimelines:
+    def _stamped(self):
+        tr = Tracer()
+        tl = ServingTimelines(tr)
+        tl.stamp(0, "queued", 0, priority=1, deadline=5)
+        tl.stamp(0, "admitted", 1, row=0)
+        tl.stamp(0, "first_token", 2)
+        tl.stamp(0, "retired", 3, n_tokens=4)
+        tl.stamp(1, "queued", 0, priority=0, deadline=1)
+        tl.stamp(1, "admitted", 1, row=1)
+        tl.stamp(1, "first_token", 2)
+        tl.stamp(1, "retired", 3, n_tokens=2)     # deadline 1 < tick 3
+        tl.stamp(2, "queued", 0, priority=2)
+        tl.stamp(2, "shed", 1, reason="queue_full")
+        return tr, tl
+
+    def test_finalize_derives_slo_metrics(self):
+        _, tl = self._stamped()
+        reg = MetricsRegistry()
+        tl.finalize(reg)
+        m = {(name, tuple(sorted(labels.items()))): obj
+             for name, labels, obj in reg.items()}
+        ttft = m[("serving_ttft_ticks", (("priority", "1"),))]
+        assert ttft.count == 1 and ttft.sum == 2          # tick 2 - tick 0
+        wait = m[("serving_queue_wait_ticks", (("priority", "1"),))]
+        assert wait.sum == 1
+        assert m[("serving_tpot_ms", (("priority", "1"),))].count == 1
+        assert m[("serving_deadline_miss_total",
+                  (("priority", "0"),))].value == 1
+        assert m[("serving_shed_events_total",
+                  (("priority", "2"), ("reason", "queue_full")))].value == 1
+        # rid 0 met its deadline: slack recorded, no miss counter
+        assert m[("serving_deadline_slack_ticks",
+                  (("priority", "1"),))].sum == 2
+        assert ("serving_deadline_miss_total",
+                (("priority", "1"),)) not in m
+
+    def test_perfetto_lanes_one_per_request(self):
+        _, tl = self._stamped()
+        events = tl.trace_events(pid=100, run_label="serving#0")
+        lanes = {e["args"]["name"] for e in events
+                 if e["ph"] == "M" and e["name"] == "thread_name"}
+        assert lanes == {"req 0 (pri 1)", "req 1 (pri 0)", "req 2 (pri 2)"}
+        bars = [e for e in events if e["ph"] == "X"]
+        assert {"queued", "prefilling", "decoding"} <= {b["name"]
+                                                        for b in bars}
+        assert all(b["dur"] >= 0 for b in bars)
+        # instants carry the stamp fields
+        shed = [e for e in events if e["ph"] == "i" and e["name"] == "shed"]
+        assert shed and shed[0]["args"]["reason"] == "queue_full"
+
+    def test_null_timelines_noop(self):
+        NULL_TIMELINES.stamp(0, "queued", 0, priority=0)
+        NULL_TIMELINES.finalize(MetricsRegistry())
+        assert not NULL_TIMELINES.enabled
+
+
+# ---------------------------------------------------------------------------
+# Disabled-telemetry contract
+# ---------------------------------------------------------------------------
+
+
+class TestDisabledContract:
+    def test_as_telemetry_none_is_shared_singleton(self):
+        assert as_telemetry(None) is NULL_TELEMETRY
+        t = Telemetry()
+        assert as_telemetry(t) is t
+
+    def test_disabled_facade_all_noops(self):
+        tel = Telemetry(enabled=False)
+        assert tel.span("a") is tel.span("b")       # shared null span
+        assert tel.new_timelines() is NULL_TIMELINES
+        tel.record("kind", x=1)
+        assert tel.records == []
+        tel.adopt_registry(MetricsRegistry())
+        assert tel.chrome_events() == [
+            e for e in tel.chrome_events()]         # stable & harmless
+        assert tel.metrics_records() == []
+
+
+# ---------------------------------------------------------------------------
+# Serving integration: byte parity + no added host syncs
+# ---------------------------------------------------------------------------
+
+
+class TestServingIntegration:
+    def test_serve_byte_identical_and_same_chunk_count(self):
+        """Enabling telemetry must change neither a single decoded token
+        nor the number of decode chunks — all stamping rides the existing
+        one-host-sync-per-chunk boundary (docs/observability.md
+        §Overhead contract)."""
+        from tests.test_serving_scheduler import _engine, _requests
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(6, seed=3)
+        plain, sched_plain = eng.serve(prompts, budgets, max_batch=3,
+                                       return_scheduler=True)
+        tel = Telemetry()
+        traced, sched_traced = eng.serve(prompts, budgets, max_batch=3,
+                                         return_scheduler=True,
+                                         telemetry=tel)
+        assert traced == plain
+        assert sched_traced.stats.chunks == sched_plain.stats.chunks
+        assert sched_traced.stats.counters_line() == \
+            sched_plain.stats.counters_line()
+        # and the trace's decode_chunk spans equal the chunk count exactly
+        spans = [e for e in tel.tracer.chrome_events()
+                 if e["ph"] == "X" and e["name"] == "decode_chunk"]
+        assert len(spans) == sched_traced.stats.chunks
+
+    def test_serve_exports_lifecycle_and_attribution(self, tmp_path):
+        from tests.test_serving_scheduler import _engine, _requests
+        eng, _, _ = _engine()
+        prompts, budgets = _requests(4, seed=1)
+        tel = Telemetry()
+        eng.serve(prompts, budgets, max_batch=2, telemetry=tel)
+        path = tel.export_trace(str(tmp_path / "t.json"))
+        names = {e["name"] for e in json.load(open(path))["traceEvents"]}
+        assert {"serve", "decode_chunk", "request_queued",
+                "request_admitted", "request_first_token",
+                "request_retired"} <= names
+        recs = tel.metrics_records()
+        assert any(r.get("kind") == "plan_attribution" for r in recs)
+        ttft = [r for r in recs if r.get("metric") == "serving_ttft_ticks"]
+        assert ttft and all(r["count"] for r in ttft)
+
+    def test_stats_view_is_registry_backed(self):
+        from repro.serving.scheduler import ScheduleStats
+        s = ScheduleStats()
+        s.chunks += 3
+        s.preemptions += 1
+        assert s.chunks == 3 and isinstance(s.chunks, int)
+        assert s.registry.counter("serving_chunks_total").value == 3
+        assert "preemptions=1" in s.counters_line()
+        with pytest.raises(AttributeError):
+            s.not_a_counter = 1
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration
+# ---------------------------------------------------------------------------
+
+
+class TestTrainerTelemetry:
+    def test_trainer_emits_step_records(self, tmp_path):
+        from repro.configs.base import (AttentionConfig, LinformerConfig,
+                                        ModelConfig, OptimizerConfig,
+                                        TrainConfig)
+        from repro.train import Trainer
+        cfg = ModelConfig(
+            name="telemetry-test", num_layers=1, d_model=32, vocab_size=64,
+            max_seq_len=16,
+            attention=AttentionConfig(
+                kind="linformer_causal", num_heads=2, num_kv_heads=2,
+                head_dim=8,
+                linformer=LinformerConfig(block_size=8, block_slots=4)),
+            dtype="float32", remat="none")
+        tcfg = TrainConfig(seq_len=16, global_batch=2, steps=3,
+                           log_every=100, checkpoint_every=100,
+                           checkpoint_dir=str(tmp_path),
+                           optimizer=OptimizerConfig(lr=1e-3,
+                                                     warmup_steps=1,
+                                                     total_steps=10))
+        tel = Telemetry()
+        Trainer(cfg, tcfg, log_fn=lambda s: None, telemetry=tel).run()
+        steps = [r for r in tel.records if r["kind"] == "train_step"]
+        assert len(steps) == 3
+        assert all(r["step_ms"] > 0 and r["loss"] is not None
+                   for r in steps)
+        assert any(r["kind"] == "plan_attribution" for r in tel.records)
+        assert tel.metrics.counter("train_steps_total").value == 3
+        spans = [e for e in tel.tracer.chrome_events()
+                 if e["ph"] == "X" and e["name"] == "train_step"]
+        assert len(spans) == 3
+
+
+# ---------------------------------------------------------------------------
+# report.py / check_trace.py fail-fast
+# ---------------------------------------------------------------------------
+
+
+def _load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(REPO_ROOT, "scripts", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestReportFailFast:
+    def test_malformed_bench_json_raises(self, tmp_path):
+        from benchmarks.report import BenchJsonError, bench_json_summary
+        (tmp_path / "BENCH_broken.json").write_text('{"mode": "quick"')
+        with pytest.raises(BenchJsonError, match="malformed JSON"):
+            bench_json_summary(out=open(os.devnull, "w"),
+                               bench_dir=str(tmp_path))
+
+    def test_non_object_bench_json_raises(self, tmp_path):
+        from benchmarks.report import BenchJsonError, bench_json_summary
+        (tmp_path / "BENCH_list.json").write_text('[1, 2]')
+        with pytest.raises(BenchJsonError, match="expected a JSON object"):
+            bench_json_summary(out=open(os.devnull, "w"),
+                               bench_dir=str(tmp_path))
+
+    def test_missing_required_field_raises(self, tmp_path):
+        from benchmarks.report import BenchJsonError, bench_json_summary
+        # a train_step record without its required fields
+        (tmp_path / "BENCH_train_step.json").write_text('{"mode": "quick"}')
+        with pytest.raises(BenchJsonError, match="missing"):
+            bench_json_summary(out=open(os.devnull, "w"),
+                               bench_dir=str(tmp_path))
+
+    def test_main_exits_nonzero(self, tmp_path, capsys):
+        from benchmarks.report import main
+        (tmp_path / "BENCH_broken.json").write_text('not json')
+        with pytest.raises(SystemExit) as exc:
+            main(["--bench-dir", str(tmp_path)])
+        assert exc.value.code == 1
+        assert "[report] ERROR" in capsys.readouterr().err
+
+    def test_trace_summary_rejects_non_trace(self, tmp_path):
+        from benchmarks.report import BenchJsonError, trace_summary
+        p = tmp_path / "not_a_trace.json"
+        p.write_text('{"hello": 1}')
+        with pytest.raises(BenchJsonError, match="traceEvents"):
+            trace_summary(str(p), out=open(os.devnull, "w"))
+
+
+class TestCheckTrace:
+    def test_missing_lifecycle_events_fail(self, tmp_path, capsys):
+        ct = _load_script("check_trace")
+        trace = tmp_path / "t.json"
+        trace.write_text(json.dumps({"traceEvents": [
+            {"ph": "i", "name": "request_queued", "ts": 0, "pid": 0,
+             "args": {}}]}))
+        metrics = tmp_path / "m.jsonl"
+        metrics.write_text("")
+        assert ct.main([str(trace), str(metrics)]) == 1
+        err = capsys.readouterr().err
+        assert "request_preempted" in err
+        assert "deadline_infeasible" in err
+
+    def test_unreadable_inputs_fail(self, tmp_path, capsys):
+        ct = _load_script("check_trace")
+        assert ct.main([str(tmp_path / "absent.json"),
+                        str(tmp_path / "absent.jsonl")]) == 1
+        assert "unreadable" in capsys.readouterr().err
