@@ -73,8 +73,9 @@ HEADER = ("| arch | shape | attn | FLOPs/dev | mem GiB/dev | compute s "
 
 def bench_json_summary(out=None, bench_dir=None):
     """Pretty-print the committed BENCH_*.json records. The serving record
-    carries THREE traces: `mixed` (continuous vs static scheduling),
-    `long_prompt` (chunked vs monolithic admission prefill), and
+    carries FOUR traces: `mixed` (continuous vs static scheduling),
+    `long_prompt` (chunked vs monolithic admission prefill), `capacity`
+    (paged-int8 vs dense-fp32 pool at equal arena bytes), and
     `overload` (2x-oversubscribed SLO trace: sheds, preemptions,
     high-priority deadline latency). Written to stderr by default so
     `report > section.md` (the EXPERIMENTS.md workflow) keeps only the
@@ -116,9 +117,21 @@ def _summarize_bench_record(name, rec, print_):
                    f"{lp['long_prompt_lens']}, chunk "
                    f"{lp['prefill_chunk']}): chunked vs monolithic "
                    f"admission {lp['speedup_cold']}x cold / "
-                   f"{lp['speedup_warm']}x warm "
-                   f"({lp['chunked']['tok_per_s_cold']} vs "
+                   f"{lp['speedup_warm']}x warm"
+                   + (f" / {lp['speedup_warm_paged']}x warm-paged"
+                      if "speedup_warm_paged" in lp else "")
+                   + f" ({lp['chunked']['tok_per_s_cold']} vs "
                    f"{lp['monolithic']['tok_per_s_cold']} tok/s cold)")
+        cp = rec.get("capacity")
+        if cp:
+            pg, dn = cp["paged_int8"], cp["dense_fp32"]
+            print_(f"  * capacity trace ({cp['mode']}): paged-int8 "
+                   f"{pg['rows']} rows vs dense-fp32 {dn['rows']} rows at "
+                   f"{cp['arena_bytes']} arena bytes "
+                   f"({cp['resident_ratio']}x resident; "
+                   f"{pg['tok_per_s']} vs {dn['tok_per_s']} tok/s, "
+                   f"{pg['pages_allocated']} pages allocated, "
+                   f"quant error bound {pg['quant_error_bound']})")
         ov = rec.get("overload")
         if ov:
             hi = ov["high_priority"]

@@ -7,16 +7,19 @@
 #      quarantined, and recovered byte-identically (REPRO_FAULT_SEED
 #      re-seeds the randomized schedule leg)
 #   4. the central-complexity-claim benchmark as a quick perf canary
-#   5. the three-trace serving benchmark (--smoke): the mixed continuous-
+#   5. the four-trace serving benchmark (--smoke): the mixed continuous-
 #      vs-static trace, the long-prompt chunked-admission-prefill trace,
-#      AND the oversubscribed overload trace (sheds + preemption +
-#      high-priority deadline latency), all recorded in BENCH_serving.json
-#      (the perf trajectory)
+#      the equal-arena-bytes capacity trace (paged-int8 must hold >= 3x
+#      the resident requests of dense-fp32 — asserted in-run), AND the
+#      oversubscribed overload trace (sheds + preemption + high-priority
+#      deadline latency), all recorded in BENCH_serving.json (the perf
+#      trajectory)
 #   6. the train-step benchmark (--smoke): fused Pallas backward vs
 #      reference-recompute, recording BENCH_train_step.json
 #   7. the forced-8-device leg: the attention-plan parity suite (fused
 #      kernels under shard_map on tp/sp/tp×sp meshes == single-device ==
-#      reference, plus the preempt/snapshot-restore parity legs) and the
+#      reference, plus the preempt/snapshot-restore parity legs, dense
+#      AND paged/quantized) and the
 #      sharded train-step benchmark (--mesh tp=2, recorded under the
 #      "mesh" key of BENCH_train_step.json)
 #   8. telemetry smoke: re-run the overload trace with --trace-out /
@@ -41,7 +44,7 @@ REPRO_FAULT_SEED=7 python -m pytest -q tests/test_serving_faults.py
 echo "== smoke benchmark: table1_complexity =="
 python -m benchmarks.run --only table1_complexity
 
-echo "== smoke benchmark: serving_throughput (mixed + long-prompt + overload) =="
+echo "== smoke benchmark: serving_throughput (mixed + long-prompt + capacity + overload) =="
 python -m benchmarks.serving_throughput --smoke
 
 echo "== smoke benchmark: train_step (fused vs reference backward) =="

@@ -219,6 +219,302 @@ def compressed_prefill_chunk(
 
 
 # ---------------------------------------------------------------------------
+# Paged, quantized (Linformer-causal) cache
+# ---------------------------------------------------------------------------
+#
+# Same attention math as the compressed cache above, different storage:
+#
+# * the raw ring buffer is stored quantized (int8, or fp8 where the jnp
+#   build has ``float8_e4m3fn``) with one fp32 scale per cached token per
+#   KV head (symmetric, amax over Dh);
+# * the compressed slot buffer becomes a shared PAGE ARENA: one page holds
+#   the r compressed slots of one completed block (page size == the block
+#   fold), quantized with one fp32 scale per page per KV head (amax over
+#   r·Dh);
+# * a per-row page table (B, max_pages) int32 maps a row's block index to a
+#   physical arena page; -1 = unallocated. Pages are allocated HOST-side
+#   (serving/paged.PageAllocator) between chunks; device code never
+#   allocates. A block fold whose table entry is unallocated (or whose
+#   block index is out of table range — padded prefill garbage) is
+#   redirected to the reserved TRASH page (arena page Np-1), whose contents
+#   are never read: slot visibility is bounded by ``glob_ok`` (completed
+#   blocks only) and snapshots slice to the row's valid page count.
+#
+# The page_table leaf carries a leading layer axis like every other leaf
+# (broadcast-identical rows) purely so it scans through the per-layer
+# ``lax.scan`` in transformer.py unchanged.
+
+
+def resolve_page_dtype(name: str = "int8"):
+    """Map a page-dtype name to (jnp dtype, symmetric qmax).
+
+    ``int8`` is always available; ``fp8`` requires a jnp build with
+    ``float8_e4m3fn`` (qmax 448) and raises otherwise so callers can gate.
+    """
+    if name == "int8":
+        return jnp.int8, 127.0
+    if name == "fp8":
+        fp8 = getattr(jnp, "float8_e4m3fn", None)
+        if fp8 is None:
+            raise ValueError("fp8 page dtype requires jnp.float8_e4m3fn")
+        return fp8, 448.0
+    raise ValueError(f"unknown page dtype {name!r} (expected int8|fp8)")
+
+
+def _qmax_for(dtype) -> float:
+    """Symmetric quantization ceiling for a page storage dtype."""
+    return 127.0 if dtype == jnp.dtype(jnp.int8) else 448.0
+
+
+def quantize_blockwise(x: jax.Array, axes, *, dtype=jnp.int8,
+                       qmax: float = 127.0) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-block quantization: ``scale = max(amax, eps)/qmax`` over
+    the reduced ``axes`` (fp32 math), values rounded+clipped for integer
+    dtypes, clipped only for fp8. Returns (q, scale) with the reduced axes
+    squeezed out of ``scale``."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = xf / scale
+    if jnp.issubdtype(dtype, jnp.integer):
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    else:
+        q = jnp.clip(q, -qmax, qmax)
+    return q.astype(dtype), jnp.squeeze(scale, axis=axes)
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_blockwise` for the cache layouts used here:
+    ``scale`` must broadcast against ``q`` once a trailing Dh axis is
+    appended (all cache scales reduce exactly the Dh axis plus, for pages,
+    the slot axis already repeated back by the gather)."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def paged_cache_spec(
+    *, num_layers: int, batch: int, max_seq: int, block_size: int,
+    block_slots: int, num_kv_heads: int, head_dim: int,
+    arena_pages: Optional[int] = None, page_dtype: str = "int8",
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Spec for the paged, quantized Linformer-causal cache.
+
+    ``arena_pages`` defaults to one full table per row plus the TRASH page
+    (capacity-equivalent to the dense pool); serving shrinks it to
+    oversubscribe. The last arena page is always reserved as TRASH.
+    """
+    maxp = max_seq // block_size
+    if arena_pages is None:
+        arena_pages = batch * maxp + 1
+    if arena_pages < 2:
+        raise ValueError("arena_pages must be >= 2 (1 usable + TRASH)")
+    pdt, _ = resolve_page_dtype(page_dtype)
+    L, B, c, r = num_layers, batch, block_size, block_slots
+    Hkv, Dh, Np = num_kv_heads, head_dim, arena_pages
+    f32, i32 = jnp.float32, jnp.int32
+    sd = jax.ShapeDtypeStruct
+    return {
+        "raw_k_q": sd((L, B, c, Hkv, Dh), pdt),
+        "raw_v_q": sd((L, B, c, Hkv, Dh), pdt),
+        "raw_k_s": sd((L, B, c, Hkv), f32),
+        "raw_v_s": sd((L, B, c, Hkv), f32),
+        "page_k": sd((L, Np, r, Hkv, Dh), pdt),
+        "page_v": sd((L, Np, r, Hkv, Dh), pdt),
+        "page_k_s": sd((L, Np, Hkv), f32),
+        "page_v_s": sd((L, Np, Hkv), f32),
+        "page_table": sd((L, B, maxp), i32),
+        "lengths": sd((B,), i32),
+    }
+
+
+def init_paged_cache(**kw) -> Dict[str, jax.Array]:
+    """Zero-initialized paged cache; the page table starts all-unallocated
+    (-1), NOT zero — page 0 is a real arena page."""
+    spec = paged_cache_spec(**kw)
+    out = {}
+    for k, v in spec.items():
+        if k == "page_table":
+            out[k] = jnp.full(v.shape, -1, v.dtype)
+        else:
+            out[k] = jnp.zeros(v.shape, v.dtype)
+    return out
+
+
+def paged_gather(page_q: jax.Array, page_s: jax.Array,
+                 page_table: jax.Array, ) -> Tuple[jax.Array, jax.Array]:
+    """Gather a row-major dense (B, M, Hkv, Dh) quantized slot view plus
+    per-slot scales (B, M, Hkv) from the page arena through the page table.
+    Unallocated entries (-1) read page 0's bytes; those slots are never
+    visible (``glob_ok`` bounds visibility to allocated, completed blocks)."""
+    B, maxp = page_table.shape
+    Np, r, Hkv, Dh = page_q.shape
+    idx = jnp.clip(page_table, 0, Np - 1)
+    gq = page_q[idx].reshape(B, maxp * r, Hkv, Dh)
+    gs = jnp.repeat(page_s[idx], r, axis=1)            # (B, maxp·r, Hkv)
+    return gq, gs
+
+
+def paged_decode_attention(
+    q_t: jax.Array,           # (B, 1, H, Dh) — rope already applied at pos t
+    k_t: jax.Array,           # (B, 1, Hkv, Dh)
+    v_t: jax.Array,
+    layer_cache: Dict[str, jax.Array],
+    E: jax.Array,             # (c, r) or (Hkv, c, r)
+    F: jax.Array,
+    t: jax.Array,             # () or (B,) int32 — tokens already cached per row
+    *,
+    scale: Optional[float] = None,
+    plan=None,                # AttentionPlan | backend string | None
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step over the paged, quantized cache.
+
+    Identical bookkeeping to :func:`compressed_decode_attention` with three
+    storage differences: (a) the incoming token is quantized per (row, head)
+    into the int8/fp8 ring alongside its scale; (b) attention reads a dense
+    gather of the page arena (dequantized INSIDE the kernel on the fused
+    path — see ``plan.decode_attention_q``); (c) a completed block's fold is
+    re-quantized per (row, head) over (r, Dh) and scattered to the row's
+    table page — rows that did not complete a block, or whose block has no
+    allocated page, scatter to the TRASH page instead.
+    """
+    from repro.parallel.plan import as_plan
+    plan = as_plan(plan)
+    rk_q, rv_q = layer_cache["raw_k_q"], layer_cache["raw_v_q"]
+    rk_s, rv_s = layer_cache["raw_k_s"], layer_cache["raw_v_s"]
+    pk, pv = layer_cache["page_k"], layer_cache["page_v"]
+    pk_s, pv_s = layer_cache["page_k_s"], layer_cache["page_v_s"]
+    pt = layer_cache["page_table"]
+    B, c, Hkv, Dh = rk_q.shape
+    Np, r = pk.shape[0], pk.shape[1]
+    maxp = pt.shape[1]
+    M = maxp * r
+    qmax = _qmax_for(pk.dtype)
+    trash = Np - 1
+    scale_ = scale if scale is not None else Dh ** -0.5
+
+    t = rowwise_t(t, B)
+    pos = jnp.mod(t, c)                         # (B,)
+    blk = t // c                                # (B,)
+
+    k_q, k_s = quantize_blockwise(k_t, (3,), dtype=pk.dtype, qmax=qmax)
+    v_q, v_s = quantize_blockwise(v_t, (3,), dtype=pk.dtype, qmax=qmax)
+    rk_q = _row_update(rk_q, k_q, pos)
+    rv_q = _row_update(rv_q, v_q, pos)
+    rk_s = _row_update(rk_s, k_s, pos)
+    rv_s = _row_update(rv_s, v_s, pos)
+
+    gk, gk_s = paged_gather(pk, pk_s, pt)
+    gv, gv_s = paged_gather(pv, pv_s, pt)
+    loc_ok = jnp.arange(c)[None, :] <= pos[:, None]         # (B, c)
+    glob_ok = jnp.arange(M)[None, :] < (blk * r)[:, None]   # (B, M)
+    out = plan.decode_attention_q(
+        q_t, rk_q, rv_q, rk_s, rv_s, gk, gv, gk_s, gv_s,
+        loc_ok, glob_ok, scale=scale_)
+
+    # fold a completed block: dequantize the ring, compress, re-quantize per
+    # (row, head) over (r, Dh), scatter to the row's table page. Rows not on
+    # a fold boundary — or without an allocated page — go to TRASH.
+    raw_k_f = dequantize_blockwise(rk_q, rk_s)
+    raw_v_f = dequantize_blockwise(rv_q, rv_s)
+    Ef, Ff = E.astype(jnp.float32), F.astype(jnp.float32)
+    if E.ndim == 2:
+        new_ks = jnp.einsum("bchd,cr->brhd", raw_k_f, Ef)
+        new_vs = jnp.einsum("bchd,cr->brhd", raw_v_f, Ff)
+    else:
+        new_ks = jnp.einsum("bchd,hcr->brhd", raw_k_f, Ef)
+        new_vs = jnp.einsum("bchd,hcr->brhd", raw_v_f, Ff)
+    fk_q, fk_s = quantize_blockwise(new_ks, (1, 3), dtype=pk.dtype, qmax=qmax)
+    fv_q, fv_s = quantize_blockwise(new_vs, (1, 3), dtype=pk.dtype, qmax=qmax)
+
+    done = pos == (c - 1)
+    pt_blk = jnp.take_along_axis(
+        pt, jnp.clip(blk, 0, maxp - 1)[:, None], axis=1)[:, 0]
+    commit = done & (pt_blk >= 0) & (blk < maxp)
+    dst = jnp.where(commit, pt_blk, trash)                  # (B,)
+    pk = pk.at[dst].set(fk_q)
+    pv = pv.at[dst].set(fv_q)
+    pk_s = pk_s.at[dst].set(fk_s)
+    pv_s = pv_s.at[dst].set(fv_s)
+
+    return out, {"raw_k_q": rk_q, "raw_v_q": rv_q,
+                 "raw_k_s": rk_s, "raw_v_s": rv_s,
+                 "page_k": pk, "page_v": pv,
+                 "page_k_s": pk_s, "page_v_s": pv_s,
+                 "page_table": pt}
+
+
+def paged_prefill_chunk(
+    q: jax.Array,             # (B, P, H, Dh) — one prefill chunk, rope applied
+    k: jax.Array,             # (B, P, Hkv, Dh)
+    v: jax.Array,
+    layer_cache: Dict[str, jax.Array],
+    E: jax.Array,             # (c, r) or (Hkv, c, r)
+    F: jax.Array,
+    t0: jax.Array,            # (B,) int32 — row's current length, multiple of c
+    *,
+    scale: Optional[float] = None,
+    plan=None,                # AttentionPlan | backend string | None
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunked-prefill step over the paged, quantized cache.
+
+    The chunk's P/c block folds are quantized per (row, block, head) and
+    scattered to the row's table pages (unallocated or out-of-range blocks —
+    padded prefill garbage — go to TRASH). Attention then reads the dense
+    gather of the arena taken AFTER the scatter, so a chunk's own earlier
+    blocks are visible CACHE-ROUNDED — the same chunked-admission rounding
+    contract as the low-precision dense cache (see
+    :func:`compressed_prefill_chunk`), one notch coarser. The raw ring is
+    untouched, as in the dense path.
+    """
+    from repro.parallel.plan import as_plan
+    plan = as_plan(plan)
+    rk_q, rv_q = layer_cache["raw_k_q"], layer_cache["raw_v_q"]
+    rk_s, rv_s = layer_cache["raw_k_s"], layer_cache["raw_v_s"]
+    pk, pv = layer_cache["page_k"], layer_cache["page_v"]
+    pk_s, pv_s = layer_cache["page_k_s"], layer_cache["page_v_s"]
+    pt = layer_cache["page_table"]
+    B, P, Hkv, Dh = k.shape
+    c = rk_q.shape[1]
+    r = E.shape[-1]
+    Np = pk.shape[0]
+    maxp = pt.shape[1]
+    qmax = _qmax_for(pk.dtype)
+    trash = Np - 1
+    scale_ = scale if scale is not None else q.shape[-1] ** -0.5
+    if P % c != 0:
+        raise ValueError(f"prefill chunk P={P} not a multiple of block {c}")
+    nb = P // c
+
+    from repro.core.causal import compress_blocks
+    kf = k.astype(jnp.float32).reshape(B, nb, c, Hkv, Dh)
+    vf = v.astype(jnp.float32).reshape(B, nb, c, Hkv, Dh)
+    kbar = compress_blocks(kf, E.astype(jnp.float32))       # (B, nb, r, Hkv, Dh)
+    vbar = compress_blocks(vf, F.astype(jnp.float32))
+    bk_q, bk_s = quantize_blockwise(kbar, (2, 4), dtype=pk.dtype, qmax=qmax)
+    bv_q, bv_s = quantize_blockwise(vbar, (2, 4), dtype=pk.dtype, qmax=qmax)
+
+    t0 = rowwise_t(t0, B)
+    blk0 = t0 // c
+    abs_blk = blk0[:, None] + jnp.arange(nb)[None, :]       # (B, nb)
+    pids = jnp.take_along_axis(pt, jnp.clip(abs_blk, 0, maxp - 1), axis=1)
+    dst = jnp.where((pids >= 0) & (abs_blk < maxp), pids, trash).reshape(-1)
+    pk = pk.at[dst].set(bk_q.reshape(B * nb, r, Hkv, Dh))
+    pv = pv.at[dst].set(bv_q.reshape(B * nb, r, Hkv, Dh))
+    pk_s = pk_s.at[dst].set(bk_s.reshape(B * nb, Hkv))
+    pv_s = pv_s.at[dst].set(bv_s.reshape(B * nb, Hkv))
+
+    gk, gk_s = paged_gather(pk, pk_s, pt)
+    gv, gv_s = paged_gather(pv, pv_s, pt)
+    out = plan.chunk_prefill_attention_q(
+        q, k, v, gk, gv, gk_s, gv_s, blk0,
+        block_size=c, block_slots=r, scale=scale_)
+    return out, {"raw_k_q": rk_q, "raw_v_q": rv_q,
+                 "raw_k_s": rk_s, "raw_v_s": rv_s,
+                 "page_k": pk, "page_v": pv,
+                 "page_k_s": pk_s, "page_v_s": pv_s,
+                 "page_table": pt}
+
+
+# ---------------------------------------------------------------------------
 # Full KV cache (standard-attention baseline)
 # ---------------------------------------------------------------------------
 

@@ -136,6 +136,83 @@ def _prefix_kernel_res(q_ref, kl_ref, vl_ref, ck_ref, cv_ref, nb0_ref,
     denom_ref[0] = denom[:, 0]
 
 
+def _prefix_kernel_q(q_ref, kl_ref, vl_ref, ck_ref, cv_ref, cks_ref, cvs_ref,
+                     nb0_ref, out_ref, *, scale: float, r: int):
+    """Quantized-cache variant of `_prefix_kernel`: the pinned compressed
+    operand arrives int8/fp8 with per-slot fp32 scales and is dequantized IN
+    VMEM before the shared `_attend_block` body; the chunk's own local K/V
+    are activations and stay full precision. fp32 compute throughout (the
+    dequantized prefix is fp32, and lax.dot_general needs matching operand
+    dtypes)."""
+    n = pl.program_id(1)
+    nb0 = nb0_ref[0, 0]
+    ck = ck_ref[0].astype(jnp.float32) * cks_ref[...][0][:, None]
+    cv = cv_ref[0].astype(jnp.float32) * cvs_ref[...][0][:, None]
+    out, _, _ = _attend_block(
+        q_ref[0].astype(jnp.float32), kl_ref[0].astype(jnp.float32),
+        vl_ref[0].astype(jnp.float32), ck, cv, n + nb0, scale, r)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def blockwise_causal_prefix_attn_q(
+    q: jax.Array,        # (B, H, P, Dh) — one prefill chunk of queries
+    k: jax.Array,        # (B, Hkv, P, Dh) — chunk keys (local, exact)
+    v: jax.Array,
+    comp_k: jax.Array,   # (B, Hkv, M, Dh) int8/fp8 page gather
+    comp_v: jax.Array,
+    comp_k_s: jax.Array,  # (B, Hkv, M) fp32 per-slot scales
+    comp_v_s: jax.Array,
+    start_blocks: jax.Array,   # (B,) int32 — per-row absolute start block
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized-cache sibling of :func:`blockwise_causal_prefix_attn`: same
+    grid and GQA routing, the pinned compressed operand stays in its storage
+    dtype until the in-VMEM dequant. Forward-only — the paged cache is a
+    serving structure, never differentiated through."""
+    B, H, P, Dh = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    c = block_size
+    assert P % c == 0, (P, c)
+    nb = P // c
+    M = comp_k.shape[2]
+    q3 = q.reshape(B * H, P, Dh)
+    k3 = k.reshape(B * Hkv, P, Dh)
+    v3 = v.reshape(B * Hkv, P, Dh)
+    ck3 = comp_k.reshape(B * Hkv, M, Dh)
+    cv3 = comp_v.reshape(B * Hkv, M, Dh)
+    cks = comp_k_s.astype(jnp.float32).reshape(B * Hkv, M)
+    cvs = comp_v_s.astype(jnp.float32).reshape(B * Hkv, M)
+    nb0 = jnp.asarray(start_blocks, jnp.int32).reshape(B, 1)
+
+    def kv_row(bh):
+        return (bh // H) * Hkv + (bh % H) // G
+
+    out = pl.pallas_call(
+        functools.partial(_prefix_kernel_q, scale=scale, r=block_slots),
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh, n: (kv_row(bh), n, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh, n: (kv_row(bh), 0, 0)),
+            pl.BlockSpec((1, M), lambda bh, n: (kv_row(bh), 0)),
+            pl.BlockSpec((1, M), lambda bh, n: (kv_row(bh), 0)),
+            pl.BlockSpec((1, 1), lambda bh, n: (bh // H, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, Dh), lambda bh, n: (bh, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, P, Dh), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3, ck3, cv3, cks, cvs, nb0)
+    return out.reshape(B, H, P, Dh)
+
+
 def blockwise_causal_prefix_attn(
     q: jax.Array,        # (B, H, P, Dh) — one prefill chunk of queries
     k: jax.Array,        # (B, Hkv, P, Dh) — chunk keys (local, exact)

@@ -94,26 +94,49 @@ def linformer_attn(
 # ---------------------------------------------------------------------------
 
 
-def _decode_kernel(q_ref, rk_ref, rv_ref, ck_ref, cv_ref, bl_ref, bg_ref,
-                   out_ref, *, scale: float):
-    q = q_ref[0]                                             # (G, Dh)
+def _attend_pinned(q, rk, rv, ck, cv, bl, bg, scale):
+    """Array-level decode attend over the two pinned operands: one-pass
+    softmax across the concatenated [raw block | compressed prefix] scores.
+    Shared by the dense and the dequant-in-kernel quantized variants."""
     s_loc = jax.lax.dot_general(
-        q, rk_ref[0], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale + bl_ref[...]
+        q, rk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale + bl
     s_glob = jax.lax.dot_general(
-        q, ck_ref[0], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale + bg_ref[...]
+        q, ck, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale + bg
     s = jnp.concatenate([s_loc, s_glob], axis=-1)            # (G, c + M)
     s = s - jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
-    c = rk_ref.shape[1]
+    c = rk.shape[0]
     out = jax.lax.dot_general(
-        p[:, :c].astype(rv_ref.dtype), rv_ref[0], (((1,), (0,)), ((), ())),
+        p[:, :c].astype(rv.dtype), rv, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     out += jax.lax.dot_general(
-        p[:, c:].astype(cv_ref.dtype), cv_ref[0], (((1,), (0,)), ((), ())),
+        p[:, c:].astype(cv.dtype), cv, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+    return out
+
+
+def _decode_kernel(q_ref, rk_ref, rv_ref, ck_ref, cv_ref, bl_ref, bg_ref,
+                   out_ref, *, scale: float):
+    out = _attend_pinned(q_ref[0], rk_ref[0], rv_ref[0], ck_ref[0],
+                         cv_ref[0], bl_ref[...], bg_ref[...], scale)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def _decode_kernel_q(q_ref, rk_ref, rv_ref, ck_ref, cv_ref,
+                     rks_ref, rvs_ref, cks_ref, cvs_ref,
+                     bl_ref, bg_ref, out_ref, *, scale: float):
+    """Quantized-cache decode kernel: operands arrive int8/fp8 with per-token
+    (ring) / per-slot (pages) fp32 scales and are dequantized IN VMEM —
+    HBM traffic for the two pinned caches shrinks with the storage dtype."""
+    rk = rk_ref[0].astype(jnp.float32) * rks_ref[...][0][:, None]
+    rv = rv_ref[0].astype(jnp.float32) * rvs_ref[...][0][:, None]
+    ck = ck_ref[0].astype(jnp.float32) * cks_ref[...][0][:, None]
+    cv = cv_ref[0].astype(jnp.float32) * cvs_ref[...][0][:, None]
+    out = _attend_pinned(q_ref[0].astype(jnp.float32), rk, rv, ck, cv,
+                         bl_ref[...], bg_ref[...], scale)
     out_ref[0] = out.astype(out_ref.dtype)
 
 
@@ -150,5 +173,57 @@ def decode_attn(
     )(q.reshape(B * Hkv, G, Dh), raw_k.reshape(B * Hkv, c, Dh),
       raw_v.reshape(B * Hkv, c, Dh), comp_k.reshape(B * Hkv, M, Dh),
       comp_v.reshape(B * Hkv, M, Dh), bias_loc.astype(jnp.float32),
+      bias_glob.astype(jnp.float32))
+    return out.reshape(B, Hkv, G, Dh)
+
+
+def decode_attn_q(
+    q: jax.Array,        # (B, Hkv, G, Dh) — GQA group folded into the q axis
+    raw_k: jax.Array,    # (B, Hkv, c, Dh) int8/fp8 ring, pinned
+    raw_v: jax.Array,
+    comp_k: jax.Array,   # (B, Hkv, M, Dh) int8/fp8 page gather, pinned
+    comp_v: jax.Array,
+    raw_k_s: jax.Array,  # (B, Hkv, c) fp32 per-token scales
+    raw_v_s: jax.Array,
+    comp_k_s: jax.Array,  # (B, Hkv, M) fp32 per-slot scales
+    comp_v_s: jax.Array,
+    bias_loc: jax.Array,   # (B, c) fp32: 0 attendable / NEG_INF masked
+    bias_glob: jax.Array,  # (B, M) fp32
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized-cache sibling of :func:`decode_attn`: identical grid and
+    pinning, four extra per-(row, head) scale operands, dequantization
+    in-kernel (VMEM) — HBM traffic for the two pinned caches shrinks with
+    the storage dtype. Forward-only: serving decode never differentiates
+    through the cache."""
+    B, Hkv, G, Dh = q.shape
+    c, M = raw_k.shape[2], comp_k.shape[2]
+    grid = (B * Hkv,)
+    kv3 = lambda x, n: x.reshape(B * Hkv, n, Dh)
+    sc2 = lambda x, n: x.astype(jnp.float32).reshape(B * Hkv, n)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel_q, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, c, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, M, Dh), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, c), lambda bh: (bh, 0)),
+            pl.BlockSpec((1, c), lambda bh: (bh, 0)),
+            pl.BlockSpec((1, M), lambda bh: (bh, 0)),
+            pl.BlockSpec((1, M), lambda bh: (bh, 0)),
+            pl.BlockSpec((1, c), lambda bh: (bh // Hkv, 0)),
+            pl.BlockSpec((1, M), lambda bh: (bh // Hkv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dh), lambda bh: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(q.reshape(B * Hkv, G, Dh), kv3(raw_k, c), kv3(raw_v, c),
+      kv3(comp_k, M), kv3(comp_v, M), sc2(raw_k_s, c), sc2(raw_v_s, c),
+      sc2(comp_k_s, M), sc2(comp_v_s, M), bias_loc.astype(jnp.float32),
       bias_glob.astype(jnp.float32))
     return out.reshape(B, Hkv, G, Dh)

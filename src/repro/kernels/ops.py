@@ -503,3 +503,97 @@ def fused_decode_attention(
         bias_loc, bias_glob, scale=scale,
         interpret=_auto_interpret(interpret))
     return out.reshape(B, 1, H, Dh)
+
+
+def _scales_to_kernel_layout(s: jax.Array) -> jax.Array:
+    """(B, N, Hkv) per-token/per-slot scales → kernel layout (B, Hkv, N)."""
+    return jnp.transpose(s, (0, 2, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def fused_decode_attention_q(
+    q_t: jax.Array,        # (B, 1, H, Dh) — one decode token per row
+    raw_k: jax.Array,      # (B, c, Hkv, Dh) int8/fp8 quantized ring
+    raw_v: jax.Array,
+    raw_k_s: jax.Array,    # (B, c, Hkv) fp32 per-token per-head scales
+    raw_v_s: jax.Array,
+    comp_k: jax.Array,     # (B, M, Hkv, Dh) int8/fp8 page-gathered slots
+    comp_v: jax.Array,
+    comp_k_s: jax.Array,   # (B, M, Hkv) fp32 per-slot per-head scales
+    comp_v_s: jax.Array,
+    bias_loc: jax.Array,   # (B, c) fp32 — 0 attendable, NEG_INF masked
+    bias_glob: jax.Array,  # (B, M) fp32
+    *,
+    scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Quantized-cache sibling of :func:`fused_decode_attention`: same GQA
+    group fold and two-pinned-operand cache residency, with the ring and the
+    page-gathered compressed slots arriving in their storage dtype plus
+    per-(row, head) fp32 scales, dequantized inside the kernel (VMEM) — the
+    HBM read of both pinned caches shrinks with the storage dtype.
+    Forward-only, like the dense decode wrapper (inference path)."""
+    B, _, H, Dh = q_t.shape
+    Hkv = raw_k.shape[2]
+    G = H // Hkv
+    M = comp_k.shape[1]
+    if M > MAX_PINNED_SLOTS:
+        raise ValueError(
+            f"fused_decode_attention_q pins the full M = (max_pages·r) = "
+            f"{M}-slot page gather in VMEM, which requires "
+            f"M ≤ {MAX_PINNED_SLOTS}. Raise block_size, lower block_slots "
+            f"or max_seq, or use backend='reference' for this cache shape.")
+    qk = q_t.reshape(B, Hkv, G, Dh)             # kernel layout: S-axis = G
+    out = la.decode_attn_q(
+        qk, _to_kernel_layout(raw_k), _to_kernel_layout(raw_v),
+        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v),
+        _scales_to_kernel_layout(raw_k_s), _scales_to_kernel_layout(raw_v_s),
+        _scales_to_kernel_layout(comp_k_s),
+        _scales_to_kernel_layout(comp_v_s),
+        bias_loc, bias_glob, scale=scale,
+        interpret=_auto_interpret(interpret))
+    return out.reshape(B, 1, H, Dh)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "block_slots", "scale", "interpret"))
+def fused_chunk_prefill_attention_q(
+    q: jax.Array,        # (B, P, H, Dh) — one query chunk, model layout
+    k: jax.Array,        # (B, P, Hkv, Dh) — the chunk's own keys (exact)
+    v: jax.Array,
+    comp_k: jax.Array,   # (B, M, Hkv, Dh) int8/fp8 page-gathered slot buffer
+    comp_v: jax.Array,
+    comp_k_s: jax.Array,  # (B, M, Hkv) fp32 per-slot per-head scales
+    comp_v_s: jax.Array,
+    start_blocks: jax.Array,   # (B,) int — per-row absolute start block
+    *,
+    block_size: int,
+    block_slots: int,
+    scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Quantized-cache sibling of :func:`fused_chunk_prefill_attention`: the
+    pinned compressed operand is the page-gathered quantized slot buffer
+    plus per-slot scales, dequantized inside the kernel; the chunk's own
+    local K/V are activations and stay full precision. Forward-only — the
+    paged cache is a serving structure, never differentiated through."""
+    if q.shape[1] % block_size != 0:
+        raise ValueError(
+            f"P={q.shape[1]} must be a multiple of block_size={block_size}")
+    M = comp_k.shape[1]
+    if M > MAX_PINNED_SLOTS:
+        raise ValueError(
+            f"fused_chunk_prefill_attention_q pins the full M = "
+            f"(max_pages·r) = {M}-slot page gather in VMEM per grid step, "
+            f"which requires M ≤ {MAX_PINNED_SLOTS}. Raise block_size, "
+            f"lower block_slots or max_seq, or use backend='reference' for "
+            f"this cache shape.")
+    out = bca.blockwise_causal_prefix_attn_q(
+        _to_kernel_layout(q), _to_kernel_layout(k), _to_kernel_layout(v),
+        _to_kernel_layout(comp_k), _to_kernel_layout(comp_v),
+        _scales_to_kernel_layout(comp_k_s),
+        _scales_to_kernel_layout(comp_v_s),
+        jnp.asarray(start_blocks, jnp.int32), block_size=block_size,
+        block_slots=block_slots, scale=scale,
+        interpret=_auto_interpret(interpret))
+    return _from_kernel_layout(out)

@@ -204,8 +204,12 @@ def apply_attention_decode(
     q, k, v = _qkv(params, x_t, cfg, positions=positions)
     if cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
-        out, new_cache = cache_lib.compressed_decode_attention(
-            q, k, v, layer_cache, E, F, t, plan=plan)
+        # paged, quantized cache routes on its page_table leaf — same
+        # attention math, different storage (core/cache.py paged family)
+        decode_fn = (cache_lib.paged_decode_attention
+                     if "page_table" in layer_cache
+                     else cache_lib.compressed_decode_attention)
+        out, new_cache = decode_fn(q, k, v, layer_cache, E, F, t, plan=plan)
     elif cfg.kind == "standard":
         out, new_cache = cache_lib.full_decode_attention(
             q, k, v, layer_cache, t)
@@ -240,8 +244,10 @@ def apply_attention_prefill_chunk(
     q, k, v = _qkv(params, x, cfg, positions=positions)
     if cfg.kind == "linformer_causal":
         E, F = _resolve_ef(params, shared_lin, cfg)
-        out, new_cache = cache_lib.compressed_prefill_chunk(
-            q, k, v, layer_cache, E, F, t0, plan=plan)
+        prefill_fn = (cache_lib.paged_prefill_chunk
+                      if "page_table" in layer_cache
+                      else cache_lib.compressed_prefill_chunk)
+        out, new_cache = prefill_fn(q, k, v, layer_cache, E, F, t0, plan=plan)
     elif cfg.kind == "standard":
         out, new_cache = cache_lib.full_prefill_chunk(
             q, k, v, layer_cache, t0)
@@ -286,3 +292,20 @@ def decode_cache_spec(cfg: AttentionConfig, *, num_layers: int, batch: int,
     return cache_lib.full_cache_spec(
         num_layers=num_layers, batch=batch, max_seq=max_seq,
         num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim, dtype=dtype)
+
+
+def paged_decode_cache_spec(cfg: AttentionConfig, *, num_layers: int,
+                            batch: int, max_seq: int,
+                            arena_pages: Optional[int] = None,
+                            page_dtype: str = "int8"):
+    """ShapeDtypeStruct spec of the paged, quantized decode cache (the
+    linformer_causal serving pool in int8/fp8 page storage)."""
+    if cfg.kind != "linformer_causal":
+        raise ValueError(
+            f"paged cache requires kind='linformer_causal', got {cfg.kind!r}")
+    return cache_lib.paged_cache_spec(
+        num_layers=num_layers, batch=batch, max_seq=max_seq,
+        block_size=cfg.linformer.block_size,
+        block_slots=cfg.linformer.block_slots,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        arena_pages=arena_pages, page_dtype=page_dtype)

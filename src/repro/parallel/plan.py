@@ -300,6 +300,90 @@ class AttentionPlan:
              P(b, None), P(b, None)),
             kv_spec)(q_t, raw_k, raw_v, comp_k, comp_v, bias_loc, bias_glob)
 
+    # -- decode / chunk prefill, quantized paged cache ----------------------
+
+    def decode_attention_q(self, q_t, raw_k, raw_v, raw_k_s, raw_v_s,
+                           comp_k, comp_v, comp_k_s, comp_v_s, loc_ok,
+                           glob_ok, *, scale: float) -> jax.Array:
+        """Quantized-cache decode: the ring and the page-gathered slots
+        arrive in their storage dtype (int8/fp8) with fp32 scales —
+        raw_*_s (B, c, Hkv) per token, comp_*_s (B, M, Hkv) per slot. The
+        fused path dequantizes INSIDE the kernel; the reference path
+        dequantizes in jnp and reuses the dense reference (the parity
+        oracle the tolerance bands are measured against). Sharding is the
+        dense decode sharding — scales shard with their heads."""
+        if not self.fused:
+            deq = lambda x, s: x.astype(jnp.float32) * s[..., None]
+            return causal_lib.masked_decode_attention(
+                q_t, deq(raw_k, raw_k_s), deq(raw_v, raw_v_s),
+                deq(comp_k, comp_k_s), deq(comp_v, comp_v_s),
+                loc_ok, glob_ok, scale=scale)
+        bias_loc = jnp.where(loc_ok, 0.0,
+                             causal_lib.NEG_INF).astype(jnp.float32)
+        bias_glob = jnp.where(glob_ok, 0.0,
+                              causal_lib.NEG_INF).astype(jnp.float32)
+        if not self.manual or self.tp <= 1:
+            return kernel_ops.fused_decode_attention_q(
+                q_t, raw_k, raw_v, raw_k_s, raw_v_s, comp_k, comp_v,
+                comp_k_s, comp_v_s, bias_loc, bias_glob, scale=scale)
+        B = q_t.shape[0]
+        b = self._batch_axes(B)
+        tp = self._head_axis()
+        kv_spec = P(b, None, tp, None)      # per-shard pinned cache slots
+        sc_spec = P(b, None, tp)            # (B, c|M, Hkv) scales
+
+        def body(q_l, rk_l, rv_l, rks_l, rvs_l, ck_l, cv_l, cks_l, cvs_l,
+                 bl_l, bg_l):
+            return kernel_ops.fused_decode_attention_q(
+                q_l, rk_l, rv_l, rks_l, rvs_l, ck_l, cv_l, cks_l, cvs_l,
+                bl_l, bg_l, scale=scale)
+
+        return self._smap(
+            body,
+            (kv_spec, kv_spec, kv_spec, sc_spec, sc_spec, kv_spec, kv_spec,
+             sc_spec, sc_spec, P(b, None), P(b, None)),
+            kv_spec)(q_t, raw_k, raw_v, raw_k_s, raw_v_s, comp_k, comp_v,
+                     comp_k_s, comp_v_s, bias_loc, bias_glob)
+
+    def chunk_prefill_attention_q(self, q, k, v, comp_k, comp_v, comp_k_s,
+                                  comp_v_s, start_blocks, *, block_size: int,
+                                  block_slots: int, scale: float) -> jax.Array:
+        """Quantized-cache chunk prefill: the page-gathered compressed
+        buffer stays in its storage dtype with per-slot scales
+        (comp_*_s (B, M, Hkv)); the chunk's own K/V are full-precision
+        activations. Same sharding shape as the dense chunk prefill."""
+        if not self.fused:
+            deq = lambda x, s: x.astype(jnp.float32) * s[..., None]
+            return causal_lib.blockwise_causal_prefix_attention(
+                q, k, v, deq(comp_k, comp_k_s), deq(comp_v, comp_v_s),
+                start_blocks, block_size=block_size,
+                block_slots=block_slots, scale=scale)
+        if not self.manual:
+            return kernel_ops.fused_chunk_prefill_attention_q(
+                q, k, v, comp_k, comp_v, comp_k_s, comp_v_s, start_blocks,
+                block_size=block_size, block_slots=block_slots, scale=scale)
+        B, Pq, _, _ = q.shape
+        sp_axis = self._sp_for(Pq, block_size, required=False)
+        nb_l = (Pq // self.sp) // block_size if sp_axis else 0
+        b = self._batch_axes(B)
+        tp = self._head_axis()
+        qkv_spec = P(b, sp_axis, tp, None)
+        comp_spec = P(b, None, tp, None)    # full pinned buffer per shard
+        sc_spec = P(b, None, tp)            # (B, M, Hkv) per-slot scales
+
+        def body(q_l, k_l, v_l, ck_l, cv_l, cks_l, cvs_l, sb_l):
+            if sp_axis is not None:
+                sb_l = sb_l + jax.lax.axis_index(sp_axis) * nb_l
+            return kernel_ops.fused_chunk_prefill_attention_q(
+                q_l, k_l, v_l, ck_l, cv_l, cks_l, cvs_l, sb_l,
+                block_size=block_size, block_slots=block_slots, scale=scale)
+
+        return self._smap(
+            body,
+            (qkv_spec,) * 3 + (comp_spec, comp_spec, sc_spec, sc_spec, P(b)),
+            qkv_spec)(q, k, v, comp_k, comp_v, comp_k_s, comp_v_s,
+                      start_blocks)
+
     # -- cache / batch placement specs --------------------------------------
 
     def cache_pspecs(self, cache: Dict) -> Dict[str, P]:
@@ -307,13 +391,23 @@ class AttentionPlan:
         tp — the decode kernel's two pinned operands get PER-SHARD slots —
         everything else (layers, batch rows, slot/ring positions)
         replicated; `lengths` (B,) is host-consulted bookkeeping and stays
-        replicated."""
+        replicated.
+
+        Paged-cache leaves are name-aware: the page table (int32 indices,
+        no head axis) replicates; scale leaves (``*_s`` — (..., c|page,
+        Hkv), head axis LAST) shard their last axis; quantized payloads
+        (ring (L, B, c, Hkv, Dh) and arena (L, Np, r, Hkv, Dh)) follow the
+        generic Hkv-at-nd-2 rule."""
         tp = self._head_axis()
         specs = {}
         for name, leaf in cache.items():
             nd = getattr(leaf, "ndim", None) or len(leaf.shape)
-            if name == "lengths" or nd < 2:
+            if name == "lengths" or name == "page_table" or nd < 2:
                 specs[name] = P(*([None] * nd))
+            elif name.endswith("_s"):
+                parts = [None] * nd
+                parts[nd - 1] = tp          # (..., Hkv) scales
+                specs[name] = P(*parts)
             else:
                 parts = [None] * nd
                 parts[nd - 2] = tp          # (..., Hkv, Dh)

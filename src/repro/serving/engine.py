@@ -66,10 +66,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
 from repro.data.pipeline import EOS
 from repro.models import model as model_lib
 from repro.parallel.sharding import ParallelCtx
 from repro.telemetry import as_telemetry, plan_attribution
+
+# Leaves of the PAGED pool cache that live in the shared page arena —
+# indexed by physical page (L, Np, ...), not by pool row. Every per-row
+# gather/scatter must treat them wholesale (the arena is one shared object;
+# rows reach it only through their page-table indirection).
+PAGED_ARENA_KEYS = ("page_k", "page_v", "page_k_s", "page_v_s")
 
 
 def bucket_requests(prompts: Sequence[Sequence[int]], max_batch: int
@@ -109,6 +116,9 @@ class ServingEngine:
         decode_chunk: int = 32,
         attention_backend: Optional[str] = None,
         prefill_chunk: int = 0,
+        cache_format: str = "dense",
+        arena_pages: Optional[int] = None,
+        page_dtype: str = "int8",
         telemetry=None,
     ):
         if attention_backend is not None:
@@ -127,6 +137,25 @@ class ServingEngine:
         self.temperature = temperature
         self.decode_chunk = max(1, decode_chunk)
         self.prefill_chunk = int(prefill_chunk)
+        # Paged, quantized pool storage (cache_format="paged"): the pool's
+        # per-row K/V lives as int8/fp8 pages in a shared arena behind a
+        # per-row page table; `arena_pages` (None = capacity-equivalent to
+        # the dense pool) is the oversubscription knob. Affects ONLY the
+        # slot-pool path — one-shot generate/serve_static still run dense.
+        if cache_format not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_format {cache_format!r} "
+                             "(expected 'dense' or 'paged')")
+        self.cache_format = cache_format
+        self.arena_pages = arena_pages
+        self.page_dtype = page_dtype
+        if self.paged:
+            if cfg.attention.kind != "linformer_causal":
+                raise ValueError(
+                    "cache_format='paged' requires the linformer_causal "
+                    f"attention family, got {cfg.attention.kind!r} (the "
+                    "page size IS the attention block fold)")
+            # resolves the dtype now: fails fast on fp8 without jnp support
+            _, self._page_qmax = cache_lib.resolve_page_dtype(page_dtype)
         self.telemetry = as_telemetry(telemetry)
         # shape-level compile-cache proxies: a novel decode-scan length or
         # prefill shape forces a jit specialization (see _note_compile)
@@ -153,6 +182,24 @@ class ServingEngine:
         self._scrub_row = jax.jit(self._scrub_row_impl, donate_argnums=(0,))
         self._corrupt_row = jax.jit(self._corrupt_row_impl,
                                     static_argnums=(2,), donate_argnums=(0,))
+        if self.paged:
+            # Paged pool mutations: the arena leaves are page-indexed, so
+            # the generic per-row gather/scatter/scrub/corrupt shapes are
+            # wrong for them — each gets a dedicated, page-table-aware jit.
+            self._write_slot_paged = jax.jit(self._write_slot_paged_impl,
+                                             donate_argnums=(0,))
+            self._snapshot_rows_paged = jax.jit(self._gather_rows_paged)
+            self._restore_row_paged = jax.jit(self._restore_row_paged_impl,
+                                              donate_argnums=(0,))
+            self._scrub_row_paged = jax.jit(self._scrub_row_paged_impl,
+                                            donate_argnums=(0,))
+            self._corrupt_row_paged = jax.jit(
+                self._corrupt_row_paged_impl, static_argnums=(3,),
+                donate_argnums=(0,))
+            self._scrub_pages = jax.jit(self._scrub_pages_impl,
+                                        donate_argnums=(0,))
+            self._set_table_row = jax.jit(self._set_table_row_impl,
+                                          donate_argnums=(0,))
         if self.prefill_chunk:
             blk = self._block()
             if self.prefill_chunk < blk or self.prefill_chunk % blk != 0:
@@ -174,6 +221,23 @@ class ServingEngine:
         if a.kind == "linformer_causal":
             return a.linformer.block_size
         return 1
+
+    @property
+    def paged(self) -> bool:
+        return self.cache_format == "paged"
+
+    def max_pages_per_row(self) -> int:
+        """Page-table width: one page per block fold over the pool's token
+        capacity (max_seq + the chunked-prefill slack)."""
+        return (self.max_seq + self.prefill_chunk) // self._block()
+
+    def resolved_arena_pages(self, max_batch: int) -> int:
+        """Physical arena size for a `max_batch`-row pool: the explicit
+        `arena_pages` knob, or one full table per row + TRASH (capacity-
+        equivalent to the dense pool — no oversubscription)."""
+        if self.arena_pages is not None:
+            return self.arena_pages
+        return max_batch * self.max_pages_per_row() + 1
 
     def _record_plan_attribution(self, tel) -> None:
         """Emit the resolved plan's cost-attribution record (backend,
@@ -244,8 +308,11 @@ class ServingEngine:
     @staticmethod
     def _gather_rows(pool: Dict, idx: jax.Array) -> Dict:
         """Stack pool rows `idx` into a B=len(idx) sub-cache. Cache leaves
-        are (L, B, ...) except the per-row `lengths` (B,)."""
-        return {k: jnp.take(v, idx, axis=0 if k == "lengths" else 1)
+        are (L, B, ...) except the per-row `lengths` (B,). Paged arena
+        leaves ride through WHOLE: the gathered rows' page-table slices
+        keep indexing the one shared arena."""
+        return {k: (v if k in PAGED_ARENA_KEYS
+                    else jnp.take(v, idx, axis=0 if k == "lengths" else 1))
                 for k, v in pool.items()}
 
     @staticmethod
@@ -253,12 +320,18 @@ class ServingEngine:
         """Write a sub-cache back into pool rows `idx` (inverse of
         `_gather_rows`). Duplicate indices are benign ONLY when they carry
         identical rows (the batch-padding trick below relies on this:
-        `.set` scatter semantics make the duplicate a no-op rewrite)."""
+        `.set` scatter semantics make the duplicate a no-op rewrite; a
+        duplicated paged row scatters identical bytes to the same pages).
+        The sub-forward's arena leaves REPLACE the pool's — the sub held
+        the whole arena, and untouched pages passed through unchanged."""
         out = {}
         for k, v in pool.items():
             upd = sub[k].astype(v.dtype)
-            out[k] = (v.at[idx].set(upd) if k == "lengths"
-                      else v.at[:, idx].set(upd))
+            if k in PAGED_ARENA_KEYS:
+                out[k] = upd
+            else:
+                out[k] = (v.at[idx].set(upd) if k == "lengths"
+                          else v.at[:, idx].set(upd))
         return out
 
     def _pool_prefill_chunk_impl(self, params, pool: Dict, tokens: jax.Array,
@@ -335,7 +408,230 @@ class ServingEngine:
         write land before visibility reaches them."""
         out = dict(pool)
         out["lengths"] = pool["lengths"].at[row].set(0)
+        if "page_table" in pool:
+            # defensive: a reset paged row must never fold through a stale
+            # table entry into a page that has since changed hands
+            out["page_table"] = pool["page_table"].at[:, row].set(-1)
         return out
+
+    # -- paged-pool internals (cache_format="paged") ----------------------
+
+    def _write_slot_paged_impl(self, pool: Dict, slot: Dict, row: jax.Array,
+                               tab: jax.Array) -> Dict:
+        """Monolithic admission into a paged pool: quantize the request's
+        dense B=1 slot cache — raw ring per (token, head), compressed slots
+        per (block, head) — and scatter the block pages through `tab`, the
+        row's new page table (block-ordered page ids, -1 past the prompt's
+        committed blocks; -1 entries redirect their write to TRASH)."""
+        pdt = pool["page_k"].dtype
+        trash = pool["page_k"].shape[1] - 1
+        out = dict(pool)
+        for src, dq, ds in (("raw_k", "raw_k_q", "raw_k_s"),
+                            ("raw_v", "raw_v_q", "raw_v_s")):
+            q, s = cache_lib.quantize_blockwise(
+                slot[src], axes=(4,), dtype=pdt, qmax=self._page_qmax)
+            out[dq] = pool[dq].at[:, row].set(q[:, 0])
+            out[ds] = pool[ds].at[:, row].set(s[:, 0])
+        L, Np, r, Hkv, Dh = pool["page_k"].shape
+        maxp = pool["page_table"].shape[2]
+        dst = jnp.where(tab >= 0, tab, trash)
+        for src, dq, ds in (("comp_k", "page_k", "page_k_s"),
+                            ("comp_v", "page_v", "page_v_s")):
+            blocks = slot[src][:, 0].reshape(L, maxp, r, Hkv, Dh)
+            q, s = cache_lib.quantize_blockwise(
+                blocks, axes=(2, 4), dtype=pdt, qmax=self._page_qmax)
+            out[dq] = pool[dq].at[:, dst].set(q)
+            out[ds] = pool[ds].at[:, dst].set(s)
+        out["page_table"] = pool["page_table"].at[:, row].set(tab)
+        out["lengths"] = pool["lengths"].at[row].set(slot["lengths"][0])
+        return out
+
+    @staticmethod
+    def _gather_rows_paged(pool: Dict, idx: jax.Array) -> Dict:
+        """Snapshot gather for a paged pool: per-row ring + lengths, plus
+        the payload and scale of EVERY table entry (unallocated entries
+        clip to page 0; `snapshot_pool_rows` slices to the committed page
+        count before the snapshot leaves the engine, so those garbage
+        reads are never part of a snapshot's bytes)."""
+        g = {k: jnp.take(v, idx, axis=0 if k == "lengths" else 1)
+             for k, v in pool.items() if k not in PAGED_ARENA_KEYS}
+        Np = pool["page_k"].shape[1]
+        safe = jnp.clip(g.pop("page_table")[0], 0, Np - 1)     # (g, maxp)
+        g["pages_k"] = pool["page_k"][:, safe]      # (L, g, maxp, r, Hkv, Dh)
+        g["pages_v"] = pool["page_v"][:, safe]
+        g["pages_k_s"] = pool["page_k_s"][:, safe]  # (L, g, maxp, Hkv)
+        g["pages_v_s"] = pool["page_v_s"][:, safe]
+        return g
+
+    @staticmethod
+    def _restore_row_paged_impl(pool: Dict, sub: Dict, row: jax.Array,
+                                tab: jax.Array) -> Dict:
+        """Scatter a paged snapshot back into `row`: ring + lengths by row,
+        page payloads+scales into the FRESH pages of `tab` (maxp-padded
+        with zero pages aimed at TRASH). Physical placement is free to
+        differ from capture — rows only ever reach pages through the
+        table, so the resumed math (and token stream) is byte-identical."""
+        trash = pool["page_k"].shape[1] - 1
+        dst = jnp.where(tab >= 0, tab, trash)
+        out = dict(pool)
+        for k in ("raw_k_q", "raw_v_q", "raw_k_s", "raw_v_s"):
+            out[k] = pool[k].at[:, row].set(sub[k][:, 0].astype(pool[k].dtype))
+        for sk, pk in (("pages_k", "page_k"), ("pages_v", "page_v"),
+                       ("pages_k_s", "page_k_s"), ("pages_v_s", "page_v_s")):
+            out[pk] = pool[pk].at[:, dst].set(sub[sk].astype(pool[pk].dtype))
+        out["page_table"] = pool["page_table"].at[:, row].set(tab)
+        out["lengths"] = pool["lengths"].at[row].set(sub["lengths"][0])
+        return out
+
+    @staticmethod
+    def _scrub_row_paged_impl(pool: Dict, row: jax.Array) -> Dict:
+        """Paged quarantine scrub: zero the row's RING leaves (its only
+        per-row payload — NaN scales would leak through a later occupant's
+        additive masks exactly like NaN K/V), reset its counter, and clear
+        its table. The row's arena pages are zeroed separately, by the
+        allocator's scrub-before-reuse callback when they are freed."""
+        out = dict(pool)
+        for k in ("raw_k_q", "raw_v_q", "raw_k_s", "raw_v_s"):
+            out[k] = pool[k].at[:, row].set(jnp.zeros((), pool[k].dtype))
+        out["page_table"] = pool["page_table"].at[:, row].set(-1)
+        out["lengths"] = pool["lengths"].at[row].set(0)
+        return out
+
+    @staticmethod
+    def _corrupt_row_paged_impl(pool: Dict, row: jax.Array, dst: jax.Array,
+                                mode: str) -> Dict:
+        """Paged fault injection: corrupt the row's ring AND the pages its
+        table owns (`dst`: block-ordered page ids, TRASH-padded). Integer
+        payloads take a deterministic XOR bit-flip — NaN is a float
+        concept, so in 'nan' mode the poison enters through the fp32
+        SCALES, which the dequant multiplies into every attended value;
+        float leaves keep the dense path's NaN fill / affine garble.
+        `lengths` and the table are untouched: the row keeps decoding,
+        just wrongly."""
+        if mode not in ("nan", "garble"):
+            raise ValueError(f"unknown corruption mode {mode!r}")
+
+        def bad(x):
+            if jnp.issubdtype(x.dtype, jnp.integer):
+                return x if mode == "nan" \
+                    else x ^ jnp.asarray(0x55, x.dtype)
+            if mode == "nan":
+                return jnp.full_like(x, jnp.nan)
+            return x * jnp.asarray(-1.5, x.dtype) + jnp.asarray(0.25, x.dtype)
+
+        out = dict(pool)
+        for k in ("raw_k_q", "raw_v_q", "raw_k_s", "raw_v_s"):
+            out[k] = pool[k].at[:, row].set(bad(pool[k][:, row]))
+        for k in PAGED_ARENA_KEYS:
+            out[k] = pool[k].at[:, dst].set(bad(pool[k][:, dst]))
+        return out
+
+    @staticmethod
+    def _scrub_pages_impl(pool: Dict, ids: jax.Array) -> Dict:
+        """Zero arena pages `ids` — payload AND scales: a freed page must
+        never leak one request's KV bytes (or NaN) into the next tenant's
+        math or snapshot."""
+        out = dict(pool)
+        for k in PAGED_ARENA_KEYS:
+            out[k] = pool[k].at[:, ids].set(jnp.zeros((), pool[k].dtype))
+        return out
+
+    @staticmethod
+    def _set_table_row_impl(pool: Dict, row: jax.Array,
+                            tab: jax.Array) -> Dict:
+        out = dict(pool)
+        out["page_table"] = pool["page_table"].at[:, row].set(tab)
+        return out
+
+    def _pad_page_ids(self, page_ids: Sequence[int]) -> np.ndarray:
+        """A row's block-ordered page ids as a fixed (maxp,) table row,
+        -1-padded — one compile for every count."""
+        maxp = self.max_pages_per_row()
+        if len(page_ids) > maxp:
+            raise ValueError(f"{len(page_ids)} pages exceed the table "
+                             f"width {maxp}")
+        tab = np.full((maxp,), -1, np.int32)
+        tab[:len(page_ids)] = page_ids
+        return tab
+
+    # -- paged slot-pool surface (consumed by serving/scheduler.py) --------
+
+    def write_pool_slot_paged(self, pool: Dict, slot_cache: Dict, row: int,
+                              page_ids: Sequence[int]) -> Dict:
+        """Paged monolithic admission (donates `pool`): quantize the B=1
+        dense slot cache into `row`'s ring + the freshly allocated
+        `page_ids` (one per committed prompt block, in block order)."""
+        pool = self._write_slot_paged(
+            pool, slot_cache, jnp.asarray(row, jnp.int32),
+            jnp.asarray(self._pad_page_ids(page_ids)))
+        return self.plan.place_cache(pool)
+
+    def restore_pool_rows_paged(self, pool: Dict, sub: Dict, row: int,
+                                page_ids: Sequence[int]) -> Dict:
+        """Paged inverse of `snapshot_pool_rows` (donates `pool`): the
+        snapshot's pages land in the freshly allocated `page_ids` (len ==
+        the snapshot's committed page count)."""
+        npv = len(page_ids)
+        maxp = self.max_pages_per_row()
+        pads = {}
+        for k, v in sub.items():
+            if k.startswith("pages_"):
+                v = np.asarray(v)
+                if v.shape[1] != npv:
+                    raise ValueError(
+                        f"snapshot holds {v.shape[1]} pages in {k} but "
+                        f"{npv} pages were allocated")
+                pad = np.zeros((v.shape[0], maxp - npv) + v.shape[2:],
+                               v.dtype)
+                pads[k] = jnp.asarray(np.concatenate([v, pad], axis=1))
+            else:
+                pads[k] = jnp.asarray(v)
+        pool = self._restore_row_paged(
+            pool, pads, jnp.asarray(row, jnp.int32),
+            jnp.asarray(self._pad_page_ids(page_ids)))
+        return self.plan.place_cache(pool)
+
+    def scrub_arena_pages(self, pool: Dict, page_ids: Sequence[int]) -> Dict:
+        """Zero arena pages (donates `pool`) — the PageAllocator's
+        scrub-before-reuse callback. Ids are TRASH-padded to the table
+        width so every free shares one compile (zeroing TRASH is
+        harmless)."""
+        if len(page_ids) == 0:
+            return pool
+        trash = int(pool["page_k"].shape[1]) - 1
+        maxp = self.max_pages_per_row()
+        ids = list(page_ids) + [trash] * (maxp - len(page_ids))
+        pool = self._scrub_pages(pool, jnp.asarray(ids, jnp.int32))
+        return self.plan.place_cache(pool)
+
+    def write_table_row(self, pool: Dict, row: int,
+                        page_ids: Sequence[int]) -> Dict:
+        """Publish `row`'s page list to the device table (donates `pool`) —
+        the on-demand growth step: the allocator appends pages on the host,
+        then the whole block-ordered list is rewritten here (-1 past the
+        end, so unallocated folds keep redirecting to TRASH)."""
+        pool = self._set_table_row(
+            pool, jnp.asarray(row, jnp.int32),
+            jnp.asarray(self._pad_page_ids(page_ids)))
+        return self.plan.place_cache(pool)
+
+    def clear_table_row(self, pool: Dict, row: int) -> Dict:
+        """Retirement (donates `pool`): point every future fold of the now
+        idle, finished-masked row at TRASH before its pages return to the
+        free list — a stale table entry over a re-allocated page would let
+        a dead row write into a live tenant's KV bytes."""
+        return self.write_table_row(pool, row, ())
+
+    def corrupt_pool_row_paged(self, pool: Dict, row: int,
+                               page_ids: Sequence[int], mode: str) -> Dict:
+        """Paged fault-injection entry point: corrupt `row`'s ring and its
+        owned pages (donates `pool`). mode: 'nan' | 'garble'."""
+        tab = self._pad_page_ids(page_ids)
+        trash = int(pool["page_k"].shape[1]) - 1
+        dst = np.where(tab >= 0, tab, trash).astype(np.int32)
+        pool = self._corrupt_row_paged(pool, jnp.asarray(row, jnp.int32),
+                                       jnp.asarray(dst), mode)
+        return self.plan.place_cache(pool)
 
     # -- slot-pool surface (consumed by serving/scheduler.py) -------------
 
@@ -355,6 +651,17 @@ class ServingEngine:
         donating consumer (decode scans, slot writes, prefill chunks)
         inherits that layout."""
         slack = self.prefill_chunk  # 0 in monolithic mode
+        if self.paged:
+            a = self.cfg.attention
+            cache = cache_lib.init_paged_cache(
+                num_layers=self.cfg.num_layers, batch=max_batch,
+                max_seq=self.max_seq + slack,
+                block_size=a.linformer.block_size,
+                block_slots=a.linformer.block_slots,
+                num_kv_heads=a.num_kv_heads, head_dim=a.head_dim,
+                arena_pages=self.resolved_arena_pages(max_batch),
+                page_dtype=self.page_dtype)
+            return self.plan.place_cache(cache)
         cache = model_lib.init_cache(self.cfg, batch=max_batch,
                                      max_seq=self.max_seq + slack,
                                      dtype=self.cache_dtype)
@@ -405,10 +712,28 @@ class ServingEngine:
         low-rank-state property that makes preemption snapshots cheap."""
         g = len(rows)
         rows_p, _ = self._pad_rows(rows, pad_to=pad_to)
-        sub = jax.device_get(
-            self._snapshot_rows(pool, jnp.asarray(rows_p, jnp.int32)))
-        return [{k: (v[j:j + 1] if k == "lengths" else v[:, j:j + 1])
-                 for k, v in sub.items()} for j in range(g)]
+        idx = jnp.asarray(rows_p, jnp.int32)
+        if not self.paged:
+            sub = jax.device_get(self._snapshot_rows(pool, idx))
+            return [{k: (v[j:j + 1] if k == "lengths" else v[:, j:j + 1])
+                     for k, v in sub.items()} for j in range(g)]
+        # Paged: the checksum covers the quantized ring AND pages AND every
+        # scale leaf — any corrupt byte, payload or scale, fails verify().
+        sub = jax.device_get(self._snapshot_rows_paged(pool, idx))
+        c = self._block()
+        out = []
+        for j in range(g):
+            npv = int(sub["lengths"][j]) // c   # committed (folded) pages
+            d = {}
+            for k, v in sub.items():
+                if k == "lengths":
+                    d[k] = v[j:j + 1]
+                elif k.startswith("pages_"):
+                    d[k] = v[:, j, :npv]
+                else:
+                    d[k] = v[:, j:j + 1]
+            out.append(d)
+        return out
 
     def restore_pool_rows(self, pool: Dict, sub: Dict, row: int) -> Dict:
         """Scatter a snapshot's B=1 sub-cache back into pool row `row`
@@ -425,7 +750,8 @@ class ServingEngine:
         (donates `pool`; route through the SlotPool owner). Re-placed per
         the plan: the row-wise update gives the compiler no reason to keep
         the KV-head sharding, so the layout is pinned back explicitly."""
-        pool = self._scrub_row(pool, jnp.asarray(row, jnp.int32))
+        fn = self._scrub_row_paged if self.paged else self._scrub_row
+        pool = fn(pool, jnp.asarray(row, jnp.int32))
         return self.plan.place_cache(pool)
 
     def corrupt_pool_row(self, pool: Dict, row: int, mode: str) -> Dict:
@@ -698,7 +1024,21 @@ class ServingEngine:
         return results  # type: ignore
 
     def cache_bytes(self, batch: int) -> int:
-        """Decode-cache footprint (the paper's memory claim, measurable)."""
+        """Decode-cache footprint (the paper's memory claim, measurable).
+        In paged mode this is the quantized pool: ring + scales + page
+        arena (`arena_pages`, or the capacity-equivalent default) + table —
+        the denominator of the capacity benchmark's equal-bytes pools."""
+        if self.paged:
+            a = self.cfg.attention
+            spec = cache_lib.paged_cache_spec(
+                num_layers=self.cfg.num_layers, batch=batch,
+                max_seq=self.max_seq,
+                block_size=a.linformer.block_size,
+                block_slots=a.linformer.block_slots,
+                num_kv_heads=a.num_kv_heads, head_dim=a.head_dim,
+                arena_pages=self.arena_pages, page_dtype=self.page_dtype)
+            return sum(int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+                       for v in spec.values())
         cache = model_lib.init_cache(self.cfg, batch=batch,
                                      max_seq=self.max_seq,
                                      dtype=self.cache_dtype)

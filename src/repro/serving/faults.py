@@ -118,7 +118,13 @@ class FaultInjector:
                 if snap is None:
                     self.skipped.append(fault)
                     continue
-                key = sorted(snap.cache_rows)[0]
+                # flip one byte of one LEAF, drawn uniformly — every leaf
+                # is a target, so on a paged pool the flip lands in the
+                # quantized pages, the ring, the counters, OR an fp32
+                # scale leaf: a scale-only flip must fail verify() exactly
+                # like a payload flip (the checksum covers both)
+                keys = sorted(snap.cache_rows)
+                key = keys[int(self._rng.integers(len(keys)))]
                 leaf = snap.cache_rows[key]
                 flat = leaf.reshape(-1).view(np.uint8)
                 flat[int(self._rng.integers(flat.size))] ^= 0xFF

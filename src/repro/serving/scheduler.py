@@ -79,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import EOS
+from repro.serving.paged import PageAllocator, pages_needed
 from repro.serving.snapshot import SlotSnapshot, capture
 from repro.telemetry import MetricsRegistry, as_telemetry
 
@@ -88,6 +89,10 @@ _INF = float("inf")
 SHED_QUEUE_FULL = "queue_full"
 SHED_DEADLINE_INFEASIBLE = "deadline_infeasible"
 SHED_RETRIES_EXHAUSTED = "retries_exhausted"
+SHED_PAGES_EXHAUSTED = "pages_exhausted"   # paged pool: the request's
+#                        lifetime page need exceeds the whole arena — it
+#                        could never run to completion, so it is refused
+#                        up front rather than wedged mid-decode
 
 
 @dataclasses.dataclass
@@ -210,6 +215,8 @@ _STAT_COUNTERS = {
     "quarantines": "serving_quarantines_total",    # faulty rows isolated
     "snapshots": "serving_snapshots_total",        # snapshots captured
     "snapshot_corruptions": "serving_snapshot_corruptions_total",
+    "page_preemptions": "serving_page_preemptions_total",  # evictions forced
+    #                                                by arena-page pressure
 }
 
 
@@ -265,7 +272,8 @@ class ScheduleStats:
         return (f"preemptions={self.preemptions} sheds={self.sheds} "
                 f"deadline_misses={self.deadline_misses} "
                 f"retries={self.retries} quarantines={self.quarantines} "
-                f"snapshot_corruptions={self.snapshot_corruptions}")
+                f"snapshot_corruptions={self.snapshot_corruptions} "
+                f"page_preemptions={self.page_preemptions}")
 
 
 class SlotPool:
@@ -294,6 +302,33 @@ class SlotPool:
         self.cur = np.full((max_batch,), EOS, np.int32)
         self.finished = np.ones((max_batch,), bool)
         self.slots: List[Optional[_Slot]] = [None] * max_batch
+        # Paged pool (engine.cache_format == "paged"): the pool owns the
+        # page allocator alongside the cache — every page the device table
+        # references was handed out here, and every freed page is zeroed
+        # (the scrub callback) before it can be reused.
+        self.paged: bool = bool(getattr(engine, "paged", False))
+        self.alloc: Optional[PageAllocator] = None
+        self.pages_allocated = 0           # cumulative, for telemetry
+        self.pages_freed = 0
+        self.quant_error_bound = 0.0       # Σ 0.5·scale over snapshotted
+        #                                    pages (worst-case abs error of
+        #                                    symmetric int8 rounding)
+        if self.paged:
+            self.alloc = PageAllocator(
+                engine.resolved_arena_pages(max_batch),
+                scrub=self._scrub_freed_pages)
+
+    def _scrub_freed_pages(self, pages) -> None:
+        """PageAllocator scrub callback: zero the freed pages' device bytes
+        BEFORE they return to the free list."""
+        self.cache = self.engine.scrub_arena_pages(self.cache, pages)
+        self.pages_freed += len(pages)
+
+    def _alloc_pages(self, row: int, n: int) -> Optional[List[int]]:
+        pages = self.alloc.alloc(row, n)
+        if pages is not None:
+            self.pages_allocated += len(pages)
+        return pages
 
     # -- slot table ------------------------------------------------------
 
@@ -318,8 +353,21 @@ class SlotPool:
         """Monolithic admission: write a fully-prefilled request into `row`.
         `slot_cache` is a B=1 cache positioned at the prompt length;
         `first_token` the token sampled from the prefill logits (the row's
-        first emitted token)."""
-        self.cache = self.engine.write_pool_slot(self.cache, slot_cache, row)
+        first emitted token). On a paged pool the dense slot cache is
+        quantized into freshly allocated pages (the caller checked the
+        headroom via `pages_for_admission`)."""
+        if self.paged:
+            pages = self._alloc_pages(
+                row, len(request.tokens) // self.engine._block())
+            if pages is None:
+                raise RuntimeError(
+                    f"admit({row}): page headroom vanished between check "
+                    "and allocation")
+            self.cache = self.engine.write_pool_slot_paged(
+                self.cache, slot_cache, row, pages)
+        else:
+            self.cache = self.engine.write_pool_slot(self.cache, slot_cache,
+                                                     row)
         self.cur[row] = first_token
         self.finished[row] = False
         self.slots[row] = _Slot(request=request, emitted=[], state=DECODING,
@@ -343,6 +391,14 @@ class SlotPool:
         cache slice is O(c + M) per row)."""
         subs = self.engine.snapshot_pool_rows(self.cache, rows,
                                               pad_to=self.max_batch)
+        if self.paged:
+            # worst-case |error| of symmetric round-to-nearest int8 is
+            # 0.5·scale per element — accumulate it over the snapshotted
+            # page scales as the run's quantization-error telemetry
+            for sub in subs:
+                for k in ("pages_k_s", "pages_v_s"):
+                    self.quant_error_bound += 0.5 * float(
+                        np.asarray(sub[k]).sum())
         out = []
         for row, sub in zip(rows, subs):
             slot = self.slots[row]
@@ -355,9 +411,23 @@ class SlotPool:
     def restore(self, row: int, request: Request,
                 snap: SlotSnapshot) -> None:
         """Re-admit a preempted/faulted request from its snapshot: scatter
-        the cache rows back (byte-identical resume) and rebuild the slot."""
-        sub = {k: jnp.asarray(v) for k, v in snap.cache_rows.items()}
-        self.cache = self.engine.restore_pool_rows(self.cache, sub, row)
+        the cache rows back (byte-identical resume) and rebuild the slot.
+        A paged restore scatters the snapshot's quantized pages into FRESH
+        arena pages — physical placement may differ from capture; the
+        table indirection makes the resumed math identical anyway."""
+        if self.paged:
+            npv = int(np.asarray(snap.cache_rows["lengths"])[0]) \
+                // self.engine._block()
+            pages = self._alloc_pages(row, npv)
+            if pages is None:
+                raise RuntimeError(
+                    f"restore({row}): page headroom vanished between check "
+                    "and allocation")
+            self.cache = self.engine.restore_pool_rows_paged(
+                self.cache, snap.cache_rows, row, pages)
+        else:
+            sub = {k: jnp.asarray(v) for k, v in snap.cache_rows.items()}
+            self.cache = self.engine.restore_pool_rows(self.cache, sub, row)
         self.cur[row] = snap.cur
         self.finished[row] = snap.finished
         self.slots[row] = _Slot(request=request, emitted=list(snap.emitted),
@@ -372,8 +442,14 @@ class SlotPool:
 
     def corrupt_row(self, row: int, mode: str) -> None:
         """Fault-injection surface: corrupt row's cache leaves in place
-        (mode 'nan' or 'garble') through the donating owner path."""
-        self.cache = self.engine.corrupt_pool_row(self.cache, row, mode)
+        (mode 'nan' or 'garble') through the donating owner path. On a
+        paged pool the corruption hits the row's ring and its OWN pages
+        only — neighbour rows' pages stay clean."""
+        if self.paged:
+            self.cache = self.engine.corrupt_pool_row_paged(
+                self.cache, row, self.alloc.pages_of(row), mode)
+        else:
+            self.cache = self.engine.corrupt_pool_row(self.cache, row, mode)
 
     def prefill_chunk_rows(self, rows: List[int], tokens: np.ndarray,
                            n_valid: np.ndarray) -> np.ndarray:
@@ -393,6 +469,40 @@ class SlotPool:
             self.cache, rows, tokens, pad_to=self.max_batch)
         return np.asarray(logits)
 
+    # -- page bookkeeping (paged pools only) ------------------------------
+
+    def pages_for_admission(self, entry: "_QueueEntry") -> int:
+        """Pages an entry must be able to allocate AT admission: its
+        snapshot's committed pages (restore), the prompt's full blocks
+        (monolithic — the whole prefilled prefix lands at once), or none
+        (chunked — `ensure_row_pages` grows the table chunk by chunk)."""
+        if not self.paged:
+            return 0
+        c = self.engine._block()
+        if entry.snapshot is not None:
+            return int(np.asarray(
+                entry.snapshot.cache_rows["lengths"])[0]) // c
+        if self.engine.prefill_chunk:
+            return 0
+        return len(entry.request.tokens) // c
+
+    def ensure_row_pages(self, row: int, target_tokens: int) -> bool:
+        """On-demand growth: extend `row`'s page table to cover
+        `target_tokens` (ceil to pages) and publish the new entries to the
+        device table. Returns False — allocating NOTHING — when the arena
+        lacks the pages; the scheduler then preempts or stalls the row."""
+        if not self.paged:
+            return True
+        need = pages_needed(target_tokens, self.engine._block()) \
+            - len(self.alloc.pages_of(row))
+        if need <= 0:
+            return True
+        if self._alloc_pages(row, need) is None:
+            return False
+        self.cache = self.engine.write_table_row(
+            self.cache, row, self.alloc.pages_of(row))
+        return True
+
     def activate(self, row: int, first_token: int) -> None:
         """Prefill complete: the row joins the decoding pool next chunk."""
         self.cur[row] = first_token
@@ -400,6 +510,12 @@ class SlotPool:
         self.slots[row].state = DECODING
 
     def retire(self, row: int) -> None:
+        if self.paged:
+            # clear the device table BEFORE freeing: a stale entry over a
+            # re-allocated page would let this dead (finished-masked but
+            # still folding) row write into a live tenant's KV bytes
+            self.cache = self.engine.clear_table_row(self.cache, row)
+            self.alloc.free_row(row)       # scrubs (zeroes) before reuse
         self.slots[row] = None
         self.cur[row] = EOS
         self.finished[row] = True
@@ -525,9 +641,29 @@ class Scheduler:
             if dl is not None and tick + self._needed_ticks(e) > dl:
                 self.waiting.remove(e)
                 self._shed(e, SHED_DEADLINE_INFEASIBLE)
+            elif self.pool.paged and self._lifetime_pages(e.request) \
+                    > self.pool.alloc.usable_pages:
+                # could never finish even owning the WHOLE arena
+                self.waiting.remove(e)
+                self._shed(e, SHED_PAGES_EXHAUSTED)
             else:
                 feasible.append(e)
         return feasible
+
+    def _lifetime_pages(self, req: Request) -> int:
+        """Worst-case pages `req` ever holds at once: full coverage of
+        prompt + decode budget."""
+        return pages_needed(len(req.tokens) + req.max_new_tokens,
+                            self.engine._block())
+
+    def _page_headroom(self, entry: _QueueEntry,
+                       extra_free: int = 0) -> bool:
+        """Can `entry` allocate its admission pages right now (optionally
+        counting a prospective victim's pages as free)?"""
+        if not self.pool.paged:
+            return True
+        return self.pool.pages_for_admission(entry) \
+            <= self.pool.alloc.free_pages + extra_free
 
     def _admit_entry(self, row: int, entry: _QueueEntry) -> None:
         """Place one entry into a free row: snapshot restore (verified by
@@ -593,6 +729,10 @@ class Scheduler:
         for row in self.pool.free_rows():
             if not arrived:
                 return
+            if not self._page_headroom(arrived[0]):
+                # head-of-line blocking on purpose: admitting a later,
+                # smaller entry past the most urgent one would invert EDF
+                break
             self._admit_entry(row, arrived.pop(0))
         while arrived:
             entry = arrived.pop(0)
@@ -604,6 +744,9 @@ class Scheduler:
             if _slot_sort_key(self.pool.slots[victim])[0] \
                     <= entry.request.priority:
                 break                      # nothing strictly less urgent
+            if self.pool.paged and not self._page_headroom(
+                    entry, extra_free=len(self.pool.alloc.pages_of(victim))):
+                break            # eviction would not free enough pages
             self._preempt_row(victim)
             self._admit_entry(victim, entry)
 
@@ -633,9 +776,16 @@ class Scheduler:
         final_logits: Dict[int, np.ndarray] = {}
 
         chunk_rows = []
+        starved: List[int] = []
         for row, s in pf:
             nfull = (len(s.request.tokens) // c) * c
             if s.filled < nfull:
+                n = min(P, nfull - s.filled)
+                # on-demand page growth: this chunk folds blocks up to
+                # (filled + n)/c — their pages must exist before the fold
+                if not self.pool.ensure_row_pages(row, s.filled + n):
+                    starved.append(row)    # stalls this round, keeps state
+                    continue
                 chunk_rows.append((row, s, nfull))
         if chunk_rows:
             g = len(chunk_rows)
@@ -691,6 +841,57 @@ class Scheduler:
             self.pool.activate(row, first)
             self.timelines.stamp(self.pool.slots[row].request.rid,
                                  "first_token", self.stats.ticks)
+
+        if starved and not chunk_rows and not rem_groups \
+                and self.pool.decoding_count == 0:
+            # Nothing in the pool can make progress — every page is tied up
+            # by stalled prefills. Preempt the least-urgent page-holding
+            # row (its pages are zeroed and freed) so the survivors
+            # advance; the victim resumes from its snapshot later.
+            holders = [r for r in self.pool.occupied_rows()
+                       if self.pool.alloc.pages_of(r)]
+            if not holders:
+                raise RuntimeError(
+                    "page-starved prefill with an empty arena: a single "
+                    "chunk outgrows the usable pages (the admission "
+                    "feasibility check should have shed this request)")
+            victim = max(holders,
+                         key=lambda r: _slot_sort_key(self.pool.slots[r]))
+            self.stats.page_preemptions += 1
+            self._preempt_row(victim)
+
+    def _ensure_decode_pages(self, chunk: int) -> None:
+        """Before a decode chunk: grow every DECODING row's page table to
+        cover the chunk's folds (on-demand allocation). On exhaustion,
+        preempt the least-urgent page-holding row — the needy row itself
+        if it IS the least urgent — until the chunk is covered; preempted
+        rows resume from their snapshots when pages free up."""
+        if not self.pool.paged:
+            return
+        rows = [(r, s) for r, s in enumerate(self.pool.slots)
+                if s is not None and s.state == DECODING]
+        for row, s in rows:
+            if self.pool.slots[row] is not s:
+                continue                   # preempted below, mid-loop
+            life = len(s.request.tokens) + s.request.max_new_tokens
+            # host upper bound on the row's position: committed prompt +
+            # emitted + the pending sampled token (device lengths may lag
+            # for finished-masked rows — over-covering by a page is safe)
+            target = min(life, s.filled + len(s.emitted) + 1 + chunk)
+            while not self.pool.ensure_row_pages(row, target):
+                holders = [r for r in self.pool.occupied_rows()
+                           if r != row and self.pool.alloc.pages_of(r)]
+                victim = row
+                if holders:
+                    cand = max(holders, key=lambda r: _slot_sort_key(
+                        self.pool.slots[r]))
+                    if _slot_sort_key(self.pool.slots[cand]) \
+                            >= _slot_sort_key(s):
+                        victim = cand      # never evict a MORE urgent row
+                self.stats.page_preemptions += 1
+                self._preempt_row(victim)
+                if victim == row:
+                    break                  # the row yielded its own slot
 
     # -- faults ----------------------------------------------------------
 
@@ -807,6 +1008,21 @@ class Scheduler:
             self._admit_ready()
             if self.engine.prefill_chunk:
                 self._advance_prefill()
+            self._ensure_decode_pages(chunk)
+            if self.pool.paged:
+                # page-occupancy gauge + allocation/quant-error telemetry,
+                # refreshed every scheduler round
+                reg = self.stats.registry
+                reg.gauge("serving_pages_in_use").set(
+                    self.pool.alloc.used_pages)
+                reg.gauge("serving_pages_free").set(
+                    self.pool.alloc.free_pages)
+                reg.counter("serving_pages_allocated_total").value = \
+                    float(self.pool.pages_allocated)
+                reg.counter("serving_pages_freed_total").value = \
+                    float(self.pool.pages_freed)
+                reg.counter("serving_quant_error_bound_sum").value = \
+                    float(self.pool.quant_error_bound)
             decoding = self.pool.decoding_count
             if not decoding:
                 # nothing decodable yet (pool empty, or every occupied slot

@@ -19,6 +19,13 @@ capture. `verify()` recomputes it at restore time — a corrupted snapshot
 fault) is detected *before* its bytes reach the pool, and the scheduler
 falls back to re-running the request from its prompt (greedy decode makes
 that fallback byte-identical too, just slower).
+
+The checksum walks EVERY `cache_rows` leaf in sorted key order — for a
+paged pool that is the quantized ring + pages AND their fp32 scale leaves
+(`raw_*_s`, `pages_*_s`). A quantized cache is only as good as its scales
+(a flipped scale byte rescales a whole block's dequantized values), so a
+scale-only bit-flip fails `verify()` exactly like a payload flip
+(tests/test_serving_faults.py::TestPagedSnapshotScales).
 """
 from __future__ import annotations
 

@@ -120,6 +120,82 @@ def test_packing_conserves_tokens(seed, n_docs, seq_len):
 
 @SET
 @given(seed=st.integers(0, 2**31 - 1),
+       n_pages=st.integers(2, 24),
+       n_ops=st.integers(1, 60))
+def test_page_allocator_trace_invariants(seed, n_pages, n_ops):
+    """Random admit/grow/retire/preempt/quarantine traces on the page
+    allocator: no double-allocation, no leak, no cross-row aliasing, TRASH
+    never handed out, all-or-nothing allocation, and every freed page is
+    scrubbed (zeroed) BEFORE it can be reused. A numpy byte arena stands in
+    for the device pages: rows stamp their id into owned pages, the scrub
+    callback zeroes freed ones, and any aliasing or unscrubbed reuse shows
+    up as foreign bytes."""
+    from repro.serving.paged import PageAllocator, pages_needed
+    rng = np.random.default_rng(seed)
+    arena = np.full((n_pages,), -1, np.int64)        # -1 = never touched
+
+    def scrub(pages):
+        for p in pages:
+            assert arena[p] != 0, f"page {p} freed while already scrubbed"
+            arena[p] = 0                             # zero-before-reuse
+
+    alloc = PageAllocator(n_pages, scrub=scrub)
+    assert alloc.trash_page == n_pages - 1
+    owners = {}                                       # row -> stamp
+    for step in range(n_ops):
+        alloc.check()
+        row = int(rng.integers(0, 6))
+        op = rng.choice(["alloc", "free", "free", "alloc", "alloc"])
+        if op == "alloc":
+            n = int(rng.integers(0, 4))
+            free_before = alloc.free_pages
+            pages = alloc.alloc(row, n)
+            if pages is None:
+                # all-or-nothing: a refused alloc changes nothing
+                assert n > free_before
+                assert alloc.free_pages == free_before
+                continue
+            assert len(pages) == n
+            assert alloc.free_pages == free_before - n
+            stamp = owners.setdefault(row, row * 1000 + step + 1)
+            for p in pages:
+                assert p != alloc.trash_page
+                # a fresh page is either virgin or scrubbed — never holds
+                # another row's bytes (aliasing / missing-scrub detector)
+                assert arena[p] in (-1, 0), \
+                    f"page {p} reused with stale bytes {arena[p]}"
+                arena[p] = stamp
+        else:                                         # retire/preempt/quarantine
+            pages = alloc.pages_of(row)
+            for p in pages:
+                assert arena[p] == owners[row], "page aliased across rows"
+            freed = alloc.free_row(row)
+            assert freed == len(pages)
+            owners.pop(row, None)
+            assert all(arena[p] == 0 for p in pages)  # scrubbed on free
+    alloc.check()
+    # drain everything: the arena partitions back to fully free
+    for row in list(alloc.owned_rows()):
+        alloc.free_row(row)
+    alloc.check()
+    assert alloc.free_pages == alloc.usable_pages
+    assert all(b in (-1, 0) for b in arena[:-1])
+    assert arena[alloc.trash_page] == -1              # TRASH never touched
+
+
+@SET
+@given(tokens=st.integers(0, 10_000), c=st.sampled_from([4, 8, 16, 32]))
+def test_pages_needed_is_exact_ceiling(tokens, c):
+    """pages_needed is the exact ceiling: enough for `tokens`, and one page
+    fewer is never enough (capacity planning neither starves nor pads)."""
+    from repro.serving.paged import pages_needed
+    n = pages_needed(tokens, c)
+    assert n * c >= tokens
+    assert (n - 1) * c < tokens or tokens == 0
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
        temp=st.floats(0.5, 4.0))
 def test_exact_linformer_scale_invariance_of_value_projection(seed, temp):
     """Scaling F scales outputs linearly (value path is linear)."""

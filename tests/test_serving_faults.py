@@ -210,6 +210,89 @@ class TestFaultRecovery:
 # ---------------------------------------------------------------------------
 
 
+def _paged_engine(prefill_chunk=0, **kw):
+    cfg = _tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(params, cfg, max_seq=64, cache_dtype=jnp.float32,
+                         decode_chunk=4, prefill_chunk=prefill_chunk,
+                         cache_format="paged", **kw)
+
+
+class TestPagedSnapshotScales:
+    """A quantized cache is only as good as its scales: the snapshot CRC
+    must cover the fp32 scale leaves, and the paged fault path must detect
+    and recover scale corruption exactly like payload corruption."""
+
+    def _paged_snapshot(self):
+        from repro.serving.scheduler import SlotPool
+        eng = _paged_engine()
+        pool = SlotPool(eng, max_batch=2)
+        prompt = list(range(4, 23))            # 19 tokens -> 2 committed pages
+        cache, logits = eng.prefill(np.asarray([prompt], np.int32))
+        req = Request(rid=0, tokens=tuple(prompt), max_new_tokens=4)
+        pool.admit(0, req, cache, int(jnp.argmax(logits[0])))
+        return pool.snapshot_rows([0], tick=0)[0]
+
+    def test_paged_snapshot_carries_scale_leaves(self):
+        snap = self._paged_snapshot()
+        for key in ("pages_k_s", "pages_v_s", "raw_k_s", "raw_v_s"):
+            leaf = snap.cache_rows[key]
+            assert leaf.dtype == np.float32 and leaf.size > 0, key
+        # the quantized payloads ride as integers, not floats
+        assert snap.cache_rows["pages_k"].dtype != np.float32
+        assert snap.verify()
+
+    @pytest.mark.parametrize("key", ["pages_k_s", "pages_v_s",
+                                     "raw_k_s", "raw_v_s"])
+    def test_scale_only_flip_fails_verify(self, key):
+        """Flipping a single byte of ONE scale leaf — payloads untouched —
+        must fail verify() exactly like a payload flip."""
+        snap = self._paged_snapshot()
+        assert snap.verify()
+        flat = snap.cache_rows[key].reshape(-1).view(np.uint8)
+        flat[0] ^= 0xFF
+        assert not snap.verify()
+
+    def test_payload_flip_still_detected(self):
+        snap = self._paged_snapshot()
+        flat = snap.cache_rows["pages_k"].reshape(-1).view(np.uint8)
+        flat[1] ^= 0xFF
+        assert not snap.verify()
+
+    def test_injector_targets_scale_leaves(self):
+        """The snapshot_corrupt fault draws its victim leaf uniformly over
+        ALL keys, so fp32 scale leaves are real targets (the regression this
+        class guards: an injector pinned to the first sorted key would never
+        exercise the scales)."""
+        snap = self._paged_snapshot()
+        keys = sorted(snap.cache_rows)
+        assert any(k.endswith("_s") for k in keys)
+        rng = np.random.default_rng(0)
+        hit = {keys[int(rng.integers(len(keys)))] for _ in range(256)}
+        assert any(k.endswith("_s") for k in hit)
+
+    @pytest.mark.parametrize("kind", FAULT_KINDS)
+    def test_paged_fault_detected_and_recovered(self, kind):
+        """Each fault kind on a paged pool: detected, quarantined, and the
+        run still matches the fault-free paged run byte-identically. NaN
+        poison reaches the model through the fp32 SCALE leaves (int8
+        payloads cannot hold a NaN), so this leg proves the scales are a
+        live fault surface, not dead bytes."""
+        eng = _paged_engine()
+        prompts, budgets = _requests(8)
+        clean = eng.serve(prompts, budgets, max_batch=4)
+        inj = FaultInjector([Fault(kind, chunk=2, row=1)])
+        out, sched = eng.serve(prompts, budgets, max_batch=4,
+                               snapshot_chunks=2, fault_injector=inj,
+                               return_scheduler=True)
+        assert len(inj.fired) == 1
+        assert sched.stats.quarantines == 1
+        if kind == SNAPSHOT_CORRUPT:
+            assert sched.stats.snapshot_corruptions == 1
+        assert out == clean
+        sched.pool.alloc.check()     # no page leaked through quarantine
+
+
 class TestSnapshotChecksum:
     def _snap(self):
         rows = {"comp_k": np.arange(24, dtype=np.float32).reshape(2, 1, 3, 4),
