@@ -62,6 +62,13 @@ from repro.launch.mesh import (axis_size, validate_attention_mesh,
                                validate_seq_shards)
 from repro.parallel.sharding import ParallelCtx, shard_map as _shard_map
 
+# The axis-name registry: every mesh this stack builds (launch/mesh.py) and
+# every PartitionSpec it writes draws from these four names. repro-lint's
+# RL005 rule (src/repro/analysis/astlint.py, docs/static-analysis.md)
+# enforces that no other axis-name literal appears in a spec — add the axis
+# HERE first, then use it.
+DECLARED_AXES = frozenset({"data", "model", "seq", "pod"})
+
 
 @dataclasses.dataclass(frozen=True)
 class AttentionPlan:

@@ -88,6 +88,14 @@ class ParallelCtx:
         return ()
 
     @property
+    def has_pod_axis(self) -> bool:
+        """Whether the mesh carries the multi-pod DP axis. Call sites branch
+        on THIS (trainer's compressed-DP selection, train/compressed_dp.py's
+        precondition) instead of inspecting mesh.axis_names themselves —
+        axis introspection stays in the parallel layer (repro-lint RL001)."""
+        return self.mesh is not None and "pod" in self.mesh.axis_names
+
+    @property
     def model_shards(self) -> int:
         if self.mesh is None:
             return 1

@@ -87,7 +87,7 @@ def make_compressed_train_step(
     (the pod axis is pure DP, so per-pod grads are defined).
     """
     mesh = ctx.mesh
-    assert mesh is not None and "pod" in mesh.axis_names
+    assert ctx.has_pod_axis, "compressed DP needs a mesh with a pod axis"
     assert "pod" not in ctx.fsdp_axes, \
         "compressed DP needs params replicated across pods"
     n_pods = mesh.shape["pod"]

@@ -137,7 +137,7 @@ class Trainer:
 
         self.compressed = bool(
             tcfg.compressed_pod_grads and ctx is not None
-            and ctx.mesh is not None and "pod" in ctx.mesh.axis_names)
+            and ctx.has_pod_axis)
         if self.compressed:
             from repro.train.compressed_dp import make_compressed_train_step
             step_fn = make_compressed_train_step(cfg, tcfg.optimizer, ctx)
