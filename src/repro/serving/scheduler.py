@@ -254,6 +254,7 @@ class ScheduleStats:
         c = self._c.get(name)
         if c is None:
             raise AttributeError(f"ScheduleStats has no counter {name!r}")
+        # repro-lint: allow[RL002] metrics mirror ingests host floats
         c.value = float(value)
 
     @property
@@ -397,13 +398,15 @@ class SlotPool:
             # page scales as the run's quantization-error telemetry
             for sub in subs:
                 for k in ("pages_k_s", "pages_v_s"):
-                    self.quant_error_bound += 0.5 * float(
-                        np.asarray(sub[k]).sum())
+                    # repro-lint: allow[RL002] host snapshot scale leaves
+                    s_sum = float(np.asarray(sub[k]).sum())
+                    self.quant_error_bound += 0.5 * s_sum
         out = []
         for row, sub in zip(rows, subs):
             slot = self.slots[row]
             out.append(capture(
                 rid=slot.request.rid, state=slot.state, filled=slot.filled,
+                # repro-lint: allow[RL002] host np mirrors of pool state
                 cur=int(self.cur[row]), finished=bool(self.finished[row]),
                 emitted=slot.emitted, cache_rows=sub, tick=tick))
         return out
@@ -416,6 +419,7 @@ class SlotPool:
         arena pages — physical placement may differ from capture; the
         table indirection makes the resumed math identical anyway."""
         if self.paged:
+            # repro-lint: allow[RL002] snapshot lengths are a host copy
             npv = int(np.asarray(snap.cache_rows["lengths"])[0]) \
                 // self.engine._block()
             pages = self._alloc_pages(row, npv)
@@ -459,6 +463,7 @@ class SlotPool:
         this pool shares one chunk-forward compile."""
         self.cache, logits = self.engine.pool_prefill_chunk(
             self.cache, rows, tokens, n_valid, pad_to=self.max_batch)
+        # repro-lint: allow[RL002] the prefill chunk's one sync
         return np.asarray(logits)
 
     def prefill_remainder_rows(self, rows: List[int],
@@ -467,6 +472,7 @@ class SlotPool:
         (pool-size padded like `prefill_chunk_rows`)."""
         self.cache, logits = self.engine.pool_prefill_remainder(
             self.cache, rows, tokens, pad_to=self.max_batch)
+        # repro-lint: allow[RL002] the prefill remainder's one sync
         return np.asarray(logits)
 
     # -- page bookkeeping (paged pools only) ------------------------------
@@ -480,6 +486,7 @@ class SlotPool:
             return 0
         c = self.engine._block()
         if entry.snapshot is not None:
+            # repro-lint: allow[RL002] snapshot lengths are a host copy
             return int(np.asarray(
                 entry.snapshot.cache_rows["lengths"])[0]) // c
         if self.engine.prefill_chunk:
@@ -530,8 +537,11 @@ class SlotPool:
             self.engine.params, jnp.asarray(self.cur),
             jnp.asarray(self.finished), self.cache, rng)
         self.cache = cache
-        self.cur = np.array(cur)            # writable host copies
+        # repro-lint: allow[RL002] host mirror; rides the chunk sync
+        self.cur = np.array(cur)
+        # repro-lint: allow[RL002] host mirror; rides the chunk sync
         self.finished = np.array(finished)
+        # repro-lint: allow[RL002] the chunk's one sync (decode contract)
         return np.asarray(toks), np.asarray(bad), rng
 
 
@@ -795,14 +805,18 @@ class Scheduler:
                 n = min(P, nfull - s.filled)
                 toks[j, :n] = s.request.tokens[s.filled:s.filled + n]
                 n_valid[j] = n
+            # repro-lint: allow[RL002] n_valid is a host staging buffer
+            chunk_tokens = int(n_valid.sum())
             with self.telemetry.span("prefill_chunk_forward",
                                      cat="scheduler", rows=g,
-                                     tokens=int(n_valid.sum())):
+                                     tokens=chunk_tokens):
                 logits = self.pool.prefill_chunk_rows(
                     [row for row, _, _ in chunk_rows], toks, n_valid)
             self.stats.prefill_forwards += 1
+            # repro-lint: allow[RL002] n_valid is a host np staging buffer
             self.stats.prefill_tokens += int(n_valid.sum())
             for j, (row, s, nfull) in enumerate(chunk_rows):
+                # repro-lint: allow[RL002] n_valid is a host np staging buffer
                 s.filled += int(n_valid[j])
                 self.timelines.stamp(s.request.rid, "prefill_chunk",
                                      self.stats.ticks, filled=s.filled,
@@ -835,6 +849,7 @@ class Scheduler:
 
         for row in sorted(final_logits):
             self.rng, sub = jax.random.split(self.rng)
+            # repro-lint: allow[RL002] admission first-token sync
             first = int(np.asarray(
                 self.engine._sample(jnp.asarray(final_logits[row])[None],
                                     sub))[0])
@@ -944,10 +959,12 @@ class Scheduler:
             for row in np.flatnonzero(bad):
                 slot = self.pool.slots[row]
                 if slot is not None and slot.state == DECODING:
+                    # repro-lint: allow[RL002] host row index
                     faulted.add(int(row))
         if self.fault_injector is not None:
             for row in self.fault_injector.failed_rows(self.stats.chunks):
                 if self.pool.slots[row] is not None:
+                    # repro-lint: allow[RL002] host row index
                     faulted.add(int(row))
         return faulted
 
