@@ -17,6 +17,10 @@ telemetry subsystem (top spans by total duration, instant-event counts);
 TTFT/TPOT/queue-wait percentiles reconstructed from the exported
 histogram buckets via `repro.telemetry.percentile_from_cumulative`, plus
 shed/preemption counters). See docs/observability.md.
+
+``--lint LINT.json`` summarizes a `scripts/check_static.py --json`
+report: per-rule finding counts, waiver-pragma count, and the jaxpr
+audit's measured-vs-model collective bytes. See docs/static-analysis.md.
 """
 from __future__ import annotations
 
@@ -271,6 +275,55 @@ def metrics_summary(path, out=None):
                f"({rec.get('run', '-')})")
 
 
+def lint_summary(path, out=None):
+    """Summarize a check_static JSON report (per-rule counts, pragma
+    usage, jaxpr comm-bytes stats). Malformed input raises
+    BenchJsonError — a lint report the tooling cannot read is itself a
+    red gate, never a silently empty section."""
+    out = out if out is not None else sys.stdout
+    print_ = lambda *a: print(*a, file=out)
+    doc = load_json_artifact(path)
+    if not isinstance(doc, dict) or doc.get("check") != "check_static":
+        raise BenchJsonError(
+            f"{path}: not a check_static report (expected a JSON object "
+            f"with check='check_static'; run scripts/check_static.py "
+            f"--json {path})")
+    for key in ("ok", "findings", "stats"):
+        if key not in doc:
+            raise BenchJsonError(f"{path}: check_static report is missing "
+                                 f"the {key!r} field — regenerate it")
+    stats = doc["stats"]
+    print_(f"\n### Static analysis: {path}\n")
+    print_(f"* verdict: {'CLEAN' if doc['ok'] else 'FINDINGS'} "
+           f"({len(doc['findings'])} new, {doc.get('baselined', 0)} "
+           f"baselined) — {stats.get('files', '?')} files, "
+           f"{stats.get('pragmas', '?')} waiver pragmas")
+    by_rule = defaultdict(int)
+    for f in doc["findings"]:
+        by_rule[f.get("rule", "?")] += 1
+    rules = doc.get("rules", {})
+    for rule in sorted(by_rule):
+        print_(f"  * {rule}: {by_rule[rule]} — "
+               f"{rules.get(rule, 'unknown rule')}")
+    jx = stats.get("jaxpr")
+    if jx:
+        sc, se = jx.get("sp_causal", {}), jx.get("sp_exact", {})
+        if sc:
+            print_(f"* sp-causal comm: {sc.get('all_gathers')} all-gathers, "
+                   f"{sc.get('gathered_bytes')}B traced vs "
+                   f"{sc.get('model_bytes')}B blockwise_sp_comm_bytes")
+        if se:
+            print_(f"* sp-exact comm: {se.get('psums')} psums, "
+                   f"{se.get('psum_bytes')}B traced vs "
+                   f"{se.get('model_bytes')}B seq_parallel_comm_bytes")
+        dec = jx.get("decode_scan", {})
+        if dec:
+            print_(f"* decode chunk: {dec.get('scan_eqns')} scans, "
+                   f"{dec.get('body_eqns')} body eqns, "
+                   f"{dec.get('host_effects')} host effects, "
+                   f"{dec.get('widenings')} widenings")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
@@ -285,13 +338,18 @@ def main(argv=None):
                     help="summarize this telemetry metrics JSONL "
                          "(per-priority TTFT/TPOT percentiles, SLO "
                          "counters)")
+    ap.add_argument("--lint", default=None,
+                    help="summarize this scripts/check_static.py --json "
+                         "report (per-rule counts, jaxpr comm stats)")
     args = ap.parse_args(argv)
     try:
         if args.trace:
             trace_summary(args.trace)
         if args.trace_metrics:
             metrics_summary(args.trace_metrics)
-        if args.trace or args.trace_metrics:
+        if args.lint:
+            lint_summary(args.lint)
+        if args.trace or args.trace_metrics or args.lint:
             return
         bench_json_summary(bench_dir=args.bench_dir)
     except BenchJsonError as e:

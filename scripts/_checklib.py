@@ -1,0 +1,84 @@
+"""Shared CLI convention for the `scripts/check_*.py` gates.
+
+Every checker (check_docs, check_trace, check_static) speaks the same
+dialect so check.sh and CI wrappers can treat them uniformly:
+
+* exit codes: 0 = clean, 1 = findings, 2 = usage error (EXIT_* below);
+* findings are dicts with at least a ``msg`` key (optional ``rule``,
+  ``path``, ``line`` render as a clickable prefix);
+* ``--json PATH`` writes a machine-readable report
+  ``{"check", "ok", "checked", "findings", ...}`` (PATH ``-`` = stdout);
+  `benchmarks/report.py --lint` consumes check_static's.
+
+See docs/static-analysis.md §Exit codes.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Optional
+
+EXIT_OK = 0
+EXIT_FINDINGS = 1
+EXIT_USAGE = 2
+
+
+def finding(msg: str, *, rule: Optional[str] = None,
+            path: Optional[str] = None,
+            line: Optional[int] = None) -> Dict[str, object]:
+    out: Dict[str, object] = {"msg": msg}
+    if rule is not None:
+        out["rule"] = rule
+    if path is not None:
+        out["path"] = path
+    if line is not None:
+        out["line"] = line
+    return out
+
+
+def format_finding(f: Dict[str, object]) -> str:
+    bits = []
+    if f.get("rule"):
+        bits.append(str(f["rule"]))
+    if f.get("path"):
+        loc = str(f["path"])
+        if f.get("line"):
+            loc += f":{f['line']}"
+        bits.append(loc)
+    prefix = " ".join(bits)
+    return f"{prefix}: {f['msg']}" if prefix else str(f["msg"])
+
+
+def report(name: str, findings: List[Dict[str, object]], *,
+           ok_msg: str = "OK", checked: Optional[int] = None,
+           json_path: Optional[str] = None,
+           extra: Optional[Dict[str, object]] = None) -> int:
+    """Emit the check's verdict (human + optional JSON); return the exit
+    code per the convention above."""
+    if json_path:
+        doc: Dict[str, object] = {"check": name, "ok": not findings,
+                                  "findings": findings}
+        if checked is not None:
+            doc["checked"] = checked
+        if extra:
+            doc.update(extra)
+        text = json.dumps(doc, indent=2, sort_keys=True)
+        if json_path == "-":
+            # the JSON doc IS the stdout output; humans read the file mode
+            print(text)
+            return EXIT_FINDINGS if findings else EXIT_OK
+        with open(json_path, "w") as fh:
+            fh.write(text + "\n")
+    if findings:
+        print(f"{name}: FAILED ({len(findings)} findings):",
+              file=sys.stderr)
+        for f in findings:
+            print(f"  {format_finding(f)}", file=sys.stderr)
+        return EXIT_FINDINGS
+    print(f"{name}: {ok_msg}")
+    return EXIT_OK
+
+
+def usage(text: str) -> int:
+    print(f"usage: {text}", file=sys.stderr)
+    return EXIT_USAGE

@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # One-entry-point smoke gate for builders:
 #   1. docs link check (every file referenced from README/docs exists)
+#   1b. repro-lint: the two-layer static-analysis gate (AST rules
+#      RL000-RL005 + jaxpr audits JX001-JX003, docs/static-analysis.md)
+#      with its machine-readable report summarized by report.py --lint
 #   2. tier-1 test suite (ROADMAP.md "Tier-1 verify")
 #   3. the seeded fault-injection suite: deterministic slot-step / NaN-
 #      logits / snapshot-corruption faults must all be detected,
@@ -34,6 +37,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== docs link check =="
 python scripts/check_docs.py
+
+echo "== static analysis: repro-lint (AST + jaxpr) =="
+python scripts/check_static.py --json /tmp/repro_lint.json
+python -m benchmarks.report --lint /tmp/repro_lint.json
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q

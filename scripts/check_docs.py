@@ -13,13 +13,19 @@ Checked references:
 
 Run from anywhere: paths resolve against the repo root.
 
-    python scripts/check_docs.py
+    python scripts/check_docs.py [--json OUT.json]
+
+Exit 0 clean / 1 missing references / 2 usage
+(scripts/_checklib.py convention).
 """
 from __future__ import annotations
 
 import os
 import re
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _checklib  # noqa: E402
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_GLOBS = ["README.md", "docs"]
@@ -93,7 +99,18 @@ def module_to_path(mod: str) -> str | None:
     return None
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            return _checklib.usage("check_docs.py [--json OUT.json]")
+        del argv[i:i + 2]
+    if argv:
+        return _checklib.usage("check_docs.py [--json OUT.json]")
     missing = []
     checked = 0
     for doc in doc_files():
@@ -144,13 +161,10 @@ def main() -> int:
             checked += 1
             if module_to_path(mod) is None:
                 missing.append(f"{rel_doc}: python -m {mod}")
-    if missing:
-        print("check_docs: MISSING references:")
-        for item in missing:
-            print(f"  {item}")
-        return 1
-    print(f"check_docs: {checked} doc references OK")
-    return 0
+    return _checklib.report(
+        "check_docs", [_checklib.finding(m) for m in missing],
+        ok_msg=f"{checked} doc references OK", checked=checked,
+        json_path=json_path)
 
 
 if __name__ == "__main__":

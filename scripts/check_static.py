@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""repro-lint driver: the two-layer static-analysis gate (check.sh step).
+
+Layer 1 (`repro.analysis.astlint`) parses every tracked file under src/
+and enforces the source-level invariants RL000–RL005 (dispatch purity,
+host-sync discipline, kernel contracts, donation safety, spec hygiene,
+no stray artifacts/prints). Layer 2 (`repro.analysis.jaxpr_audit`)
+traces tiny canonical instances of the stack's entry points and checks
+the PROGRAM-level invariants JX001–JX003 (host-effect-free decode body,
+collective bytes == comm-cost model, no f64 widening on the decode
+path). Rule catalog + waiver pragma grammar: docs/static-analysis.md.
+
+    python scripts/check_static.py [--json OUT.json] [--no-jaxpr]
+                                   [--baseline scripts/static_baseline.json]
+
+Exit 0 when every finding is empty or baselined, 1 on new findings,
+2 on usage errors (scripts/_checklib.py convention). The shipped
+baseline is EMPTY — the tree is lint-clean; the baseline mechanism
+exists so a future genuine-but-deferred violation can land without
+turning the gate red for everyone else.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import _checklib  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(ROOT, "scripts", "static_baseline.json")
+
+
+def load_baseline(path: str):
+    if not os.path.exists(path):
+        return set()
+    with open(path) as fh:
+        return set(json.load(fh))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="check_static.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here ('-' = "
+                         "stdout); benchmarks/report.py --lint reads it")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the (slower) jaxpr audit layer")
+    ap.add_argument("--baseline", metavar="PATH", default=DEFAULT_BASELINE,
+                    help="accepted-findings file (list of finding keys)")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit as e:
+        return _checklib.EXIT_USAGE if e.code not in (0, None) else 0
+
+    from repro.analysis import astlint
+
+    res = astlint.lint_tree(ROOT)
+    findings = list(res.findings)
+    rules = dict(astlint.RULES)
+    stats = {"files": res.files_checked, "pragmas": res.pragmas_used}
+
+    if not args.no_jaxpr:
+        from repro.analysis import jaxpr_audit
+        audit = jaxpr_audit.run_audit()
+        findings.extend(audit.findings)
+        rules.update(jaxpr_audit.JX_RULES)
+        stats["jaxpr"] = audit.stats
+
+    baseline = load_baseline(args.baseline)
+    fresh = [f for f in findings if f.key not in baseline]
+    n_baselined = len(findings) - len(fresh)
+
+    layers = "ast" if args.no_jaxpr else "ast+jaxpr"
+    ok_msg = (f"{res.files_checked} files, {res.pragmas_used} pragmas, "
+              f"{n_baselined} baselined — {layers} clean")
+    return _checklib.report(
+        "check_static", [f.as_dict() for f in fresh],
+        ok_msg=ok_msg, checked=res.files_checked, json_path=args.json,
+        extra={"stats": stats, "baselined": n_baselined, "rules": rules})
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,13 +23,19 @@ story the overload trace is designed to exercise
     per-priority TPOT histograms, queue-wait histograms, and the
     shed-attribution counter labelled reason=deadline_infeasible.
 
-Exit 0 on success, 1 with one line per missing fact otherwise.
+Exit 0 on success, 1 with one line per missing fact, 2 on usage
+errors (scripts/_checklib.py convention). `--json OUT.json` writes the
+machine-readable report.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 from collections import defaultdict
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _checklib  # noqa: E402
 
 REQUIRED_INSTANTS = (
     "request_queued", "request_admitted", "request_first_token",
@@ -117,21 +123,27 @@ def check_metrics(path: str, problems: list) -> None:
 
 
 def main(argv) -> int:
+    argv = list(argv)
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            return _checklib.usage(
+                "check_trace.py TRACE.json METRICS.jsonl [--json OUT.json]")
+        del argv[i:i + 2]
     if len(argv) != 2:
-        print("usage: check_trace.py TRACE.json METRICS.jsonl",
-              file=sys.stderr)
-        return 2
+        return _checklib.usage(
+            "check_trace.py TRACE.json METRICS.jsonl [--json OUT.json]")
     problems: list = []
     check_trace(argv[0], problems)
     check_metrics(argv[1], problems)
-    if problems:
-        print("check_trace: FAILED:", file=sys.stderr)
-        for p in problems:
-            print(f"  {p}", file=sys.stderr)
-        return 1
-    print(f"check_trace: {argv[0]} + {argv[1]} OK "
-          "(lifecycle, preemption, both shed reasons, SLO histograms)")
-    return 0
+    return _checklib.report(
+        "check_trace", [_checklib.finding(p) for p in problems],
+        ok_msg=f"{argv[0]} + {argv[1]} OK (lifecycle, preemption, "
+               "both shed reasons, SLO histograms)",
+        json_path=json_path)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+"""repro-lint: static enforcement of the stack's structural invariants.
+
+Two layers, one driver (`scripts/check_static.py`, wired into
+`scripts/check.sh` before tier-1):
+
+* :mod:`repro.analysis.astlint` — pure-`ast` rules RL000–RL005 over the
+  `src/` tree (dispatch purity, host-sync discipline, kernel fail-fast
+  contract, donation safety, PartitionSpec hygiene). Stdlib-only: runs
+  without jax.
+* :mod:`repro.analysis.jaxpr_audit` — traces the canonical entry points
+  (train fwd/bwd, chunk prefill, decode scan, sequence-parallel forms) to
+  closed jaxprs and asserts the collective counts/byte volumes match the
+  comm-cost model in `core/seq_parallel.py`, that `decode_scan`'s scanned
+  body is host-effect-free, and the decode precision policy.
+
+Rule catalog, pragma grammar, and the jaxpr contract: docs/static-analysis.md.
+"""

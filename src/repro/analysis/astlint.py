@@ -1,0 +1,676 @@
+"""repro-lint layer 1: AST rules over the `src/` tree.
+
+Rules (full catalog with rationale: docs/static-analysis.md):
+
+  RL000  hygiene — no committed bytecode/artifact paths, no `print(` in
+         library code (only `launch/` may print; benchmarks/scripts live
+         outside the linted tree), and every `repro-lint` pragma must be
+         well-formed and carry a reason.
+  RL001  dispatch purity — backend-string comparisons, `resolve_backend`/
+         `resolve_backward_impl` calls, and branching on mesh axis names
+         only inside the plan layer (`parallel/plan.py`,
+         `parallel/sharding.py`, `kernels/common.py`, `launch/mesh.py`).
+  RL002  host-sync discipline — implicit device→host syncs (`float()`/
+         `int()`/`bool()`/`.item()`/`np.asarray`/`jax.device_get`/
+         `block_until_ready`) in the serving/decode hot-path modules need
+         an inline `# repro-lint: allow[RL002] <reason>` pragma, so every
+         sync is named and justified.
+  RL003  kernel contract — `pl.pallas_call` is reachable only through
+         wrappers with a fail-fast check (MAX_EXACT_K / MAX_PINNED_SLOTS
+         bound, `divisor_block` grid floor, or a shape-divisibility
+         assert), direct kernel entry points are only called from inside
+         `kernels/`, and every VMEM scratch accumulator is a literal
+         `jnp.float32`.
+  RL004  donation safety — `donate_argnums`/`donate_argnames` only in the
+         SlotPool-owned serving jits (`serving/engine.py`) and the trainer's
+         own step jit (`train/trainer.py`).
+  RL005  spec hygiene — string axis names passed to `PartitionSpec`/`P`
+         must come from the `DECLARED_AXES` registry in `parallel/plan.py`.
+
+Waiver grammar (same line as the finding, or the line directly above):
+
+    # repro-lint: allow[RL002] <reason — required>
+
+Pure stdlib (`ast`, `re`, `subprocess` for `git ls-files`) — no jax and no
+repo imports, so the linter runs anywhere, before the environment can trace.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import subprocess
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "RL000": "hygiene: no committed artifacts, no print() in library code, "
+             "well-formed pragmas",
+    "RL001": "dispatch purity: backend/mesh branching only in the plan layer",
+    "RL002": "host-sync discipline: device->host syncs in hot paths need a "
+             "reasoned pragma",
+    "RL003": "kernel contract: pallas_call behind fail-fast wrappers, fp32 "
+             "scratch accumulators",
+    "RL004": "donation safety: donate_argnums only in pool/trainer jits",
+    "RL005": "spec hygiene: PartitionSpec axis names from the declared "
+             "registry",
+}
+
+# -- scope ------------------------------------------------------------------
+
+# RL001: the plan layer — parallel/plan.py + kernels/common.py own backend
+# resolution (the ISSUE contract); parallel/sharding.py and launch/mesh.py
+# are the mesh-introspection utilities the plan itself is built from.
+RL001_ALLOWED = (
+    "src/repro/parallel/plan.py",
+    "src/repro/parallel/sharding.py",
+    "src/repro/kernels/common.py",
+    "src/repro/launch/mesh.py",
+)
+BACKEND_STRINGS = frozenset({"auto", "fused", "reference"})
+DISPATCH_RESOLVERS = frozenset({"resolve_backend", "resolve_backward_impl"})
+
+# RL002: hot-path modules (serving decode/prefill loop + kernels).
+RL002_HOT = (
+    "src/repro/serving/scheduler.py",
+    "src/repro/serving/engine.py",
+    "src/repro/core/cache.py",
+    "src/repro/models/transformer.py",
+    "src/repro/models/model.py",
+    "src/repro/kernels/",
+)
+
+# RL003: fail-fast guard vocabulary (kernels/common.py).
+GUARD_CONSTS = frozenset({"MAX_PINNED_SLOTS", "MAX_EXACT_K",
+                          "MIN_DIVISOR_BLOCK"})
+GUARD_CALLS = frozenset({"divisor_block", "_divisor_block"})
+KERNEL_PKG = "src/repro/kernels/"
+KERNEL_WRAPPER_MOD = "src/repro/kernels/ops.py"
+
+# RL004: jits allowed to donate — the SlotPool-owned serving step jits and
+# the trainer's own (params, opt_state[, residual]) step jit.
+RL004_ALLOWED = (
+    "src/repro/serving/engine.py",
+    "src/repro/train/trainer.py",
+)
+
+# RL000: only the CLI layer may print.
+PRINT_ALLOWED = ("src/repro/launch/",)
+ARTIFACT_PATTERNS = ("__pycache__", ".pyc", ".pyo", ".DS_Store", ".egg-info")
+
+PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*allow\[(RL\d{3})\]\s*(.*)$")
+
+PLAN_PATH = "src/repro/parallel/plan.py"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str      # repo-relative POSIX path ("src/repro/...")
+    line: int      # 1-based; 0 = whole-file finding
+    msg: str
+
+    @property
+    def key(self) -> str:
+        """Stable id used by the grandfather baseline."""
+        return f"{self.rule}:{self.path}:{self.line}"
+
+    def as_dict(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "msg": self.msg, "key": self.key}
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    files_checked: int
+    pragmas_used: int
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _call_name(call: ast.Call) -> str:
+    """Bare name of the called object: `f(..)` -> 'f', `a.b.f(..)` -> 'f'."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _attr_root(node: ast.expr) -> str:
+    """`np.asarray` -> 'np'; `a.b.c` -> 'a'."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _contains(node: ast.AST, *, attr: Optional[str] = None,
+              call: Optional[str] = None) -> bool:
+    for sub in ast.walk(node):
+        if attr and isinstance(sub, ast.Attribute) and sub.attr == attr:
+            return True
+        if call and isinstance(sub, ast.Call) and _call_name(sub) == call:
+            return True
+    return False
+
+
+def _str_constants(node: ast.AST) -> Iterable[Tuple[ast.Constant, str]]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            yield sub, sub.value
+
+
+def _collect_pragmas(source: str, rel: str,
+                     findings: List[Finding]) -> Dict[int, Set[str]]:
+    """line -> set of waived rule ids. Malformed / reason-less pragmas are
+    RL000 findings and waive nothing. Only real comment tokens count —
+    docstrings and string literals mentioning repro-lint are not pragmas."""
+    pragmas: Dict[int, Set[str]] = {}
+    try:
+        comments = [(t.start[0], t.string)
+                    for t in tokenize.generate_tokens(
+                        io.StringIO(source).readline)
+                    if t.type == tokenize.COMMENT]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return pragmas
+    for i, line in comments:
+        if not re.search(r"repro-lint\s*:", line):
+            continue
+        m = PRAGMA_RE.search(line)
+        if m is None:
+            findings.append(Finding(
+                "RL000", rel, i,
+                "malformed repro-lint pragma (grammar: "
+                "'# repro-lint: allow[RLxxx] <reason>')"))
+            continue
+        rule, reason = m.group(1), m.group(2).strip()
+        if rule not in RULES:
+            findings.append(Finding(
+                "RL000", rel, i, f"pragma waives unknown rule {rule!r}"))
+            continue
+        if not reason:
+            findings.append(Finding(
+                "RL000", rel, i,
+                f"pragma for {rule} has no reason — every waiver must be "
+                "justified inline"))
+            continue
+        pragmas.setdefault(i, set()).add(rule)
+    return pragmas
+
+
+def declared_axes_from_source(plan_source: str) -> Set[str]:
+    """Extract the DECLARED_AXES registry literal from parallel/plan.py."""
+    tree = ast.parse(plan_source)
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        if any(isinstance(t, ast.Name) and t.id == "DECLARED_AXES"
+               for t in targets):
+            return {s for _, s in _str_constants(node)}
+    return set()
+
+
+# ---------------------------------------------------------------------------
+# Per-file rules
+# ---------------------------------------------------------------------------
+
+
+def _rl000_prints(rel: str, tree: ast.AST, findings: List[Finding]) -> None:
+    if any(rel.startswith(p) for p in PRINT_ALLOWED):
+        return
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            findings.append(Finding(
+                "RL000", rel, node.lineno,
+                "print() in library code — route output through "
+                "telemetry/logging, or move the CLI into launch/"))
+
+
+def _rl001(rel: str, tree: ast.AST, findings: List[Finding]) -> None:
+    if rel in RL001_ALLOWED:
+        return
+
+    def axis_branch(test: ast.AST) -> bool:
+        # membership/equality tests on .axis_names are caught by the
+        # Compare rule below; here: branching on axis_size() widths
+        return _contains(test, call="axis_size")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _call_name(node) in \
+                DISPATCH_RESOLVERS:
+            findings.append(Finding(
+                "RL001", rel, node.lineno,
+                f"{_call_name(node)}() outside the plan layer — thread a "
+                "resolved AttentionPlan instead"))
+        elif isinstance(node, ast.Compare):
+            hits = sorted({s for _, s in _str_constants(node)
+                           if s in BACKEND_STRINGS})
+            if hits:
+                findings.append(Finding(
+                    "RL001", rel, node.lineno,
+                    f"comparison against backend string(s) {hits} — "
+                    "dispatch belongs to parallel/plan.py"))
+        elif isinstance(node, (ast.If, ast.IfExp, ast.While, ast.Assert)):
+            if axis_branch(node.test):
+                findings.append(Finding(
+                    "RL001", rel, node.lineno,
+                    "branching on axis_size() outside the plan layer — "
+                    "expose the decision as a plan/ctx property"))
+        if isinstance(node, ast.Compare) and \
+                _contains(node, attr="axis_names"):
+            findings.append(Finding(
+                "RL001", rel, node.lineno,
+                "membership test on mesh.axis_names outside the plan layer "
+                "— expose the decision as a plan/ctx property "
+                "(e.g. ParallelCtx.has_pod_axis)"))
+        elif isinstance(node, ast.comprehension):
+            for test in node.ifs:
+                if axis_branch(test):
+                    findings.append(Finding(
+                        "RL001", rel, test.lineno,
+                        "comprehension filtering on mesh axis names outside "
+                        "the plan layer"))
+
+
+_HOST_SAFE_ATTRS = frozenset({"shape", "ndim", "size", "itemsize"})
+
+
+def _attr_chain_only(node: ast.expr) -> bool:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return isinstance(node, ast.Name)
+
+
+def _host_safe(node: ast.expr, allow_attr: bool = False) -> bool:
+    """Conservatively true when an expression cannot hold device data, so
+    `int(...)`/`np.asarray(...)` over it is not a sync: literals, python
+    containers, `len()`/`getattr()`/`prod()`, and shape/dtype metadata
+    (python ints on jax arrays). `allow_attr` additionally trusts bare
+    attribute chains (`c.value`, `self.pool.pages_freed`) — python-object
+    bookkeeping reads, used for the cast family only; subscripted
+    containers (`self.cache["lengths"]`) stay suspect."""
+    if isinstance(node, (ast.Constant, ast.JoinedStr)):
+        return True
+    if isinstance(node, (ast.List, ast.Tuple, ast.Set, ast.Dict,
+                         ast.ListComp, ast.SetComp, ast.DictComp,
+                         ast.GeneratorExp)):
+        return True
+    if isinstance(node, ast.Attribute):
+        return node.attr in _HOST_SAFE_ATTRS or \
+            (allow_attr and _attr_chain_only(node))
+    if isinstance(node, ast.Subscript):
+        return _host_safe(node.value)
+    if isinstance(node, ast.Call):
+        name = _call_name(node)
+        if name in ("len", "getattr"):
+            return True
+        if name == "prod":
+            return all(_host_safe(a, allow_attr) for a in node.args)
+        return False
+    if isinstance(node, ast.BinOp):
+        return (_host_safe(node.left, allow_attr)
+                and _host_safe(node.right, allow_attr))
+    if isinstance(node, ast.UnaryOp):
+        return _host_safe(node.operand, allow_attr)
+    if isinstance(node, ast.BoolOp):
+        return all(_host_safe(v, allow_attr) for v in node.values)
+    if isinstance(node, ast.Compare):
+        return (_host_safe(node.left, allow_attr)
+                and all(_host_safe(c, allow_attr)
+                        for c in node.comparators))
+    if isinstance(node, ast.IfExp):
+        return (_host_safe(node.body, allow_attr)
+                and _host_safe(node.orelse, allow_attr))
+    return False
+
+
+def _rl002(rel: str, tree: ast.AST, findings: List[Finding]) -> None:
+    if not any(rel.startswith(p) for p in RL002_HOT):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f, msg = node.func, None
+        if isinstance(f, ast.Attribute):
+            if f.attr in ("item", "block_until_ready", "device_get"):
+                msg = f".{f.attr}() forces a device->host sync"
+            elif (f.attr in ("asarray", "array")
+                  and _attr_root(f) in ("np", "numpy")):
+                if node.args and not _host_safe(node.args[0]):
+                    msg = (f"np.{f.attr}() on device data forces a "
+                           "device->host sync")
+        elif isinstance(f, ast.Name) and f.id in ("float", "int", "bool"):
+            if node.args and not _host_safe(node.args[0], allow_attr=True):
+                msg = (f"{f.id}() on (potentially) device data forces a "
+                       "device->host sync")
+        if msg:
+            findings.append(Finding(
+                "RL002", rel, node.lineno,
+                msg + " in a hot-path module — batch it onto the chunk's "
+                "single sync or waive with a reasoned pragma"))
+
+
+def _rl004(rel: str, tree: ast.AST, findings: List[Finding]) -> None:
+    if rel in RL004_ALLOWED:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg in ("donate_argnums", "donate_argnames"):
+                findings.append(Finding(
+                    "RL004", rel, node.lineno,
+                    f"{kw.arg} outside the SlotPool/trainer jits — donated "
+                    "buffers alias their inputs; only the owning step "
+                    "functions may donate"))
+
+
+def _partition_spec_names(tree: ast.AST) -> Set[str]:
+    """Local names bound to jax.sharding.PartitionSpec in this module."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and \
+                "sharding" in node.module:
+            for alias in node.names:
+                if alias.name == "PartitionSpec":
+                    names.add(alias.asname or alias.name)
+    return names
+
+
+def _rl005(rel: str, tree: ast.AST, declared: Set[str],
+           findings: List[Finding]) -> None:
+    spec_names = _partition_spec_names(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        is_spec = (isinstance(f, ast.Name) and f.id in spec_names) or \
+                  (isinstance(f, ast.Attribute) and f.attr == "PartitionSpec")
+        if not is_spec:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            for const, s in _str_constants(arg):
+                if s not in declared:
+                    findings.append(Finding(
+                        "RL005", rel, const.lineno,
+                        f"PartitionSpec axis {s!r} is not in the "
+                        "DECLARED_AXES registry (parallel/plan.py)"))
+
+
+# ---------------------------------------------------------------------------
+# RL003: kernel contract (cross-file)
+# ---------------------------------------------------------------------------
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "pallas_call")
+
+
+def _has_guard(fn: ast.FunctionDef) -> bool:
+    """A fail-fast check: an `if`-guarded raise over a kernel bound
+    constant, a divisor_block() grid floor, or a shape-divisibility
+    assert/raise (`% == 0` style)."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.If):
+            mentions = any(isinstance(s, ast.Name) and s.id in GUARD_CONSTS
+                           for s in ast.walk(node.test))
+            has_mod = any(isinstance(s, ast.BinOp)
+                          and isinstance(s.op, ast.Mod)
+                          for s in ast.walk(node.test))
+            raises = any(isinstance(s, ast.Raise) for s in ast.walk(node))
+            if raises and (mentions or has_mod):
+                return True
+        elif isinstance(node, ast.Call) and _call_name(node) in GUARD_CALLS:
+            return True
+        elif isinstance(node, ast.Assert):
+            if any(isinstance(s, ast.BinOp) and isinstance(s.op, ast.Mod)
+                   for s in ast.walk(node.test)):
+                return True
+    return False
+
+
+def _kernel_module_aliases(tree: ast.AST,
+                           kernel_mods: Set[str]) -> Tuple[Set[str],
+                                                           Dict[str, str]]:
+    """(names bound to kernel-entry functions, alias -> kernel module)."""
+    fn_names: Set[str] = set()
+    mod_aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            if node.module == "repro.kernels":
+                for alias in node.names:
+                    if alias.name in kernel_mods:
+                        mod_aliases[alias.asname or alias.name] = alias.name
+            elif node.module.startswith("repro.kernels."):
+                mod = node.module.rsplit(".", 1)[1]
+                if mod in kernel_mods:
+                    for alias in node.names:
+                        fn_names.add(alias.asname or alias.name)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("repro.kernels."):
+                    mod = alias.name.rsplit(".", 1)[1]
+                    if mod in kernel_mods and alias.asname:
+                        mod_aliases[alias.asname] = mod
+    return fn_names, mod_aliases
+
+
+def _rl003(files: Dict[str, ast.Module],
+           findings: List[Finding]) -> None:
+    # 1. kernel entry points: top-level functions in kernels/ (minus the
+    #    wrapper module) whose body contains a pl.pallas_call, plus the
+    #    scratch-accumulator dtype check on every pallas_call.
+    kernel_fns: Dict[str, Set[str]] = {}      # module basename -> fn names
+    for rel, tree in files.items():
+        if not rel.startswith(KERNEL_PKG):
+            continue
+        for node in ast.walk(tree):
+            if _is_pallas_call(node):
+                _check_scratch(rel, node, findings)
+        if rel == KERNEL_WRAPPER_MOD:
+            continue
+        mod = os.path.basename(rel)[:-3]
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef) and \
+                    any(_is_pallas_call(s) for s in ast.walk(node)):
+                kernel_fns.setdefault(mod, set()).add(node.name)
+    kernel_mods = set(kernel_fns)
+    all_kernel_fn_names = {n for fns in kernel_fns.values() for n in fns}
+
+    # 2. direct kernel calls are kernels/-internal: everything else goes
+    #    through the fail-fast wrappers in kernels/ops.py.
+    for rel, tree in files.items():
+        if rel.startswith(KERNEL_PKG):
+            continue
+        fn_names, mod_aliases = _kernel_module_aliases(tree, kernel_mods)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            direct = (isinstance(f, ast.Name) and f.id in fn_names) or \
+                     (isinstance(f, ast.Attribute)
+                      and f.attr in all_kernel_fn_names
+                      and isinstance(f.value, ast.Name)
+                      and f.value.id in mod_aliases)
+            if direct:
+                findings.append(Finding(
+                    "RL003", rel, node.lineno,
+                    f"direct call to kernel entry {_call_name(node)}() — "
+                    "go through the fail-fast wrappers in kernels/ops.py"))
+
+    # 3. every public wrapper in kernels/ops.py that (transitively) reaches
+    #    a pallas_call must itself contain a fail-fast guard.
+    ops_tree = files.get(KERNEL_WRAPPER_MOD)
+    if ops_tree is None:
+        return
+    ops_fns = {n.name: n for n in ops_tree.body
+               if isinstance(n, ast.FunctionDef)}
+    _, ops_mod_aliases = _kernel_module_aliases(ops_tree, kernel_mods)
+    calls: Dict[str, Set[str]] = {}
+    reaches: Set[str] = set()
+    for name, fn in ops_fns.items():
+        callees: Set[str] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in ops_fns:
+                callees.add(f.id)
+            elif (isinstance(f, ast.Attribute)
+                  and isinstance(f.value, ast.Name)
+                  and f.value.id in ops_mod_aliases
+                  and f.attr in kernel_fns.get(
+                      ops_mod_aliases[f.value.id], ())):
+                reaches.add(name)
+        calls[name] = callees
+    changed = True
+    while changed:
+        changed = False
+        for name, callees in calls.items():
+            if name not in reaches and callees & reaches:
+                reaches.add(name)
+                changed = True
+    for name in sorted(reaches):
+        if name.startswith("_"):
+            continue      # private plumbing of a guarded public wrapper
+        if not _has_guard(ops_fns[name]):
+            findings.append(Finding(
+                "RL003", KERNEL_WRAPPER_MOD, ops_fns[name].lineno,
+                f"public wrapper {name}() reaches a pl.pallas_call without "
+                "a fail-fast check (MAX_* bound, divisor_block, or "
+                "divisibility assert)"))
+
+
+def _check_scratch(rel: str, call: ast.Call,
+                   findings: List[Finding]) -> None:
+    """Every VMEM scratch accumulator must be a literal jnp.float32."""
+    for kw in call.keywords:
+        if kw.arg != "scratch_shapes":
+            continue
+        if not isinstance(kw.value, (ast.List, ast.Tuple)):
+            findings.append(Finding(
+                "RL003", rel, kw.value.lineno,
+                "scratch_shapes must be a literal list so the accumulator "
+                "dtype is statically auditable"))
+            continue
+        for elt in kw.value.elts:
+            if not (isinstance(elt, ast.Call)
+                    and isinstance(elt.func, ast.Attribute)
+                    and elt.func.attr == "VMEM"):
+                continue      # semaphores etc. — not accumulators
+            dtype = None
+            if len(elt.args) >= 2:
+                dtype = elt.args[1]
+            for ekw in elt.keywords:
+                if ekw.arg == "dtype":
+                    dtype = ekw.value
+            ok = (isinstance(dtype, ast.Attribute)
+                  and dtype.attr == "float32")
+            if not ok:
+                findings.append(Finding(
+                    "RL003", rel, elt.lineno,
+                    "VMEM scratch accumulator is not a literal "
+                    "jnp.float32 — kernel reductions must accumulate in "
+                    "fp32"))
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def lint_mapping(sources: Dict[str, str], *,
+                 declared_axes: Optional[Set[str]] = None,
+                 tracked_paths: Optional[Sequence[str]] = None) -> LintResult:
+    """Lint a {repo-relative path: source} mapping (the unit the tests
+    drive directly). Only `src/` paths are linted."""
+    findings: List[Finding] = []
+    pragmas_by_file: Dict[str, Dict[int, Set[str]]] = {}
+    trees: Dict[str, ast.Module] = {}
+
+    for rel in sorted(tracked_paths or ()):
+        if any(pat in rel for pat in ARTIFACT_PATTERNS):
+            findings.append(Finding(
+                "RL000", rel, 0,
+                "committed build artifact — delete it and rely on "
+                ".gitignore"))
+
+    for rel in sorted(sources):
+        if not rel.startswith("src/"):
+            continue
+        source = sources[rel]
+        try:
+            tree = ast.parse(source)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "RL000", rel, e.lineno or 0, f"syntax error: {e.msg}"))
+            continue
+        trees[rel] = tree
+        pragmas_by_file[rel] = _collect_pragmas(source, rel, findings)
+
+    if declared_axes is None:
+        declared_axes = set()
+        if PLAN_PATH in sources:
+            declared_axes = declared_axes_from_source(sources[PLAN_PATH])
+
+    for rel, tree in trees.items():
+        _rl000_prints(rel, tree, findings)
+        _rl001(rel, tree, findings)
+        _rl002(rel, tree, findings)
+        _rl004(rel, tree, findings)
+        _rl005(rel, tree, declared_axes, findings)
+    _rl003(trees, findings)
+
+    kept: List[Finding] = []
+    pragmas_used = 0
+    for f in findings:
+        waivers = pragmas_by_file.get(f.path, {})
+        if f.rule in waivers.get(f.line, ()) or \
+                f.rule in waivers.get(f.line - 1, ()):
+            pragmas_used += 1
+            continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule, f.msg))
+    return LintResult(findings=kept, files_checked=len(trees),
+                      pragmas_used=pragmas_used)
+
+
+def _git_tracked(root: str) -> Sequence[str]:
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=root,
+                             capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return ()
+    if out.returncode != 0:
+        return ()
+    return [line for line in out.stdout.splitlines() if line]
+
+
+def lint_tree(root: str) -> LintResult:
+    """Lint the repo's `src/` tree on disk (plus the git index for RL000
+    artifact paths)."""
+    sources: Dict[str, str] = {}
+    src = os.path.join(root, "src")
+    for dirpath, dirnames, filenames in os.walk(src):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for name in sorted(filenames):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                sources[rel] = fh.read()
+    return lint_mapping(sources, tracked_paths=_git_tracked(root))
