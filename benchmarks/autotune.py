@@ -1,0 +1,68 @@
+"""Offline kernel/scheduler autotuner CLI — regenerates TUNING.json.
+
+Sweeps the tunable knobs per (platform, form, shape bucket) by timing
+the real fused entry points and live serve loops (`repro.tune.autotune`)
+and writes the winners to the committed tuning table:
+
+    python -m benchmarks.autotune              # full sweep -> TUNING.json
+    python -m benchmarks.autotune --smoke \\
+        --out /tmp/tuning_smoke.json           # gate-speed, small shapes
+
+Emits one ``autotune/<form>,us,params`` CSV line per winning entry (the
+``emit`` convention shared by every benchmark). ``--smoke`` shrinks the
+sweep to the scripts/check.sh gate budget — its table is schema-valid
+and loadable (the gate points REPRO_TUNING_PATH at it) but tuned at toy
+shapes, so it is written to --out, never committed. Telemetry spans per
+trial and ``autotune_trials_total`` export via --trace-out/--metrics-out
+like the serving bench.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import emit
+from repro.tune import autotune as autotune_lib
+from repro.tune.table import default_path
+
+
+def run(quick: bool = True, out: str = None, telemetry=None):
+    mode = "smoke" if quick else "full"
+    table = autotune_lib.build_table(mode, telemetry=telemetry)
+    # save() re-validates and raises on schema violations
+    path = table.save(out if out is not None else default_path())
+    for e in table.entries:
+        emit(f"autotune/{e['form']}", e["trial_us"],
+             f"{json.dumps(e['params'], sort_keys=True)} "
+             f"speedup={e['speedup']}")
+    print(f"# {len(table.entries)} entries -> {path}")
+    return table
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate-speed sweep at toy shapes (table goes to "
+                         "--out, not the committed TUNING.json)")
+    ap.add_argument("--out", default=None,
+                    help="write the table here instead of the default "
+                         "TUNING.json location")
+    ap.add_argument("--trace-out", default=None,
+                    help="export a Chrome-trace/Perfetto JSON of the "
+                         "per-trial autotune spans to this path")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export the metrics dump (autotune_trials_total) "
+                         "as JSONL")
+    args = ap.parse_args()
+    telemetry = None
+    if args.trace_out or args.metrics_out:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry()
+    run(quick=args.smoke, out=args.out, telemetry=telemetry)
+    if telemetry is not None and args.trace_out:
+        telemetry.export_trace(args.trace_out,
+                               metadata={"bench": "autotune"})
+        print(f"# trace -> {args.trace_out}")
+    if telemetry is not None and args.metrics_out:
+        telemetry.export_metrics_jsonl(args.metrics_out)
+        print(f"# metrics -> {args.metrics_out}")

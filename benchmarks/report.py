@@ -155,6 +155,14 @@ def _summarize_bench_record(name, rec, print_):
                f"backward {rec['step_ms_fused']}ms vs "
                f"reference-recompute {rec['step_ms_reference']}ms "
                f"({rec['speedup_fused_over_reference']}x)")
+        ex = rec.get("exact_tuned")
+        if ex:
+            print_(f"  * exact-form autotuned leg ({ex['mode']}, "
+                   f"S={ex['shape'].get('seq')}, k={ex['shape'].get('k')}): "
+                   f"TUNING.json {ex['step_ms_tuned']}ms vs defaults "
+                   f"{ex['step_ms_defaults']}ms "
+                   f"({ex['tuned_over_defaults']}x, params "
+                   f"{json.dumps(ex.get('table_params'), sort_keys=True)})")
         mrec = rec.get("mesh")
         if mrec:
             print_(f"  * sharded plan ({mrec['spec']}, "
@@ -324,6 +332,32 @@ def lint_summary(path, out=None):
                    f"{dec.get('widenings')} widenings")
 
 
+def tuning_summary(path=None, out=None):
+    """Summarize a TUNING.json autotuner table: per-entry winning params
+    with their measured defaults-vs-tuned deltas. Schema violations raise
+    BenchJsonError — a table the runtime would silently ignore is a red
+    gate here, never an empty section."""
+    from repro.tune.table import default_path, validate_doc
+    out = out if out is not None else sys.stdout
+    print_ = lambda *a: print(*a, file=out)
+    path = path if path is not None else default_path()
+    doc = load_json_artifact(path)
+    errs = validate_doc(doc)
+    if errs:
+        raise BenchJsonError(f"{path}: invalid tuning table — "
+                             + "; ".join(errs))
+    print_(f"\n### Tuning table: {path}\n")
+    print_(f"* generated by {doc.get('generated_by', '?')} "
+           f"(mode {doc.get('mode', '?')}), {len(doc['entries'])} entries")
+    for e in doc["entries"]:
+        bucket = json.dumps(e["bucket"], sort_keys=True) \
+            if e["bucket"] else "platform-wide"
+        print_(f"  * [{e['platform']}] {e['form']} {bucket}: "
+               f"{json.dumps(e['params'], sort_keys=True)} — "
+               f"{e['trial_us']}us tuned vs {e['default_us']}us default "
+               f"({e['speedup']}x, {e['trials']} trials)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
@@ -341,6 +375,10 @@ def main(argv=None):
     ap.add_argument("--lint", default=None,
                     help="summarize this scripts/check_static.py --json "
                          "report (per-rule counts, jaxpr comm stats)")
+    ap.add_argument("--tuning", nargs="?", const="", default=None,
+                    help="summarize an autotuner TUNING.json (winning "
+                         "params + defaults-vs-tuned deltas); with no "
+                         "path, the committed/REPRO_TUNING_PATH table")
     args = ap.parse_args(argv)
     try:
         if args.trace:
@@ -349,7 +387,10 @@ def main(argv=None):
             metrics_summary(args.trace_metrics)
         if args.lint:
             lint_summary(args.lint)
-        if args.trace or args.trace_metrics or args.lint:
+        if args.tuning is not None:
+            tuning_summary(args.tuning or None)
+        if args.trace or args.trace_metrics or args.lint \
+                or args.tuning is not None:
             return
         bench_json_summary(bench_dir=args.bench_dir)
     except BenchJsonError as e:

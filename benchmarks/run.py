@@ -20,7 +20,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (decode_throughput, figure1_spectrum,
+    from benchmarks import (autotune, decode_throughput, figure1_spectrum,
                             figure3_pretrain, roofline, serving_throughput,
                             table1_complexity, table2_downstream,
                             table3_efficiency, train_step)
@@ -46,6 +46,11 @@ def main() -> None:
             lambda quick: serving_throughput.run(quick, trace="mixed"),
         "serving_long_prompt":
             lambda quick: serving_throughput.run(quick, trace="long_prompt"),
+        # offline autotuner (repro/tune): full mode regenerates the
+        # committed TUNING.json; quick mode sweeps toy shapes, so its
+        # table goes to a scratch path rather than clobbering it
+        "autotune": lambda quick: autotune.run(
+            quick, out=("/tmp/tuning_smoke.json" if quick else None)),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -130,9 +130,34 @@ def _cfg(backward_impl: str, *, seq: int, block_size: int,
     )
 
 
-def _time_step(backward_impl: str, *, seq: int, block_size: int,
-               block_slots: int, batch_size: int, iters: int,
-               ctx=None, telemetry=None, label: str = "") -> float:
+def _cfg_exact(*, seq: int, k: int) -> ModelConfig:
+    """Exact (bidirectional) Linformer at the autotuner's committed
+    shape bucket: S=2048, k=128, H=4/Hkv=2/Dh=16 fp32 — the shapes the
+    fused projection + attention kernels launch with inside the step."""
+    return ModelConfig(
+        name="train-step-bench-exact",
+        num_layers=2,
+        d_model=64,
+        vocab_size=512,
+        max_seq_len=seq,
+        objective="mlm",
+        attention=AttentionConfig(
+            kind="linformer",
+            backend="fused",
+            num_heads=4,
+            num_kv_heads=2,
+            head_dim=16,
+            causal=False,
+            use_rope=False,
+            linformer=LinformerConfig(k=k, sharing="layerwise"),
+        ),
+        dtype="float32",
+        remat="none",
+    )
+
+
+def _time_cfg(cfg: ModelConfig, *, seq: int, batch_size: int, iters: int,
+              ctx=None, telemetry=None, label: str = "") -> float:
     """Median seconds of the jit'd train step (first call = compile+warmup,
     excluded). No donation so the same buffers are re-fed every iteration.
     With `ctx` the step runs on the mesh, params laid out per the sharding
@@ -140,8 +165,6 @@ def _time_step(backward_impl: str, *, seq: int, block_size: int,
     call (compile included) becomes a span in the exported trace."""
     import contextlib
     tel = as_telemetry(telemetry)
-    cfg = _cfg(backward_impl, seq=seq, block_size=block_size,
-               block_slots=block_slots)
     opt_cfg = OptimizerConfig()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     opt_state = adamw_init(params, opt_cfg)
@@ -168,6 +191,15 @@ def _time_step(backward_impl: str, *, seq: int, block_size: int,
                 jax.block_until_ready(step(params, opt_state, batch))
             times.append(time.perf_counter() - t0)
     return float(np.median(times))
+
+
+def _time_step(backward_impl: str, *, seq: int, block_size: int,
+               block_slots: int, batch_size: int, iters: int,
+               ctx=None, telemetry=None, label: str = "") -> float:
+    cfg = _cfg(backward_impl, seq=seq, block_size=block_size,
+               block_slots=block_slots)
+    return _time_cfg(cfg, seq=seq, batch_size=batch_size, iters=iters,
+                     ctx=ctx, telemetry=telemetry, label=label)
 
 
 def run(quick: bool = True, telemetry=None):
@@ -201,6 +233,49 @@ def run(quick: bool = True, telemetry=None):
         "step_ms_fused": round(results["fused"] * 1e3, 1),
         "step_ms_reference": round(results["reference"] * 1e3, 1),
         "speedup_fused_over_reference": round(speedup, 2),
+    })
+    run_exact_tuned(quick, telemetry=telemetry)
+    return results
+
+
+def run_exact_tuned(quick: bool = True, telemetry=None):
+    """The autotuned leg: the exact (bidirectional) form's COMPLETE train
+    step with the hand-picked kernel defaults vs the committed
+    TUNING.json winners (block_q/block_s resolved through the attention
+    plan's table lookup). Both runs pin the table with override() so the
+    comparison reflects exactly those two tables, not whatever
+    REPRO_TUNING_PATH happens to say. block_q is bitwise-invariant and
+    block_s moves only the reduction tiling, so this is a pure perf leg."""
+    from repro.tune.table import TuningTable, override
+    tel = as_telemetry(telemetry)
+    seq, k, iters = (2048, 128, 3) if quick else (2048, 128, 5)
+    cfg = _cfg_exact(seq=seq, k=k)
+    tuned_table = TuningTable.load()
+    results = {}
+    for label, tab in (("defaults", TuningTable()),
+                       ("tuned", tuned_table)):
+        with override(tab):
+            t = _time_cfg(cfg, seq=seq, batch_size=1, iters=iters,
+                          telemetry=telemetry, label=f"exact_{label}")
+        results[label] = t
+        tel.record("bench_train_step_exact", table=label, seq=seq,
+                   step_ms=round(t * 1e3, 3))
+        emit(f"train_step/exact_{label}/s{seq}", t * 1e6,
+             f"steps_per_s={1.0 / t:.3f}")
+    speedup = results["defaults"] / results["tuned"]
+    entry = next((e for e in tuned_table.entries
+                  if e["form"] == "exact"), None)
+    emit(f"train_step/exact_tuned_speedup/s{seq}",
+         results["tuned"] * 1e6, f"tuned_over_defaults={speedup:.2f}x")
+    _merge_bench_json({
+        "exact_tuned": {
+            "mode": "quick" if quick else "full",
+            "shape": {"seq": seq, "k": k, "batch": 1},
+            "step_ms_defaults": round(results["defaults"] * 1e3, 1),
+            "step_ms_tuned": round(results["tuned"] * 1e3, 1),
+            "tuned_over_defaults": round(speedup, 2),
+            "table_params": entry["params"] if entry else None,
+        },
     })
     return results
 

@@ -2,7 +2,7 @@
 # One-entry-point smoke gate for builders:
 #   1. docs link check (every file referenced from README/docs exists)
 #   1b. repro-lint: the two-layer static-analysis gate (AST rules
-#      RL000-RL005 + jaxpr audits JX001-JX003, docs/static-analysis.md)
+#      RL000-RL006 + jaxpr audits JX001-JX003, docs/static-analysis.md)
 #      with its machine-readable report summarized by report.py --lint
 #   2. tier-1 test suite (ROADMAP.md "Tier-1 verify")
 #   3. the seeded fault-injection suite: deterministic slot-step / NaN-
@@ -10,6 +10,11 @@
 #      quarantined, and recovered byte-identically (REPRO_FAULT_SEED
 #      re-seeds the randomized schedule leg)
 #   4. the central-complexity-claim benchmark as a quick perf canary
+#   4b. the autotune smoke sweep: benchmarks/autotune.py --smoke must
+#      produce a schema-valid tuning table (scripts/check_tuning.py —
+#      which also validates the committed TUNING.json), and the serving
+#      smoke run then consumes it via REPRO_TUNING_PATH, proving the
+#      runtime lookup path on a freshly generated table
 #   5. the four-trace serving benchmark (--smoke): the mixed continuous-
 #      vs-static trace, the long-prompt chunked-admission-prefill trace,
 #      the equal-arena-bytes capacity trace (paged-int8 must hold >= 3x
@@ -51,8 +56,13 @@ REPRO_FAULT_SEED=7 python -m pytest -q tests/test_serving_faults.py
 echo "== smoke benchmark: table1_complexity =="
 python -m benchmarks.run --only table1_complexity
 
+echo "== smoke benchmark: autotune (kernel/scheduler sweep -> tuning table) =="
+python -m benchmarks.autotune --smoke --out /tmp/tuning_smoke.json
+python scripts/check_tuning.py /tmp/tuning_smoke.json
+python scripts/check_tuning.py --missing-ok TUNING.json
+
 echo "== smoke benchmark: serving_throughput (mixed + long-prompt + capacity + overload) =="
-python -m benchmarks.serving_throughput --smoke
+REPRO_TUNING_PATH=/tmp/tuning_smoke.json python -m benchmarks.serving_throughput --smoke
 
 echo "== smoke benchmark: train_step (fused vs reference backward) =="
 python -m benchmarks.train_step --smoke

@@ -2,7 +2,7 @@
 """repro-lint driver: the two-layer static-analysis gate (check.sh step).
 
 Layer 1 (`repro.analysis.astlint`) parses every tracked file under src/
-and enforces the source-level invariants RL000–RL005 (dispatch purity,
+and enforces the source-level invariants RL000–RL006 (dispatch purity,
 host-sync discipline, kernel contracts, donation safety, spec hygiene,
 no stray artifacts/prints). Layer 2 (`repro.analysis.jaxpr_audit`)
 traces tiny canonical instances of the stack's entry points and checks

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Tuning-table gate (scripts/check.sh step): validate autotuner output.
+
+    python -m benchmarks.autotune --smoke --out /tmp/tuning_smoke.json
+    python scripts/check_tuning.py /tmp/tuning_smoke.json TUNING.json
+
+For every table given, assert what the runtime silently assumes:
+
+  * the document passes `repro.tune.table.validate_doc` (schema version,
+    known forms/params, positive-int knob values, pow2 shape buckets,
+    platform-wide scalars with a null bucket);
+  * the table LOADS through the real runtime path (`TuningTable.load`
+    keeps the entries rather than falling back to an empty table —
+    load() never raises, so a malformed committed table would otherwise
+    degrade to defaults without a word);
+  * each entry's recorded speedup is consistent with its measured
+    trial_us/default_us (the committed evidence is self-consistent);
+  * a lookup of each entry's own bucket finds the entry (the bucket keys
+    round-trip through the subset-match resolution the kernels use).
+
+A listed table that does not exist is a finding — EXCEPT with
+``--missing-ok`` where a missing path is skipped (the committed
+TUNING.json may not exist yet on a fresh branch). Exit 0 clean, 1 with
+one line per violation, 2 on usage (scripts/_checklib.py convention).
+``--json OUT.json`` writes the machine-readable report.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _checklib  # noqa: E402
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+from repro.tune.table import TuningTable, validate_doc  # noqa: E402
+
+
+def check_table(path: str, findings: list) -> int:
+    """Validate one table file; returns the number of entries checked."""
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except OSError as e:
+        findings.append(_checklib.finding(
+            f"cannot read table: {e}", path=path))
+        return 0
+    except json.JSONDecodeError as e:
+        findings.append(_checklib.finding(
+            f"malformed JSON: {e}", path=path))
+        return 0
+    errs = validate_doc(doc)
+    if errs:
+        for err in errs:
+            findings.append(_checklib.finding(
+                f"schema violation: {err}", path=path))
+        return 0
+    table = TuningTable.load(path)
+    if len(table.entries) != len(doc.get("entries", [])):
+        findings.append(_checklib.finding(
+            f"runtime load kept {len(table.entries)} of "
+            f"{len(doc['entries'])} entries — the serving path would "
+            "silently fall back to defaults", path=path))
+        return 0
+    for i, e in enumerate(doc["entries"]):
+        want = round(e["default_us"] / e["trial_us"], 3)
+        if abs(e["speedup"] - want) > 0.002:
+            findings.append(_checklib.finding(
+                f"entry {i} ({e['form']}): recorded speedup "
+                f"{e['speedup']} != default_us/trial_us = {want}",
+                path=path))
+        got = table.lookup(e["form"], platform=e["platform"],
+                           **(e["bucket"] or {}))
+        if got != e["params"]:
+            findings.append(_checklib.finding(
+                f"entry {i} ({e['form']}, bucket {e['bucket']}): lookup "
+                "of the entry's own bucket resolves to different params "
+                "— the entry is dead (shadowed by an earlier duplicate)",
+                path=path))
+    return len(doc["entries"])
+
+
+def main(argv) -> int:
+    json_out = None
+    missing_ok = False
+    paths = []
+    it = iter(argv)
+    for a in it:
+        if a == "--json":
+            json_out = next(it, None)
+            if json_out is None:
+                return _checklib.usage(
+                    "check_tuning.py [--missing-ok] [--json OUT] "
+                    "TABLE.json [...]")
+        elif a == "--missing-ok":
+            missing_ok = True
+        else:
+            paths.append(a)
+    if not paths:
+        return _checklib.usage(
+            "check_tuning.py [--missing-ok] [--json OUT] TABLE.json [...]")
+    findings: list = []
+    checked = 0
+    for path in paths:
+        if missing_ok and not os.path.exists(path):
+            continue
+        checked += check_table(path, findings)
+    return _checklib.report(
+        "check_tuning", findings, checked=checked,
+        ok_msg=f"{checked} entries across {len(paths)} table(s) valid",
+        json_path=json_out)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

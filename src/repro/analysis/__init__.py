@@ -3,7 +3,7 @@
 Two layers, one driver (`scripts/check_static.py`, wired into
 `scripts/check.sh` before tier-1):
 
-* :mod:`repro.analysis.astlint` — pure-`ast` rules RL000–RL005 over the
+* :mod:`repro.analysis.astlint` — pure-`ast` rules RL000–RL006 over the
   `src/` tree (dispatch purity, host-sync discipline, kernel fail-fast
   contract, donation safety, PartitionSpec hygiene). Stdlib-only: runs
   without jax.

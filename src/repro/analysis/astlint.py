@@ -26,6 +26,11 @@ Rules (full catalog with rationale: docs/static-analysis.md):
          own step jit (`train/trainer.py`).
   RL005  spec hygiene — string axis names passed to `PartitionSpec`/`P`
          must come from the `DECLARED_AXES` registry in `parallel/plan.py`.
+  RL006  tuning discipline — kernel grid knobs (`block_q`/`block_s`/
+         `q_chunk_blocks`) may not be pinned to integer literals at fused
+         call sites outside `kernels/common.py` (the defaults) and
+         `tune/` (the autotuner): a literal there silently bypasses the
+         TUNING.json lookup the call sites are wired through.
 
 Waiver grammar (same line as the finding, or the line directly above):
 
@@ -56,6 +61,8 @@ RULES: Dict[str, str] = {
     "RL004": "donation safety: donate_argnums only in pool/trainer jits",
     "RL005": "spec hygiene: PartitionSpec axis names from the declared "
              "registry",
+    "RL006": "tuning discipline: no literal block_q/block_s/q_chunk_blocks "
+             "at fused call sites outside kernels/common.py and tune/",
 }
 
 # -- scope ------------------------------------------------------------------
@@ -361,6 +368,41 @@ def _rl002(rel: str, tree: ast.AST, findings: List[Finding]) -> None:
                 "single sync or waive with a reasoned pragma"))
 
 
+# RL006: who may pin a tuned grid knob to a literal — the defaults module
+# that DEFINES the fallbacks, and the autotuner that sweeps candidates.
+RL006_ALLOWED = (
+    "src/repro/kernels/common.py",
+    "src/repro/tune/",
+)
+# kwargs resolved through the tuning table (tune/table.py TUNABLE_PARAMS)
+RL006_TUNED_KWARGS = ("block_q", "block_s", "q_chunk_blocks")
+
+
+def _rl006(rel: str, tree: ast.AST, findings: List[Finding]) -> None:
+    if any(rel.startswith(p) for p in RL006_ALLOWED):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        callee = f.id if isinstance(f, ast.Name) else \
+            f.attr if isinstance(f, ast.Attribute) else None
+        if callee is None or not (
+                callee.startswith("fused_")
+                or callee == "blockwise_causal_attention_chunked"):
+            continue
+        for kw in node.keywords:
+            if kw.arg in RL006_TUNED_KWARGS and \
+                    isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, int):
+                findings.append(Finding(
+                    "RL006", rel, node.lineno,
+                    f"literal {kw.arg}={kw.value.value} pins a tuned grid "
+                    f"knob at a {callee} call site — route it through the "
+                    "tuning-table lookup (parallel/plan.py, core/causal.py) "
+                    "or hoist the constant into kernels/common.py"))
+
+
 def _rl004(rel: str, tree: ast.AST, findings: List[Finding]) -> None:
     if rel in RL004_ALLOWED:
         return
@@ -632,6 +674,7 @@ def lint_mapping(sources: Dict[str, str], *,
         _rl002(rel, tree, findings)
         _rl004(rel, tree, findings)
         _rl005(rel, tree, declared_axes, findings)
+        _rl006(rel, tree, findings)
     _rl003(trees, findings)
 
     kept: List[Finding] = []

@@ -30,6 +30,17 @@ NEG_INF = -1e30
 CHUNKED_ATTENTION_MIN_SEQ = 8192
 
 
+def chunked_attention_min_seq() -> int:
+    """The chunked-vs-plain routing threshold, after tuning.
+
+    Consults the tuning table's platform-wide ``chunked_min_seq`` scalar
+    (repro/tune/table.py, committed TUNING.json) and falls back to
+    CHUNKED_ATTENTION_MIN_SEQ on any miss. Called at trace/construction
+    time only — the result is a static Python int."""
+    from repro.tune import table as tuning
+    return tuning.scalar("chunked_min_seq", CHUNKED_ATTENTION_MIN_SEQ)
+
+
 def _split_heads_gqa(q: jax.Array, num_kv: int) -> jax.Array:
     """(B,S,H,Dh) -> (B,S,Hkv,G,Dh)"""
     B, S, H, Dh = q.shape
@@ -226,12 +237,17 @@ def blockwise_causal_attention_chunked(
     F: jax.Array,
     *,
     block_size: int,
-    q_chunk_blocks: int = 8,
+    q_chunk_blocks: Optional[int] = None,
     scale: Optional[float] = None,
 ) -> jax.Array:
     """Memory-bounded form: identical math, but query blocks are processed in
     chunks with lax.map so the (S × nb·r) global-score tensor is never fully
     materialized. Used for the 32k/500k prefill shapes.
+
+    ``q_chunk_blocks`` is a pure perf knob (chunk granularity of the lax.map;
+    the math is chunk-invariant). When left unset it resolves through the
+    tuning table (form ``causal_chunked``, bucketed on seq) with a fallback
+    to kernels/common.py's DEFAULT_Q_CHUNK_BLOCKS.
     """
     B, S, H, Dh = q.shape
     Hkv = k.shape[2]
@@ -242,6 +258,9 @@ def blockwise_causal_attention_chunked(
     nb = S // c
     r = E.shape[-1]
     scale_ = scale if scale is not None else Dh ** -0.5
+    if q_chunk_blocks is None:
+        from repro.tune import table as tuning
+        q_chunk_blocks = tuning.q_chunk_blocks_for(seq=S)
     if nb % q_chunk_blocks != 0:
         q_chunk_blocks = 1
     n_chunks = nb // q_chunk_blocks

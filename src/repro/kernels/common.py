@@ -28,6 +28,15 @@ MAX_PINNED_SLOTS = 4096    # causal/decode/chunk forms: M = (max_seq/c)·r
 # a compile-size bomb on TPU), so `divisor_block` refuses them.
 MIN_DIVISOR_BLOCK = 8
 
+# Hand-picked perf defaults for the tunable grid knobs — the fallbacks the
+# tuning table (repro/tune/table.py, committed TUNING.json) overrides per
+# (platform, form, shape bucket). This module is the ONE place these
+# literals live (repro-lint RL006): call sites take them from the table
+# lookup or leave the kwarg unset.
+DEFAULT_BLOCK_Q = 256        # fused_linformer_attention query tile
+DEFAULT_BLOCK_S = 512        # fused_seq_projection sequence tile
+DEFAULT_Q_CHUNK_BLOCKS = 8   # chunked reference causal form, query blocks
+
 
 def auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is not None:

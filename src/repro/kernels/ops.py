@@ -62,7 +62,8 @@ from repro.kernels import blockwise_causal_attn as bca
 from repro.kernels import linformer_attn as la
 from repro.kernels import ref
 from repro.kernels import seq_projection as sp
-from repro.kernels.common import (BACKENDS, BACKWARD_IMPLS, MAX_EXACT_K,
+from repro.kernels.common import (BACKENDS, BACKWARD_IMPLS, DEFAULT_BLOCK_Q,
+                                  DEFAULT_BLOCK_S, MAX_EXACT_K,
                                   MAX_PINNED_SLOTS, MIN_DIVISOR_BLOCK,
                                   auto_interpret as _auto_interpret,
                                   divisor_block as _divisor_block,
@@ -74,6 +75,7 @@ from repro.core.causal import (CHUNKED_ATTENTION_MIN_SEQ,
                                blockwise_causal_attention,
                                blockwise_causal_attention_chunked,
                                blockwise_causal_prefix_attention,
+                               chunked_attention_min_seq,
                                compress_blocks)
 
 
@@ -127,7 +129,7 @@ def fused_linformer_attention(
     vbar: jax.Array,
     *,
     scale: float,
-    block_q: int = 256,
+    block_q: int = DEFAULT_BLOCK_Q,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Exact (bidirectional) Linformer attention through the Pallas kernel:
@@ -137,7 +139,10 @@ def fused_linformer_attention(
     Dh) with K ≤ MAX_EXACT_K so the whole compressed operand pins in VMEM
     (scores fp32, output in q's dtype). GQA kv heads are repeated to H for
     the compressed operands (cheap: K is small). Trainable — analytic custom
-    VJP (`_lin_bwd`); `block_q` shrinks to the largest divisor of S."""
+    VJP (`_lin_bwd`); `block_q` shrinks to the largest divisor of S.
+    `block_q` partitions the independent query rows only — output is
+    bit-identical across values; the plan layer passes the tuned value
+    (repro/tune/table.py)."""
     K = kbar.shape[1]
     if K > MAX_EXACT_K:
         raise ValueError(
@@ -181,14 +186,17 @@ def fused_seq_projection(
     x: jax.Array,        # (B, S, H, Dh)
     E: jax.Array,        # (S, K)
     *,
-    block_s: int = 512,
+    block_s: int = DEFAULT_BLOCK_S,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Fused sequence-axis projection out = Eᵀ·x: (B, S, H, Dh) × (S, K)
     → (B, K, H, Dh) — the paper's shared linear compression of K/V.
     Handles ONLY the shared 2-D E (per-head / conv / pool projections go
     through the reference ops; models/attention.py applies this rule).
-    Linear, so trainable with an analytic VJP."""
+    Linear, so trainable with an analytic VJP. `block_s` tiles the
+    reduction's sequence axis (a perf knob; it regroups the fp32
+    accumulation, so last-ulp output differences across values are
+    possible); the plan layer passes the tuned value."""
     out = _seq_projection_diff(_to_kernel_layout(x), E,
                                _divisor_block(x.shape[1], block_s),
                                _auto_interpret(interpret))
@@ -254,7 +262,7 @@ def _bca_bwd_reference(block_size, block_slots, scale, res, do):
     fused path exists to avoid)."""
     q, k, v, E, F = res
     ref_fn = (blockwise_causal_attention_chunked
-              if q.shape[1] >= CHUNKED_ATTENTION_MIN_SEQ
+              if q.shape[1] >= chunked_attention_min_seq()
               else blockwise_causal_attention)
     _, vjp = jax.vjp(
         lambda q_, k_, v_, E_, F_: ref_fn(

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import linformer as lin_lib
-from repro.core.causal import CHUNKED_ATTENTION_MIN_SEQ
+from repro.core.causal import chunked_attention_min_seq
 from repro.core.projections import effective_k
 from repro.models import attention as attn_lib
 from repro.models import layers as L
@@ -335,7 +335,7 @@ def forward(
     """
     x = embed_inputs(params, cfg, batch, ctx)
     B, S, _ = x.shape
-    chunked = S >= CHUNKED_ATTENTION_MIN_SEQ
+    chunked = S >= chunked_attention_min_seq()
     shared_lin = params.get("shared", {}).get("lin")
     single_pass = return_cache and cfg.single_pass_cache
     entry_spec = ({"max_seq": cache_max_seq or cfg.max_seq_len,
@@ -395,7 +395,7 @@ def build_cache_from_sequence(params, cfg, batch, *, max_seq, dtype, ctx):
     B, S, _ = x.shape
     shared_lin = params.get("shared", {}).get("lin")
     acfg = cfg.attention
-    chunked = S >= CHUNKED_ATTENTION_MIN_SEQ
+    chunked = S >= chunked_attention_min_seq()
 
     def body(carry, lp):
         h, _ = carry

@@ -70,6 +70,17 @@ from repro.parallel.sharding import ParallelCtx, shard_map as _shard_map
 DECLARED_AXES = frozenset({"data", "model", "seq", "pod"})
 
 
+def _tuned_exact_blocks(q: jax.Array, slots: int) -> Tuple[int, int]:
+    """Trace-time tuning-table lookup for the exact form's grid knobs
+    (block_q, block_s), keyed on the LOCAL (per-shard) shapes the kernels
+    actually launch with. Falls back to kernels/common.py defaults on any
+    table miss; shapes are static Python ints so this never traces."""
+    from repro.tune import table as tuning
+    kw = dict(seq=q.shape[1], slots=slots, heads=q.shape[2],
+              dtype=str(q.dtype))
+    return tuning.block_q_for(**kw), tuning.block_s_for(**kw)
+
+
 @dataclasses.dataclass(frozen=True)
 class AttentionPlan:
     """Resolved execution plan for every attention form of one config on one
@@ -207,12 +218,15 @@ class AttentionPlan:
             F = F[:S] if F.shape[0] != S else F
         if not self.manual or not linear_shared:
             if linear_shared:
-                kbar = kernel_ops.fused_seq_projection(k, E)
-                vbar = kernel_ops.fused_seq_projection(v, F)
+                block_q, block_s = _tuned_exact_blocks(q, E.shape[-1])
+                kbar = kernel_ops.fused_seq_projection(k, E, block_s=block_s)
+                vbar = kernel_ops.fused_seq_projection(v, F, block_s=block_s)
             else:
                 kbar, vbar = lin_lib.project_kv(k, v, E, F, kind=projection)
+                block_q, _ = _tuned_exact_blocks(q, kbar.shape[1])
             return kernel_ops.fused_linformer_attention(q, kbar, vbar,
-                                                        scale=scale)
+                                                        scale=scale,
+                                                        block_q=block_q)
         B = q.shape[0]
         sp_axis = self.sp_axis if (self.sp > 1 and S % self.sp == 0) else None
         b = self._batch_axes(B)
@@ -222,10 +236,14 @@ class AttentionPlan:
 
         def body(q_l, k_l, v_l, E_l, F_l):
             if sp_axis is None:
-                kbar = kernel_ops.fused_seq_projection(k_l, E_l)
-                vbar = kernel_ops.fused_seq_projection(v_l, F_l)
+                block_q, block_s = _tuned_exact_blocks(q_l, E_l.shape[-1])
+                kbar = kernel_ops.fused_seq_projection(k_l, E_l,
+                                                       block_s=block_s)
+                vbar = kernel_ops.fused_seq_projection(v_l, F_l,
+                                                       block_s=block_s)
                 return kernel_ops.fused_linformer_attention(q_l, kbar, vbar,
-                                                            scale=scale)
+                                                            scale=scale,
+                                                            block_q=block_q)
             return sp_lib.sp_exact_linformer_attention(
                 q_l, k_l, v_l, E_l, F_l, seq_axis=sp_axis, scale=scale,
                 fused=True)

@@ -78,6 +78,12 @@ from repro.telemetry import as_telemetry, plan_attribution
 # rows reach it only through their page-table indirection).
 PAGED_ARENA_KEYS = ("page_k", "page_v", "page_k_s", "page_v_s")
 
+# Hand-picked decode-scan chunk length — the fallback the tuning table's
+# platform-wide "decode_chunk" scalar overrides (repro/tune/table.py).
+# Chunk length changes tick granularity (scheduling interleave), never
+# per-request token streams — the decode-chunk-invariance contract.
+DEFAULT_DECODE_CHUNK = 32
+
 
 def bucket_requests(prompts: Sequence[Sequence[int]], max_batch: int
                     ) -> List[List[int]]:
@@ -113,7 +119,7 @@ class ServingEngine:
         ctx: Optional[ParallelCtx] = None,
         cache_dtype=jnp.bfloat16,
         temperature: float = 0.0,
-        decode_chunk: int = 32,
+        decode_chunk: Optional[int] = None,
         attention_backend: Optional[str] = None,
         prefill_chunk: int = 0,
         cache_format: str = "dense",
@@ -135,6 +141,10 @@ class ServingEngine:
         self.ctx = ctx
         self.cache_dtype = cache_dtype
         self.temperature = temperature
+        if decode_chunk is None:
+            from repro.tune import table as tuning
+            decode_chunk = tuning.scalar("decode_chunk",
+                                         DEFAULT_DECODE_CHUNK)
         self.decode_chunk = max(1, decode_chunk)
         # repro-lint: allow[RL002] constructor arg normalization — host int
         self.prefill_chunk = int(prefill_chunk)
@@ -260,6 +270,21 @@ class ServingEngine:
             self.telemetry.metrics.counter(
                 "serving_compile_cache_hit_total" if hit
                 else "serving_compile_cache_miss_total", fn=fn_name).inc()
+
+    def _note_table_stats(self, tel=None) -> None:
+        """Drain the tuning table's trace-time lookup counters into the
+        metrics registry (rides the compile-cache proxies above): how many
+        kernel-knob resolutions hit a committed TUNING.json entry vs fell
+        back to the hand-picked defaults since the last drain."""
+        tel = tel if tel is not None else self.telemetry
+        if not tel.enabled:
+            return
+        from repro.tune import table as tuning
+        stats = tuning.consume_stats()
+        for key, name in (("hits", "tuning_table_hit_total"),
+                          ("misses", "tuning_table_miss_total")):
+            if stats[key]:
+                tel.metrics.counter(name).inc(stats[key])
 
     def _sample(self, logits: jax.Array, rng) -> jax.Array:
         if self.temperature <= 0.0:
@@ -1008,6 +1033,7 @@ class ServingEngine:
         with tel.span("serve", cat="engine", n_requests=n,
                       max_batch=max_batch):
             results = sched.run(on_token=on_token, on_complete=on_complete)
+        self._note_table_stats(tel)
         outputs = [results[i] for i in range(n)]
         if return_scheduler:
             return outputs, sched

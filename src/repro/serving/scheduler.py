@@ -303,6 +303,20 @@ class SlotPool:
         self.cur = np.full((max_batch,), EOS, np.int32)
         self.finished = np.ones((max_batch,), bool)
         self.slots: List[Optional[_Slot]] = [None] * max_batch
+        # Scheduler-round fast path (the warm-wall gap is round-dominated,
+        # not scatter-dominated — docs/serving.md): the chunk scan's cur/
+        # finished OUTPUTS are kept device-resident and fed straight back
+        # into the next chunk, skipping two host->device uploads per round.
+        # Any host-side row mutation (admit/activate/retire/restore/
+        # begin_prefill) marks them dirty, and the next chunk re-uploads
+        # the authoritative host mirrors — so the math is byte-identical
+        # to re-uploading every round.
+        self._cur_dev: Optional[jax.Array] = None
+        self._fin_dev: Optional[jax.Array] = None
+        self._rows_dirty = True
+        # resolved jitted chunk callables, cached per scan length: avoids
+        # re-resolving (and re-counting) through the engine every round
+        self._chunk_fns: Dict[int, Callable] = {}
         # Paged pool (engine.cache_format == "paged"): the pool owns the
         # page allocator alongside the cache — every page the device table
         # references was handed out here, and every freed page is zeroed
@@ -371,6 +385,7 @@ class SlotPool:
                                                      row)
         self.cur[row] = first_token
         self.finished[row] = False
+        self._rows_dirty = True
         self.slots[row] = _Slot(request=request, emitted=[], state=DECODING,
                                 filled=len(request.tokens))
 
@@ -382,6 +397,7 @@ class SlotPool:
         self.cache = self.engine.reset_pool_row(self.cache, row)
         self.cur[row] = EOS
         self.finished[row] = True
+        self._rows_dirty = True
         self.slots[row] = _Slot(request=request, emitted=[],
                                 state=PREFILLING, filled=0)
 
@@ -434,6 +450,7 @@ class SlotPool:
             self.cache = self.engine.restore_pool_rows(self.cache, sub, row)
         self.cur[row] = snap.cur
         self.finished[row] = snap.finished
+        self._rows_dirty = True
         self.slots[row] = _Slot(request=request, emitted=list(snap.emitted),
                                 state=snap.state, filled=snap.filled)
 
@@ -514,6 +531,7 @@ class SlotPool:
         """Prefill complete: the row joins the decoding pool next chunk."""
         self.cur[row] = first_token
         self.finished[row] = False
+        self._rows_dirty = True
         self.slots[row].state = DECODING
 
     def retire(self, row: int) -> None:
@@ -526,17 +544,33 @@ class SlotPool:
         self.slots[row] = None
         self.cur[row] = EOS
         self.finished[row] = True
+        self._rows_dirty = True
 
     def decode_chunk(self, n: int, rng: jax.Array
                      ) -> Tuple[np.ndarray, np.ndarray, jax.Array]:
         """Run one n-step device-resident decode chunk over the pool.
         Returns (tokens (max_batch, n), bad (max_batch,) non-finite-logits
         flags, next rng). The chunk scan donates the pool cache; the
-        returned cache replaces it atomically."""
-        toks, cur, finished, bad, cache, rng = self.engine.pool_chunk_fn(n)(
-            self.engine.params, jnp.asarray(self.cur),
-            jnp.asarray(self.finished), self.cache, rng)
+        returned cache replaces it atomically.
+
+        Fast path: between rounds with no row mutation the previous
+        chunk's device-resident cur/finished feed the next chunk directly
+        (no host->device upload); the host mirrors are still refreshed at
+        the chunk's one sync, so scheduler bookkeeping sees exactly the
+        values it always did."""
+        fn = self._chunk_fns.get(n)
+        if fn is None:
+            fn = self.engine.pool_chunk_fn(n)
+            self._chunk_fns[n] = fn
+        if self._rows_dirty or self._cur_dev is None:
+            self._cur_dev = jnp.asarray(self.cur)
+            self._fin_dev = jnp.asarray(self.finished)
+        toks, cur, finished, bad, cache, rng = fn(
+            self.engine.params, self._cur_dev, self._fin_dev,
+            self.cache, rng)
         self.cache = cache
+        self._cur_dev, self._fin_dev = cur, finished
+        self._rows_dirty = False
         # repro-lint: allow[RL002] host mirror; rides the chunk sync
         self.cur = np.array(cur)
         # repro-lint: allow[RL002] host mirror; rides the chunk sync
@@ -586,6 +620,9 @@ class Scheduler:
         #                                      mark (a requeued request must
         #                                      not re-stream tokens)
         self._seq = 0
+        self._page_stats_last = None  # last published page-gauge tuple:
+        #                               the per-round refresh is skipped
+        #                               when nothing allocated or freed
 
     def submit(self, request: Request) -> None:
         """Queue a request. With `max_queue` set, submitting past the bound
@@ -1028,18 +1065,26 @@ class Scheduler:
             self._ensure_decode_pages(chunk)
             if self.pool.paged:
                 # page-occupancy gauge + allocation/quant-error telemetry,
-                # refreshed every scheduler round
-                reg = self.stats.registry
-                reg.gauge("serving_pages_in_use").set(
-                    self.pool.alloc.used_pages)
-                reg.gauge("serving_pages_free").set(
-                    self.pool.alloc.free_pages)
-                reg.counter("serving_pages_allocated_total").value = \
-                    float(self.pool.pages_allocated)
-                reg.counter("serving_pages_freed_total").value = \
-                    float(self.pool.pages_freed)
-                reg.counter("serving_quant_error_bound_sum").value = \
-                    float(self.pool.quant_error_bound)
+                # refreshed when the allocator state changed since the
+                # last publish (steady-state decode rounds skip it — part
+                # of the scheduler-round fast path)
+                page_stats = (self.pool.alloc.used_pages,
+                              self.pool.pages_allocated,
+                              self.pool.pages_freed,
+                              self.pool.quant_error_bound)
+                if page_stats != self._page_stats_last:
+                    self._page_stats_last = page_stats
+                    reg = self.stats.registry
+                    reg.gauge("serving_pages_in_use").set(
+                        self.pool.alloc.used_pages)
+                    reg.gauge("serving_pages_free").set(
+                        self.pool.alloc.free_pages)
+                    reg.counter("serving_pages_allocated_total").value = \
+                        float(self.pool.pages_allocated)
+                    reg.counter("serving_pages_freed_total").value = \
+                        float(self.pool.pages_freed)
+                    reg.counter("serving_quant_error_bound_sum").value = \
+                        float(self.pool.quant_error_bound)
             decoding = self.pool.decoding_count
             if not decoding:
                 # nothing decodable yet (pool empty, or every occupied slot

@@ -1,0 +1,16 @@
+"""Benchmark-driven kernel/scheduler autotuning.
+
+`table.py` is the runtime side: the persistent `TUNING.json` tuning
+table (shape-bucketed winners per platform and attention form) consulted
+by the plan layer (`parallel/plan.py`), the chunked-attention threshold
+(`core/causal.py`), and the serving engine's decode-chunk default — all
+at trace/construction time, with a safe fallback to the hand-picked
+defaults in `kernels/common.py` when no entry matches.
+
+`autotune.py` is the offline side: the sweep that times the real fused
+entry points (`kernels/ops.py`) and regenerates the table
+(`python -m benchmarks.autotune`). See docs/kernels.md §Autotuner.
+"""
+from repro.tune.table import (TuningTable, clear_table_cache,  # noqa: F401
+                              consume_stats, get_table, next_pow2,
+                              override, shape_bucket, validate_doc)

@@ -1,0 +1,383 @@
+"""Benchmark-driven sweep that regenerates the tuning table.
+
+Times the REAL entry points — `kernels/ops.py` fused wrappers for the
+kernel grid knobs, a live `ServingEngine.serve` loop for the scheduler
+scalars — with warmup + median-of-k per candidate, a telemetry span per
+trial (``autotune_trial``) and an ``autotune_trials_total`` counter, and
+persists winners to `TUNING.json` via `tune.table`. Run offline through
+the CLI (``python -m benchmarks.autotune [--smoke]``); never imported on
+the serving/training hot path.
+
+Search space (docs/kernels.md §Autotuner):
+
+* **exact** (per shape bucket): ``block_s`` for the fused sequence
+  projection, then ``block_q`` for the fused attention at the winning
+  ``block_s`` — one-pass coordinate descent over divisor-deduped
+  candidates, the hand-picked default combo always among the timed
+  candidates so ``default_us`` is measured, not assumed.
+* **causal_chunked** (per seq bucket): ``q_chunk_blocks`` over the
+  divisors of the block count.
+* **scalars** (platform-wide): ``decode_chunk`` and ``prefill_chunk``
+  timed through real `ServingEngine.serve` runs (per generated token;
+  KNEE winner — the smallest candidate within 10% of the best — so the
+  scheduler's tick granularity is never coarsened for a noise-level
+  win), and ``chunked_min_seq`` as the smallest probed S where the
+  memory-bounded chunked reference beats the plain form (full mode
+  only; smoke keeps the default).
+
+Determinism: candidate order is fixed, the winner is the FIRST minimal
+candidate (`min` is stable), and every timing call routes through one
+`_measure(label, fn)` choke point whose `timer` argument tests replace
+with a fixed injector — same injected times, same table, bit for bit.
+Trial labels are stable strings, e.g.
+``exact/S2048_K128_H4_float32/bq256_bs512``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import causal as causal_lib
+from repro.kernels import common as kcommon
+from repro.kernels import ops as kernel_ops
+from repro.telemetry import as_telemetry
+from repro.tune.table import TuningTable, shape_bucket
+
+# Candidate grids. Values are divisor-deduped per shape before timing
+# (divisor_block collapses e.g. 512 and 1024 on S=256), so the trial
+# count adapts to the shape instead of re-timing identical grids.
+BQ_CANDIDATES = (64, 128, 256, 512)
+BS_CANDIDATES = (128, 256, 512, 1024)
+QCB_CANDIDATES = (1, 2, 4, 8, 16)
+DECODE_CHUNK_CANDIDATES = {"smoke": (4, 8, 32), "full": (8, 16, 32, 64)}
+PREFILL_CHUNK_MULTS = {"smoke": (2, 4), "full": (4, 8, 16)}
+MIN_SEQ_PROBES = (2048, 4096, 8192)   # full mode only
+
+# A scalar winner must beat the next-larger candidate by more than this
+# before the scheduler's tick granularity is refined for it: decode /
+# prefill chunk lengths trade host-round overhead against scheduling
+# granularity, so noise-level wins keep the coarser (cheaper) setting.
+KNEE_TOLERANCE = 1.10
+
+# exact-form sweep shapes (S, K, H, Hkv, Dh) fp32 — full mode covers the
+# committed train-step exact leg's bucket (benchmarks/train_step.py)
+EXACT_SHAPES = {
+    "smoke": ((256, 64, 2, 2, 8),),
+    "full": ((2048, 128, 4, 2, 16), (512, 64, 4, 2, 16)),
+}
+# causal_chunked sweep shapes (S, c, r, H, Hkv, Dh)
+CAUSAL_SHAPES = {
+    "smoke": ((512, 64, 8, 2, 2, 16),),
+    "full": ((8192, 64, 8, 2, 2, 16),),
+}
+
+Timer = Callable[[str], float]
+
+
+def _block(x) -> None:
+    try:
+        jax.block_until_ready(x)
+    except (TypeError, ValueError):
+        pass                           # host-side results (token lists)
+
+
+def _measure(label: str, fn: Callable[[], object], *, warmup: int,
+             iters: int, tel, timer: Optional[Timer]) -> float:
+    """Median wall µs of `fn()` after `warmup` calls — or the injected
+    `timer(label)` when tests replace real timing. One telemetry span +
+    one `autotune_trials_total` increment per trial either way."""
+    tel.metrics.counter("autotune_trials_total").inc()
+    if timer is not None:
+        return float(timer(label))
+    with tel.span("autotune_trial", cat="autotune", label=label,
+                  iters=iters):
+        for _ in range(warmup):
+            _block(fn())
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            _block(fn())
+            times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def _dedup_divisors(size: int, candidates: Sequence[int],
+                    default: int) -> List[int]:
+    """Effective (divisor-resolved) candidate blocks for `size`, default
+    included, ascending — the order ties are broken in."""
+    eff = {kcommon.divisor_block(size, c) for c in candidates}
+    eff.add(kcommon.divisor_block(size, default))
+    return sorted(eff)
+
+
+def _knee(results: Sequence[Tuple[int, float]],
+          tol: float = KNEE_TOLERANCE) -> Tuple[int, float]:
+    """(candidate, µs) of the SMALLEST candidate within `tol` of the
+    best — candidates arrive smallest-first."""
+    best_us = min(us for _, us in results)
+    for cand, us in results:
+        if us <= tol * best_us:
+            return cand, us
+    return results[-1]
+
+
+# ---------------------------------------------------------------------------
+# exact form: block_s (fused_seq_projection) × block_q (fused attention)
+# ---------------------------------------------------------------------------
+
+
+def tune_exact(table: TuningTable, *, shapes: Sequence[Tuple[int, ...]],
+               warmup: int = 1, iters: int = 3, telemetry=None,
+               timer: Optional[Timer] = None,
+               platform: Optional[str] = None) -> None:
+    """Sweep the exact bidirectional form's grid knobs per shape and add
+    one entry per shape bucket. One-pass coordinate descent: block_s at
+    the default block_q, then block_q at the winning block_s."""
+    tel = as_telemetry(telemetry)
+    platform = platform or jax.default_backend()
+    for (S, K, H, Hkv, Dh) in shapes:
+        key = jax.random.PRNGKey(0)
+        kq, kk, kv, ke, kf = jax.random.split(key, 5)
+        q = jax.random.normal(kq, (1, S, H, Dh), jnp.float32)
+        k = jax.random.normal(kk, (1, S, Hkv, Dh), jnp.float32)
+        v = jax.random.normal(kv, (1, S, Hkv, Dh), jnp.float32)
+        E = jax.random.normal(ke, (S, K), jnp.float32) / np.sqrt(S)
+        F = jax.random.normal(kf, (S, K), jnp.float32) / np.sqrt(S)
+        tag = f"exact/S{S}_K{K}_H{H}_float32"
+
+        def timed(bq: int, bs: int) -> float:
+            fn = jax.jit(lambda q_, k_, v_, E_, F_: (
+                kernel_ops.fused_linformer_attention(
+                    q_,
+                    kernel_ops.fused_seq_projection(k_, E_, block_s=bs),
+                    kernel_ops.fused_seq_projection(v_, F_, block_s=bs),
+                    scale=Dh ** -0.5, block_q=bq)))
+            return _measure(f"{tag}/bq{bq}_bs{bs}",
+                            lambda: fn(q, k, v, E, F), warmup=warmup,
+                            iters=iters, tel=tel, timer=timer)
+
+        bq0 = kcommon.divisor_block(S, kcommon.DEFAULT_BLOCK_Q)
+        bs0 = kcommon.divisor_block(S, kcommon.DEFAULT_BLOCK_S)
+        combos = [((bq0, bs), timed(bq0, bs))
+                  for bs in _dedup_divisors(S, BS_CANDIDATES,
+                                            kcommon.DEFAULT_BLOCK_S)]
+        best_bs = min(combos, key=lambda r: r[1])[0][1]
+        combos += [((bq, best_bs), timed(bq, best_bs))
+                   for bq in _dedup_divisors(S, BQ_CANDIDATES,
+                                             kcommon.DEFAULT_BLOCK_Q)]
+        # winner over EVERY timed combo — the default (bq0, bs0) is in the
+        # first pass, so trial_us can never regress below default_us just
+        # because the second pass re-timed a noisier round
+        (best_bq, best_bs), trial_us = min(combos, key=lambda r: r[1])
+        default_us = dict(combos)[(bq0, bs0)]
+        table.add(platform=platform, form="exact",
+                  bucket=shape_bucket(seq=S, slots=K, heads=H,
+                                      dtype="float32"),
+                  params={"block_q": int(best_bq), "block_s": int(best_bs)},
+                  trial_us=trial_us, default_us=default_us, trials=iters)
+
+
+# ---------------------------------------------------------------------------
+# causal_chunked form: q_chunk_blocks for the memory-bounded reference
+# ---------------------------------------------------------------------------
+
+
+def tune_causal_chunked(table: TuningTable, *,
+                        shapes: Sequence[Tuple[int, ...]],
+                        warmup: int = 1, iters: int = 3, telemetry=None,
+                        timer: Optional[Timer] = None,
+                        platform: Optional[str] = None) -> None:
+    """Sweep the chunked reference form's lax.map granularity per seq
+    bucket (candidates restricted to divisors of the block count — a
+    non-divisor silently degrades to 1 chunk inside the kernel)."""
+    tel = as_telemetry(telemetry)
+    platform = platform or jax.default_backend()
+    for (S, c, r, H, Hkv, Dh) in shapes:
+        nb = S // c
+        cands = [n for n in QCB_CANDIDATES if nb % n == 0]
+        default = kcommon.DEFAULT_Q_CHUNK_BLOCKS if \
+            nb % kcommon.DEFAULT_Q_CHUNK_BLOCKS == 0 else 1
+        if default not in cands:
+            cands.append(default)
+        key = jax.random.PRNGKey(1)
+        kq, kk, kv, ke, kf = jax.random.split(key, 5)
+        q = jax.random.normal(kq, (1, S, H, Dh), jnp.float32)
+        k = jax.random.normal(kk, (1, S, Hkv, Dh), jnp.float32)
+        v = jax.random.normal(kv, (1, S, Hkv, Dh), jnp.float32)
+        E = jax.random.normal(ke, (c, r), jnp.float32) / np.sqrt(c)
+        F = jax.random.normal(kf, (c, r), jnp.float32) / np.sqrt(c)
+        tag = f"causal_chunked/S{S}_c{c}_r{r}"
+
+        def timed(n: int) -> float:
+            fn = jax.jit(lambda q_, k_, v_, E_, F_:
+                         causal_lib.blockwise_causal_attention_chunked(
+                             q_, k_, v_, E_, F_, block_size=c,
+                             q_chunk_blocks=n))
+            return _measure(f"{tag}/qcb{n}", lambda: fn(q, k, v, E, F),
+                            warmup=warmup, iters=iters, tel=tel,
+                            timer=timer)
+
+        results = [(n, timed(n)) for n in sorted(cands)]
+        best, trial_us = min(results, key=lambda r: r[1])
+        default_us = dict(results)[default]
+        table.add(platform=platform, form="causal_chunked",
+                  bucket=shape_bucket(seq=S),
+                  params={"q_chunk_blocks": int(best)},
+                  trial_us=trial_us, default_us=default_us, trials=iters)
+
+
+# ---------------------------------------------------------------------------
+# scalars: decode_chunk / prefill_chunk (live serve loops), chunked_min_seq
+# ---------------------------------------------------------------------------
+
+
+def _serving_setup(max_seq: int, *, block: int = 8, backend: str = "auto"):
+    """A tiny linformer_causal model for the scheduler-scalar sweeps —
+    the serving benchmarks' smoke shape, built here so the sweep never
+    imports from benchmarks/."""
+    from repro.configs.base import (AttentionConfig, LinformerConfig,
+                                    ModelConfig)
+    from repro.models import model as model_lib
+    cfg = ModelConfig(
+        name="autotune-serving", num_layers=2, d_model=64, vocab_size=512,
+        max_seq_len=max_seq,
+        attention=AttentionConfig(
+            kind="linformer_causal", backend=backend, num_heads=4,
+            num_kv_heads=2, head_dim=16,
+            linformer=LinformerConfig(block_size=block, block_slots=4)),
+        dtype="float32", remat="none")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def tune_scalars(table: TuningTable, *, mode: str = "full",
+                 warmup: int = 1, iters: int = 3, telemetry=None,
+                 timer: Optional[Timer] = None,
+                 platform: Optional[str] = None) -> None:
+    """Sweep the platform-wide scheduler scalars through REAL serve
+    loops (µs per generated token) and add one combined scalars entry.
+    `prefill_chunk` is ADVISORY: 0 (monolithic admission) stays the
+    engine's semantic default — the recorded value is the best chunk
+    length when chunked admission is requested."""
+    from repro.serving.engine import DEFAULT_DECODE_CHUNK, ServingEngine
+    tel = as_telemetry(telemetry)
+    platform = platform or jax.default_backend()
+    quick = mode != "full"
+    rng = np.random.default_rng(0)
+    params_out: Dict[str, int] = {}
+
+    # -- decode_chunk: per-token serve wall over a short decode-heavy trace
+    n_req, budget, pool = (4, 12, 2) if quick else (8, 24, 4)
+    prompts = [list(rng.integers(4, 512, 16)) for _ in range(n_req)]
+    budgets = [budget] * n_req
+    max_seq = ((16 + budget + 64 + 7) // 8) * 8
+    cfg, mparams = _serving_setup(max_seq)
+    cands = DECODE_CHUNK_CANDIDATES["smoke" if quick else "full"]
+    cands = sorted(set(cands) | {DEFAULT_DECODE_CHUNK})
+    n_tok = float(sum(budgets))
+
+    def timed_decode(n: int) -> float:
+        eng = ServingEngine(mparams, cfg, max_seq=max_seq,
+                            cache_dtype=jnp.float32, decode_chunk=n)
+        return _measure(f"scalars/decode_chunk/{n}",
+                        lambda: eng.serve(prompts, budgets, max_batch=pool),
+                        warmup=warmup, iters=iters, tel=tel,
+                        timer=timer) / n_tok
+
+    dec_results = [(n, timed_decode(n)) for n in cands]
+    best_dc, trial_us = _knee(dec_results)
+    default_us = dict(dec_results)[DEFAULT_DECODE_CHUNK]
+    params_out["decode_chunk"] = int(best_dc)
+
+    # -- prefill_chunk: per-token serve wall, long prompts, chunked mode
+    block = 16
+    long_lens = (96, 112) if quick else (192, 224, 256)
+    p_budget = 4
+    p_prompts = [list(rng.integers(4, 512, L)) for L in long_lens]
+    p_budgets = [p_budget] * len(p_prompts)
+    p_cands = sorted(block * m for m in
+                     PREFILL_CHUNK_MULTS["smoke" if quick else "full"])
+    p_max = max(long_lens) + p_budget + max(p_cands)
+    p_max = ((p_max + max(p_cands) - 1) // max(p_cands)) * max(p_cands)
+    # reference backend, like the long_prompt bench: the scalar measures
+    # admission scheduling, not interpret-mode kernel overhead
+    p_cfg, p_params = _serving_setup(p_max, block=block,
+                                     backend="reference")
+    p_tok = float(sum(len(p) + b for p, b in zip(p_prompts, p_budgets)))
+
+    def timed_prefill(P: int) -> float:
+        eng = ServingEngine(p_params, p_cfg, max_seq=p_max,
+                            cache_dtype=jnp.float32, decode_chunk=4,
+                            prefill_chunk=P)
+        return _measure(f"scalars/prefill_chunk/{P}",
+                        lambda: eng.serve(p_prompts, p_budgets,
+                                          max_batch=2),
+                        warmup=warmup, iters=iters, tel=tel,
+                        timer=timer) / p_tok
+
+    pf_results = [(P, timed_prefill(P)) for P in p_cands]
+    best_pf, _ = _knee(pf_results)
+    params_out["prefill_chunk"] = int(best_pf)
+
+    # -- chunked_min_seq: smallest probed S where the chunked reference
+    # form beats the plain one (full mode only — the probes are the
+    # expensive part of the sweep, and smoke keeps the default anyway)
+    if not quick:
+        threshold = causal_lib.CHUNKED_ATTENTION_MIN_SEQ
+        c, r_, H, Hkv, Dh = 64, 8, 2, 2, 16
+        for S in MIN_SEQ_PROBES:
+            key = jax.random.PRNGKey(2)
+            kq, kk, kv, ke, kf = jax.random.split(key, 5)
+            q = jax.random.normal(kq, (1, S, H, Dh), jnp.float32)
+            k = jax.random.normal(kk, (1, S, Hkv, Dh), jnp.float32)
+            v = jax.random.normal(kv, (1, S, Hkv, Dh), jnp.float32)
+            E = jax.random.normal(ke, (c, r_), jnp.float32) / np.sqrt(c)
+            F = jax.random.normal(kf, (c, r_), jnp.float32) / np.sqrt(c)
+            plain = jax.jit(lambda *a: causal_lib.blockwise_causal_attention(
+                *a, block_size=c))
+            chunk = jax.jit(
+                lambda *a: causal_lib.blockwise_causal_attention_chunked(
+                    *a, block_size=c))
+            t_plain = _measure(f"scalars/chunked_min_seq/plain_S{S}",
+                               lambda: plain(q, k, v, E, F), warmup=warmup,
+                               iters=iters, tel=tel, timer=timer)
+            t_chunk = _measure(f"scalars/chunked_min_seq/chunked_S{S}",
+                               lambda: chunk(q, k, v, E, F), warmup=warmup,
+                               iters=iters, tel=tel, timer=timer)
+            if t_chunk <= t_plain:
+                threshold = min(threshold, S)
+                break
+        params_out["chunked_min_seq"] = int(threshold)
+
+    table.add(platform=platform, form="scalars", bucket=None,
+              params=params_out, trial_us=trial_us, default_us=default_us,
+              trials=iters)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def build_table(mode: str = "full", *, telemetry=None,
+                timer: Optional[Timer] = None,
+                platform: Optional[str] = None) -> TuningTable:
+    """Run the full sweep and return the resulting table (not yet
+    saved). mode: "full" | "smoke" — smoke shrinks shapes/candidates to
+    gate-speed and skips the chunked_min_seq probes."""
+    quick = mode != "full"
+    iters = 3 if quick else 5
+    table = TuningTable(meta={"generated_by": "benchmarks.autotune",
+                              "mode": mode})
+    kw = dict(warmup=1, iters=iters, telemetry=telemetry, timer=timer,
+              platform=platform)
+    tune_exact(table, shapes=EXACT_SHAPES["smoke" if quick else "full"],
+               **kw)
+    tune_causal_chunked(
+        table, shapes=CAUSAL_SHAPES["smoke" if quick else "full"], **kw)
+    tune_scalars(table, mode=mode, **kw)
+    return table

@@ -1,0 +1,352 @@
+"""Autotuner + tuning table: file round-trip through the attention
+plan's resolution, bucket boundaries, corrupt/missing-table fallback,
+winner determinism under an injected timer, serving byte-parity
+tuned-vs-default, lookup-stats telemetry drain, and the check_tuning
+CLI legs."""
+import json
+import os
+import subprocess
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionConfig, LinformerConfig, ModelConfig
+from repro.kernels import common as kcommon
+from repro.kernels import ops as kernel_ops
+from repro.models import model as M
+from repro.parallel.plan import AttentionPlan
+from repro.serving import ServingEngine
+from repro.tune import autotune as autotune_lib
+from repro.tune import table as tuning
+from repro.tune.table import (TuningTable, clear_table_cache, consume_stats,
+                              next_pow2, override, shape_bucket)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PLATFORM = jax.default_backend()
+
+
+@pytest.fixture(autouse=True)
+def _fresh_table_state():
+    """Every test starts from an unresolved module table and clean
+    counters, and cannot leak its table (or stats) into the next."""
+    clear_table_cache()
+    consume_stats()
+    yield
+    clear_table_cache()
+    consume_stats()
+
+
+def _exact_table(bq, bs, *, seq, slots, heads):
+    t = TuningTable()
+    t.add(platform=PLATFORM, form="exact",
+          bucket=shape_bucket(seq=seq, slots=slots, heads=heads,
+                              dtype="float32"),
+          params={"block_q": bq, "block_s": bs},
+          trial_us=1.0, default_us=2.0, trials=1)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# file round-trip -> the attention plan launches with the tuned blocks
+# ---------------------------------------------------------------------------
+
+
+class TestPlanResolution:
+    def test_saved_table_reaches_the_fused_call_site(self, tmp_path,
+                                                     monkeypatch):
+        """save -> REPRO_TUNING_PATH -> plan.exact_attention: the kernels
+        must be launched with the tuned block_q/block_s, through the real
+        file + env-var path (not an in-process override)."""
+        path = tmp_path / "TUNING.json"
+        _exact_table(32, 16, seq=64, slots=16, heads=4).save(str(path))
+        monkeypatch.setenv(tuning.ENV_PATH, str(path))
+        clear_table_cache()
+        seen = {}
+        real_attn = kernel_ops.fused_linformer_attention
+        real_proj = kernel_ops.fused_seq_projection
+
+        def spy_attn(q, kbar, vbar, **kw):
+            seen["block_q"] = kw.get("block_q")
+            return real_attn(q, kbar, vbar, **kw)
+
+        def spy_proj(x, E, **kw):
+            seen["block_s"] = kw.get("block_s")
+            return real_proj(x, E, **kw)
+
+        monkeypatch.setattr(kernel_ops, "fused_linformer_attention",
+                            spy_attn)
+        monkeypatch.setattr(kernel_ops, "fused_seq_projection", spy_proj)
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (1, 64, 4, 8), jnp.float32)
+        k = jax.random.normal(key, (1, 64, 4, 8), jnp.float32)
+        v = jax.random.normal(key, (1, 64, 4, 8), jnp.float32)
+        E = jax.random.normal(key, (64, 16), jnp.float32) / 8.0
+        plan = AttentionPlan(backend="fused")
+        out = plan.exact_attention(q, k, v, E, E, projection="linear",
+                                   scale=8 ** -0.5)
+        assert out.shape == (1, 64, 4, 8)
+        assert seen == {"block_q": 32, "block_s": 16}
+
+    def test_default_blocks_without_a_table(self):
+        with override(TuningTable()):
+            kw = dict(seq=64, slots=16, heads=4, dtype="float32")
+            assert tuning.block_q_for(**kw) == kcommon.DEFAULT_BLOCK_Q
+            assert tuning.block_s_for(**kw) == kcommon.DEFAULT_BLOCK_S
+            assert tuning.q_chunk_blocks_for(seq=64) == \
+                kcommon.DEFAULT_Q_CHUNK_BLOCKS
+
+    def test_block_q_is_bitwise_invariant(self):
+        """The contract RL006 + the tuner rely on: block_q partitions
+        independent query rows, so ANY tuned value is byte-identical."""
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (2, 64, 4, 8), jnp.float32)
+        kbar = jax.random.normal(key, (2, 16, 4, 8), jnp.float32)
+        vbar = jax.random.normal(key, (2, 16, 4, 8), jnp.float32)
+        outs = [np.asarray(kernel_ops.fused_linformer_attention(
+                    q, kbar, vbar, scale=0.5, block_q=bq))
+                for bq in (8, 32, 64)]
+        assert all(np.array_equal(outs[0], o) for o in outs[1:])
+
+
+# ---------------------------------------------------------------------------
+# bucket boundaries
+# ---------------------------------------------------------------------------
+
+
+class TestBuckets:
+    def test_next_pow2_boundaries(self):
+        assert [next_pow2(n) for n in (511, 512, 513)] == [512, 512, 1024]
+
+    def test_lookup_across_the_pow2_boundary(self):
+        t = TuningTable()
+        t.add(platform=PLATFORM, form="exact", bucket={"seq": 512},
+              params={"block_q": 32}, trial_us=1.0, default_us=2.0,
+              trials=1)
+        with override(t):
+            kw = dict(slots=16, heads=4, dtype="float32")
+            assert tuning.block_q_for(seq=511, **kw) == 32
+            assert tuning.block_q_for(seq=512, **kw) == 32
+            # 513 buckets to 1024 — no entry, hand-picked default
+            assert tuning.block_q_for(seq=513, **kw) == \
+                kcommon.DEFAULT_BLOCK_Q
+
+    def test_most_specific_bucket_wins(self):
+        t = TuningTable()
+        t.add(platform=PLATFORM, form="exact", bucket={"seq": 512},
+              params={"block_q": 32}, trial_us=1.0, default_us=1.0,
+              trials=1)
+        t.add(platform=PLATFORM, form="exact",
+              bucket={"seq": 512, "heads": 8},
+              params={"block_q": 64}, trial_us=1.0, default_us=1.0,
+              trials=1)
+        with override(t):
+            kw = dict(seq=512, slots=16, dtype="float32")
+            assert tuning.block_q_for(heads=8, **kw) == 64
+            assert tuning.block_q_for(heads=4, **kw) == 32
+
+
+# ---------------------------------------------------------------------------
+# corrupt / missing table -> silent fallback to defaults
+# ---------------------------------------------------------------------------
+
+
+class TestFallback:
+    def _assert_defaults(self):
+        kw = dict(seq=64, slots=16, heads=4, dtype="float32")
+        assert tuning.block_q_for(**kw) == kcommon.DEFAULT_BLOCK_Q
+        assert tuning.scalar("decode_chunk", 32) == 32
+
+    def test_missing_file(self, monkeypatch):
+        monkeypatch.setenv(tuning.ENV_PATH, "/nonexistent/TUNING.json")
+        clear_table_cache()
+        self._assert_defaults()
+
+    def test_unparseable_json(self, tmp_path, monkeypatch):
+        p = tmp_path / "TUNING.json"
+        p.write_text("{this is not json")
+        monkeypatch.setenv(tuning.ENV_PATH, str(p))
+        clear_table_cache()
+        self._assert_defaults()
+
+    def test_schema_invalid_doc(self, tmp_path, monkeypatch):
+        p = tmp_path / "TUNING.json"
+        p.write_text(json.dumps({
+            "version": 1,
+            "entries": [{"platform": PLATFORM, "form": "exact",
+                         "bucket": {"seq": 64},
+                         "params": {"block_q": 0},   # < 1: invalid
+                         "trial_us": 1.0, "default_us": 1.0,
+                         "speedup": 1.0, "trials": 1}]}))
+        monkeypatch.setenv(tuning.ENV_PATH, str(p))
+        clear_table_cache()
+        self._assert_defaults()
+
+    def test_misses_are_counted(self):
+        with override(TuningTable()):
+            consume_stats()
+            tuning.block_q_for(seq=64, slots=16, heads=4, dtype="float32")
+            assert consume_stats()["misses"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# winner determinism with an injected timer (no real timing, no noise)
+# ---------------------------------------------------------------------------
+
+
+def _fake_timer(label):
+    """bq64_bs128 is the global winner; bs128 wins the first pass."""
+    if label.endswith("bq64_bs128"):
+        return 5.0
+    if label.endswith("_bs128"):
+        return 7.0
+    return 9.0
+
+
+class TestWinnerDeterminism:
+    def test_exact_sweep_is_deterministic(self):
+        tables = []
+        for _ in range(2):
+            t = TuningTable()
+            autotune_lib.tune_exact(t, shapes=[(256, 64, 2, 2, 8)],
+                                    iters=1, timer=_fake_timer)
+            tables.append(t)
+        assert tables[0].entries == tables[1].entries
+        (e,) = tables[0].entries
+        assert e["params"] == {"block_q": 64, "block_s": 128}
+        assert e["trial_us"] == 5.0
+        # default combo (bq 256, bs 256 after divisor clamp at S=256)
+        # was timed in the first pass at 9.0
+        assert e["default_us"] == 9.0
+        assert e["speedup"] == 1.8
+
+    def test_causal_sweep_picks_injected_winner(self):
+        timer = lambda label: 3.0 if label.endswith("qcb4") else 8.0
+        t = TuningTable()
+        autotune_lib.tune_causal_chunked(t, shapes=[(512, 64, 8, 2, 2, 16)],
+                                         iters=1, timer=timer)
+        (e,) = t.entries
+        assert e["params"] == {"q_chunk_blocks": 4}
+        assert e["bucket"] == {"seq": 512}
+
+    def test_trials_are_counted(self):
+        from repro.telemetry import Telemetry
+        tel = Telemetry()
+        t = TuningTable()
+        autotune_lib.tune_exact(t, shapes=[(256, 64, 2, 2, 8)], iters=1,
+                                telemetry=tel, timer=_fake_timer)
+        n = tel.metrics.counter("autotune_trials_total").value
+        # S=256: {128,256} x first pass + {64,128,256} second pass
+        assert n == 5
+
+
+# ---------------------------------------------------------------------------
+# serving byte-parity: tuned scalars must never change token streams
+# ---------------------------------------------------------------------------
+
+
+class TestServingParity:
+    def _cfg(self, max_seq=64):
+        return ModelConfig(
+            name="autotune-parity", num_layers=2, d_model=32,
+            vocab_size=256, max_seq_len=max_seq,
+            attention=AttentionConfig(
+                kind="linformer_causal", num_heads=4, num_kv_heads=2,
+                head_dim=8,
+                linformer=LinformerConfig(block_size=8, block_slots=4)),
+            dtype="float32", remat="none")
+
+    def test_tuned_decode_chunk_is_byte_identical(self):
+        """decode_chunk resolved from the table changes tick granularity
+        only (the decode-chunk-invariance contract): same prompts, same
+        greedy token streams, byte for byte."""
+        cfg = self._cfg()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(5)
+        prompts = [list(rng.integers(4, 256, 8)) for _ in range(3)]
+        budgets = [6, 4, 6]
+
+        def serve_with(table):
+            with override(table):
+                eng = ServingEngine(params, cfg, max_seq=64,
+                                    cache_dtype=jnp.float32)
+                assert eng.decode_chunk == (
+                    table.scalar("decode_chunk", 32)
+                    if table.entries else 32)
+                return eng.serve(prompts, budgets, max_batch=2)
+
+        tuned = TuningTable()
+        tuned.add(platform=PLATFORM, form="scalars", bucket=None,
+                  params={"decode_chunk": 2}, trial_us=1.0,
+                  default_us=1.0, trials=1)
+        assert serve_with(TuningTable()) == serve_with(tuned)
+
+
+# ---------------------------------------------------------------------------
+# lookup-stats drain (the engine's tuning_table_* counters)
+# ---------------------------------------------------------------------------
+
+
+class TestStatsDrain:
+    def test_note_table_stats_exports_counters(self):
+        from repro.telemetry import Telemetry
+        t = TuningTable()
+        t.add(platform=PLATFORM, form="scalars", bucket=None,
+              params={"decode_chunk": 8}, trial_us=1.0, default_us=1.0,
+              trials=1)
+        with override(t):
+            consume_stats()
+            assert tuning.scalar("decode_chunk", 32) == 8       # hit
+            tuning.block_q_for(seq=8, slots=8, heads=1,
+                               dtype="float32")                 # miss
+            tel = Telemetry()
+            host = types.SimpleNamespace(telemetry=tel)
+            ServingEngine._note_table_stats(host, tel)
+            assert tel.metrics.counter(
+                "tuning_table_hit_total").value == 1
+            assert tel.metrics.counter(
+                "tuning_table_miss_total").value == 1
+            # drained: a second call adds nothing
+            ServingEngine._note_table_stats(host, tel)
+            assert tel.metrics.counter(
+                "tuning_table_hit_total").value == 1
+
+
+# ---------------------------------------------------------------------------
+# check_tuning CLI (scripts/_checklib convention)
+# ---------------------------------------------------------------------------
+
+
+class TestCheckTuningCli:
+    def _run(self, *args):
+        return subprocess.run(
+            [sys.executable, os.path.join(ROOT, "scripts",
+                                          "check_tuning.py"), *args],
+            capture_output=True, text=True, cwd=ROOT)
+
+    def test_valid_table_exits_zero(self, tmp_path):
+        p = tmp_path / "t.json"
+        _exact_table(32, 16, seq=64, slots=16, heads=4).save(str(p))
+        r = self._run(str(p))
+        assert r.returncode == 0, r.stderr
+
+    def test_corrupt_table_exits_one_with_findings(self, tmp_path):
+        p = tmp_path / "t.json"
+        p.write_text('{"version": 99}')
+        r = self._run("--json", "-", str(p))
+        assert r.returncode == 1
+        doc = json.loads(r.stdout)
+        assert doc["check"] == "check_tuning" and not doc["ok"]
+        assert any("version" in f["msg"] for f in doc["findings"])
+
+    def test_missing_ok_skips_absent_tables(self, tmp_path):
+        p = tmp_path / "t.json"
+        _exact_table(32, 16, seq=64, slots=16, heads=4).save(str(p))
+        r = self._run("--missing-ok", str(tmp_path / "absent.json"),
+                      str(p))
+        assert r.returncode == 0, r.stderr
+        r2 = self._run(str(tmp_path / "absent.json"))
+        assert r2.returncode == 1

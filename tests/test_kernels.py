@@ -286,11 +286,18 @@ def test_blockwise_causal_bwd_residual_parity():
 
 
 def test_bca_chunked_threshold_single_source():
-    """The S ≥ 8192 chunked-reference threshold lives in ONE place."""
-    from repro.core.causal import CHUNKED_ATTENTION_MIN_SEQ
+    """The S ≥ 8192 chunked-reference threshold lives in ONE place — the
+    tuned accessor in core/causal.py that every consumer imports, falling
+    back to CHUNKED_ATTENTION_MIN_SEQ when the tuning table has no entry."""
+    from repro.core.causal import (CHUNKED_ATTENTION_MIN_SEQ,
+                                   chunked_attention_min_seq)
     from repro.models import transformer
+    from repro.tune.table import TuningTable, override
     assert ops.CHUNKED_ATTENTION_MIN_SEQ is CHUNKED_ATTENTION_MIN_SEQ
-    assert transformer.CHUNKED_ATTENTION_MIN_SEQ is CHUNKED_ATTENTION_MIN_SEQ
+    assert ops.chunked_attention_min_seq is chunked_attention_min_seq
+    assert transformer.chunked_attention_min_seq is chunked_attention_min_seq
+    with override(TuningTable()):
+        assert chunked_attention_min_seq() == CHUNKED_ATTENTION_MIN_SEQ
 
 
 @pytest.mark.slow

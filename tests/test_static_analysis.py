@@ -351,6 +351,64 @@ class TestRL005:
 
 
 # ---------------------------------------------------------------------------
+# RL006 — tuning discipline
+# ---------------------------------------------------------------------------
+
+
+class TestRL006:
+    def test_literal_block_q_at_fused_call_site(self):
+        res = lint({"src/repro/models/x.py": """\
+            from repro.kernels import ops
+            out = ops.fused_linformer_attention(q, k, v, scale=1.0,
+                                                block_q=128)
+            """})
+        assert rules_of(res) == ["RL006"]
+        assert "block_q=128" in res.findings[0].msg
+
+    def test_literal_q_chunk_blocks_at_chunked_call_site(self):
+        res = lint({"src/repro/models/x.py": """\
+            from repro.core.causal import blockwise_causal_attention_chunked
+            out = blockwise_causal_attention_chunked(
+                q, k, v, E, F, block_size=64, q_chunk_blocks=4)
+            """})
+        assert rules_of(res) == ["RL006"]
+
+    def test_variable_knob_is_clean(self):
+        res = lint({"src/repro/models/x.py": """\
+            from repro.kernels import ops
+            bq = resolve_somehow()
+            out = ops.fused_seq_projection(x, E, block_s=bq)
+            """})
+        assert res.findings == []
+
+    def test_literal_allowed_in_tune_and_common(self):
+        src = """\
+            from repro.kernels import ops
+            out = ops.fused_seq_projection(x, E, block_s=128)
+            """
+        for rel in ("src/repro/tune/autotune.py",
+                    "src/repro/kernels/common.py"):
+            assert lint({rel: src}).findings == []
+
+    def test_block_size_kwarg_is_not_a_tuned_knob(self):
+        # block_size is a MODEL hyperparameter (the causal form's c),
+        # not a kernel grid knob — literals there are fine anywhere
+        res = lint({"src/repro/models/x.py": """\
+            from repro.core.causal import blockwise_causal_attention_chunked
+            out = blockwise_causal_attention_chunked(
+                q, k, v, E, F, block_size=64)
+            """})
+        assert res.findings == []
+
+    def test_pragma_waives_rl006(self):
+        res = lint({"src/repro/models/x.py": """\
+            # repro-lint: allow[RL006] parity fixture pins the grid
+            out = fused_linformer_attention(q, k, v, scale=1.0, block_q=64)
+            """})
+        assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
 # Self-audit: the tree itself is clean, so the shipped baseline is empty
 # ---------------------------------------------------------------------------
 
